@@ -1,0 +1,27 @@
+# One function per paper table. Prints ``name,value,derived`` CSV.
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import paper
+
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,value,derived")
+    for fn in paper.ALL:
+        if only and only not in fn.__name__:
+            continue
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:                      # noqa: BLE001
+            print(f"{fn.__name__},ERROR,{type(e).__name__}: {e}")
+            continue
+        for name, value, derived in rows:
+            print(f"{name},{value},{derived}")
+        print(f"# {fn.__name__} took {time.time() - t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,53 @@
+"""Quickstart: build a Sinnamon index, stream inserts/deletes, search, and
+compare against the exact LinScan baseline.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core.engine import EngineSpec, SinnamonIndex
+from repro.core.linscan import LinScanIndex
+from repro.data import synth
+
+
+def main():
+    ds = synth.SparseDatasetSpec("demo", n=5_000, psi_doc=60, psi_query=24,
+                                 value_dist="gaussian")
+    n_docs = 2_000
+    idx, val = synth.make_corpus(seed=0, spec=ds, n_docs=n_docs, pad=96)
+    qi, qv = synth.make_queries(seed=1, spec=ds, n_queries=5, pad=48)
+
+    # --- Sinnamon: sketch size 2m = ψ_d (the paper's mid setting), h=1
+    spec = EngineSpec(n=ds.n, m=30, capacity=2_048, max_nnz=96, h=1)
+    index = SinnamonIndex(spec)
+    index.insert_many(list(range(n_docs)), idx, val)
+    print(f"indexed {index.size} docs; "
+          f"index bytes: {index.memory_bytes()}")
+
+    # --- exact baseline
+    exact = LinScanIndex(ds.n)
+    exact.insert_many(range(n_docs), idx, val)
+
+    for b in range(5):
+        ids, scores = index.search(qi[b], qv[b], k=10, kprime=100)
+        ids0, scores0 = exact.search(qi[b], qv[b], k=10)
+        recall = len(set(ids.tolist()) & set(ids0.tolist())) / 10
+        print(f"query {b}: recall@10={recall:.2f}  "
+              f"top1 sinnamon={ids[0]}({scores[0]:.3f}) "
+              f"exact={ids0[0]}({scores0[0]:.3f})")
+
+    # --- streaming: delete the current top-1, insert a replacement
+    victim = int(ids[0])
+    index.delete(victim)
+    ids2, _ = index.search(qi[4], qv[4], k=10, kprime=100)
+    print(f"after delete({victim}): still returned? {victim in ids2}")
+
+    new_idx = np.arange(0, 96, 2, dtype=np.int32)
+    new_val = np.ones(48, np.float32)
+    index.insert(999_999, new_idx, new_val)
+    print(f"inserted doc 999999; index size = {index.size}")
+
+
+if __name__ == "__main__":
+    main()

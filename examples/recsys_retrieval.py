@@ -1,0 +1,65 @@
+"""RecSys retrieval_cand: dense batched-dot MIPS vs the paper's Sinnamon
+engine over sparsified item vectors — the integration point between the
+assigned recsys architectures and the paper's technique.
+
+The item catalog is sparsified (top-t magnitude coordinates per item — a
+standard sparse-retrieval trick) and served by Sinnamon; recall is measured
+against the exact dense scores.
+
+    PYTHONPATH=src python examples/recsys_retrieval.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import EngineSpec, SinnamonIndex
+from repro.data import loaders
+from repro.models import recsys as rs
+
+
+def main():
+    cfg = rs.RecsysConfig(name="sasrec-demo", model="sasrec", embed_dim=50,
+                          n_blocks=2, n_heads=1, seq_len=50, n_items=20_000)
+    params = rs.init_params(jax.random.PRNGKey(0), cfg)
+    batch = jax.tree.map(jnp.asarray, loaders.recsys_batch(0, 0, 8, cfg))
+
+    # dense path: exact batched-dot MIPS
+    t0 = time.perf_counter()
+    scores = rs.retrieval_scores(params, batch, cfg)
+    top_dense = jax.lax.top_k(scores, 10)[1]
+    jax.block_until_ready(top_dense)
+    t_dense = time.perf_counter() - t0
+    print(f"dense MIPS over {cfg.n_items} items: {t_dense*1e3:.1f}ms")
+
+    # Sinnamon path over sparsified items: keep top-t coords per item
+    items = np.asarray(rs.item_embeddings(params, cfg))     # [V, D]
+    t = 16
+    order = np.argsort(-np.abs(items), axis=1)[:, :t]
+    spec = EngineSpec(n=cfg.embed_dim, m=8,
+                      capacity=((cfg.n_items + 31) // 32) * 32,
+                      max_nnz=t, h=1, value_dtype="float32")
+    index = SinnamonIndex(spec)
+    idx_b = np.sort(order, axis=1).astype(np.int32)
+    val_b = np.take_along_axis(items, idx_b, axis=1).astype(np.float32)
+    for lo in range(0, cfg.n_items, 4096):
+        hi = min(lo + 4096, cfg.n_items)
+        index.insert_many(list(range(lo, hi)), idx_b[lo:hi], val_b[lo:hi])
+
+    users = np.asarray(rs.user_repr(params, batch, cfg))     # [B, D]
+    recalls = []
+    for b in range(users.shape[0]):
+        qidx = np.arange(cfg.embed_dim, dtype=np.int32)
+        ids, _ = index.search(qidx, users[b], k=10, kprime=200)
+        truth = set(np.asarray(top_dense[b]).tolist())
+        recalls.append(len(set(ids.tolist()) & truth) / 10)
+    print(f"sinnamon over top-{t} sparsified items: "
+          f"recall@10 vs dense = {np.mean(recalls):.2f} "
+          f"(sparsification keeps {t}/{cfg.embed_dim} coords — the recall "
+          f"gap is the sparsification cost, not the sketch's)")
+
+
+if __name__ == "__main__":
+    main()

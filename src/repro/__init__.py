@@ -1,0 +1,15 @@
+"""repro — a production-grade JAX framework reproducing and extending
+
+  "An Approximate Algorithm for Maximum Inner Product Search over Streaming
+   Sparse Vectors" (Bruch, Nardini, Ingber, Liberty — 2023, cs.IR).
+
+Public surface:
+    repro.core      — Sinnamon sketch / bit-packed index / engines (Sinnamon, LinScan, WAND)
+    repro.kernels   — Pallas TPU kernels (+ pure-jnp oracles)
+    repro.models    — assigned architectures (LM / MoE / GNN / recsys)
+    repro.distributed, repro.train, repro.serving, repro.checkpoint
+    repro.configs   — one module per assigned architecture
+    repro.launch    — production mesh, multi-pod dry-run, train/serve drivers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,132 @@
+"""Checkpoint/restart with elastic resharding.
+
+Layout:  <dir>/step_<N>/arrays.npz + manifest.json (+ .tmp staging, atomic
+rename — a preempted save never corrupts the latest checkpoint).  Arrays are
+stored *unsharded* (gathered) with their full global shapes, so a restore can
+re-shard onto **any** mesh — that is the elastic-scaling path: train on
+(2,16,16), restart on (16,16), or grow the retrieval corpus shards.
+
+For true multi-host deployments each host would write its own addressable
+shards; the manifest format (named leaves + shapes + dtypes) is already
+host-count-agnostic, and `restore(..., shardings=...)` does the placement.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy's npz cannot represent ml_dtypes (bfloat16, fp8): store such arrays
+# as raw uint views and record the true dtype in the manifest.
+_EXOTIC = {"bfloat16": (ml_dtypes.bfloat16, np.uint16)}
+
+
+def _flatten(tree) -> dict:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.name in _EXOTIC:
+            arr = arr.view(_EXOTIC[arr.dtype.name][1])
+        out[key] = arr
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree, keep: int = 3,
+         extra: Optional[dict] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrays = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    true_dtypes = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        true_dtypes[key] = str(jax.numpy.asarray(leaf).dtype) \
+            if hasattr(leaf, "dtype") else "float32"
+    manifest = {
+        "step": step,
+        "leaves": {k: {"shape": list(v.shape),
+                       "dtype": true_dtypes.get(k, str(v.dtype))}
+                   for k, v in arrays.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                       # atomic publish
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"),
+                      ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            out.append(int(name[5:]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, tree_template, step: Optional[int] = None,
+            shardings=None):
+    """Restore into the structure of ``tree_template``.
+
+    shardings: optional matching pytree of NamedSharding — arrays are placed
+    (and thereby re-sharded) onto the current mesh; None = host arrays.
+    Returns (tree, step, extra).
+    """
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_template)
+    leaves = []
+    shard_flat = (None if shardings is None
+                  else jax.tree_util.tree_flatten(shardings)[0])
+    for i, (path, leaf) in enumerate(flat):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = data[key]
+        true_dt = manifest["leaves"].get(key, {}).get("dtype", "")
+        if true_dt in _EXOTIC:
+            arr = arr.view(_EXOTIC[true_dt][0])
+        want = tuple(leaf.shape)
+        if tuple(arr.shape) != want:
+            raise ValueError(f"{key}: checkpoint {arr.shape} != model {want}")
+        if shard_flat is not None:
+            leaves.append(jax.device_put(arr, shard_flat[i]))
+        else:
+            leaves.append(arr)
+    return (jax.tree_util.tree_unflatten(treedef, leaves), step,
+            manifest.get("extra", {}))

@@ -1,0 +1,7 @@
+"""Core contribution of the paper: Sinnamon sketch + bit-packed streaming
+inverted index + approximate/exact SMIPS engines (Sinnamon, LinScan, WAND)
+and the paper's error theory (Section 5) as numerics."""
+
+from repro.core.sketch import SketchSpec, make_mappings, encode, encode_batch
+from repro.core import bitindex
+from repro.core.engine import EngineSpec, SinnamonState, SinnamonIndex

@@ -1,0 +1,79 @@
+"""Bit-packed streaming inverted index (paper §4.1's id-only inverted index).
+
+The paper keeps, per coordinate ``j``, a Roaring bitmap of document ids whose
+``j``-th coordinate is active.  The TPU-native equivalent is a fixed-capacity
+**bit matrix** ``B ∈ uint32[n, C/32]`` over document *slots*:
+
+    bit(j, s) = 1  ⇔  coordinate j is active in the vector stored at slot s.
+
+Same set semantics, but fixed-shape (jittable / shardable), O(1) insert and
+delete (bit set/clear — the paper's headline deletion cost), and rows unpack
+lane-wise inside the scoring kernel.  Capacity is a config knob; growth is a
+host-side reallocation (`repro.core.engine.SinnamonIndex.grow`).
+
+Bit order: slot ``s`` lives at word ``s // 32``, bit ``s % 32`` (LSB-first).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+WORD = 32
+
+
+def n_words(capacity: int) -> int:
+    if capacity % WORD != 0:
+        raise ValueError(f"capacity {capacity} must be a multiple of {WORD}")
+    return capacity // WORD
+
+
+def empty(n: int, capacity: int) -> Array:
+    return jnp.zeros((n, n_words(capacity)), dtype=jnp.uint32)
+
+
+def set_doc(bits: Array, idx: Array, slot, on: bool) -> Array:
+    """Set (on=True) or clear the membership bits of one document.
+
+    idx: int32[P] active coordinates (or hashed bucket rows), padded with -1.
+    Padded entries are routed OUT OF BOUNDS and dropped by the scatter —
+    routing them to row 0 would race with a genuine row-0 update (scatter
+    duplicate-index write order is undefined).  Duplicate *valid* rows
+    (bucket collisions within one doc) all write the identical value (same
+    slot ⇒ same word and mask), so they cannot conflict.
+    """
+    valid = idx >= 0
+    oob = jnp.int32(bits.shape[0])
+    safe = jnp.where(valid, idx, oob)
+    word = slot // WORD
+    mask = (jnp.uint32(1) << jnp.uint32(slot % WORD))
+    rows = bits[jnp.where(valid, idx, 0), word]              # [P]
+    if on:
+        new = rows | mask
+    else:
+        new = rows & ~mask
+    return bits.at[safe, word].set(new, mode="drop")
+
+
+def test_bit(bits: Array, j, slot) -> Array:
+    word = slot // WORD
+    return (bits[j, word] >> jnp.uint32(slot % WORD)) & jnp.uint32(1)
+
+
+def unpack_row(row: Array) -> Array:
+    """uint32[..., W] -> bool[..., W*32] membership mask (LSB-first)."""
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bitsets = (row[..., :, None] >> shifts) & jnp.uint32(1)  # [..., W, 32]
+    return bitsets.reshape(*row.shape[:-1], row.shape[-1] * WORD).astype(jnp.bool_)
+
+
+def row_mask(bits: Array, j) -> Array:
+    """Membership mask of coordinate j over all slots: bool[C]."""
+    return unpack_row(bits[j])
+
+
+def popcounts(bits: Array) -> Array:
+    """Postings-list length per coordinate: int32[n] (index statistics)."""
+    return jax.lax.population_count(bits).sum(axis=-1).astype(jnp.int32)

@@ -1,0 +1,353 @@
+"""Sinnamon: the approximate streaming SMIPS engine (paper §4).
+
+Functional JAX core (everything jit-able, shardable) + a thin host wrapper
+that owns slot allocation / id mapping / capacity growth.
+
+State layout (one shard):
+    mappings : int32[h, n]        random coordinate mappings (π_o)
+    u, l     : bf16[m, C]         sketch matrix  X̃ = [U; L]   (l=None → Sinnamon+)
+    bits     : uint32[n, C/32]    id-only inverted index (bit-packed)
+    store    : VecStore[C, P]     raw vectors (exact rerank source)
+    active   : bool[C]            slot occupancy
+    ids      : int64[C]           external document ids per slot
+
+Retrieval = Algorithm 6 (budgeted, coordinate-at-a-time upper-bound scoring)
+          + Algorithm 7 (top-k' candidates → exact rerank → top-k).
+Deletion  = bit-clear + slot recycling; the sketch column is left in place and
+            recycled by the next insert (paper §4.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitindex, sketch
+from repro.storage import vecstore
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """Static engine configuration (hashable; safe as a jit static arg)."""
+
+    n: int                       # ambient dimensionality
+    m: int                       # sketch half-size (2m total rows, paper's "2m")
+    capacity: int                # document slots C (multiple of 32)
+    max_nnz: int                 # padded CSR width P (max ψ_d)
+    h: int = 1
+    positive_only: bool = False  # Sinnamon+
+    # Approximate inverted index (paper §4.1.2 future work, built here):
+    # coordinates hash into `index_buckets` bitmap rows; each list becomes a
+    # SUPERSET of the exact one, which preserves the Theorem 5.1 upper-bound
+    # (a false positive only ever ADDS a non-negative overestimate) while
+    # shrinking the index by n/index_buckets. None = exact bitmap.
+    index_buckets: "int | None" = None
+    dtype: str = "bfloat16"      # sketch storage dtype
+    value_dtype: str = "bfloat16"  # raw-value storage dtype (paper uses bf16)
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.capacity % 32 != 0:
+            raise ValueError("capacity must be a multiple of 32")
+
+    @property
+    def sketch_spec(self) -> sketch.SketchSpec:
+        return sketch.SketchSpec(self.n, self.m, self.h, self.positive_only,
+                                 self.dtype)
+
+
+def coord_rows(spec: EngineSpec, idx: Array) -> Array:
+    """Map coordinate ids to bitmap rows (identity, or hashed buckets)."""
+    if spec.index_buckets is None:
+        return idx
+    u = idx.astype(jnp.uint32) * jnp.uint32(2654435761)
+    return jnp.where(idx >= 0,
+                     (u % jnp.uint32(spec.index_buckets)).astype(jnp.int32),
+                     idx)
+
+
+class SinnamonState(NamedTuple):
+    mappings: Array
+    u: Array
+    l: Optional[Array]
+    bits: Array
+    store: vecstore.VecStore
+    active: Array
+    ids: Array
+
+
+# ---------------------------------------------------------------------------
+# Functional core
+# ---------------------------------------------------------------------------
+
+def init(spec: EngineSpec) -> SinnamonState:
+    mappings = jnp.asarray(sketch.make_mappings(spec.seed, spec.n, spec.m, spec.h))
+    u = jnp.zeros((spec.m, spec.capacity), dtype=spec.sketch_spec.jdtype)
+    l = None if spec.positive_only else jnp.zeros_like(u)
+    return SinnamonState(
+        mappings=mappings,
+        u=u,
+        l=l,
+        bits=bitindex.empty(spec.index_buckets or spec.n, spec.capacity),
+        store=vecstore.empty(spec.capacity, spec.max_nnz,
+                             dtype=jnp.dtype(spec.value_dtype)),
+        active=jnp.zeros((spec.capacity,), jnp.bool_),
+        ids=jnp.full((spec.capacity,), -1, jnp.int32),
+    )
+
+
+def insert(state: SinnamonState, spec: EngineSpec, slot, ext_id,
+           idx: Array, val: Array) -> SinnamonState:
+    """Algorithm 5: index one document at ``slot`` (recycles stale columns)."""
+    u_col, l_col = sketch.encode(state.mappings, spec.m, idx, val,
+                                 dtype=spec.dtype,
+                                 positive_only=spec.positive_only)
+    u = state.u.at[:, slot].set(u_col.astype(state.u.dtype))
+    l = None if state.l is None else state.l.at[:, slot].set(
+        l_col.astype(state.l.dtype))
+    bits = bitindex.set_doc(state.bits, coord_rows(spec, idx), slot,
+                            on=True)
+    store = vecstore.write(state.store, slot, idx, val)
+    return SinnamonState(
+        mappings=state.mappings, u=u, l=l, bits=bits, store=store,
+        active=state.active.at[slot].set(True),
+        ids=state.ids.at[slot].set(ext_id),
+    )
+
+
+def insert_batch(state: SinnamonState, spec: EngineSpec, slots: Array,
+                 ext_ids: Array, idx: Array, val: Array) -> SinnamonState:
+    """Sequential-semantics batch insert (scan; one jit dispatch per batch)."""
+
+    def body(st, args):
+        slot, eid, i, v = args
+        return insert(st, spec, slot, eid, i, v), None
+
+    state, _ = jax.lax.scan(body, state, (slots, ext_ids, idx, val))
+    return state
+
+
+def delete(state: SinnamonState, spec: EngineSpec, slot) -> SinnamonState:
+    """Paper §4.3: clear inverted-index bits; leave the sketch column stale."""
+    idx = state.store.indices[slot]
+    bits = bitindex.set_doc(state.bits, coord_rows(spec, idx), slot,
+                            on=False)
+    store = vecstore.erase(state.store, slot)
+    return state._replace(
+        bits=bits, store=store,
+        active=state.active.at[slot].set(False),
+        ids=state.ids.at[slot].set(-1),
+    )
+
+
+def _sorted_query(q_idx: Array, q_val: Array) -> Tuple[Array, Array]:
+    """Order query coordinates by |q[j]| descending, padding (idx<0) last."""
+    key = jnp.where(q_idx >= 0, jnp.abs(q_val.astype(jnp.float32)), -1.0)
+    order = jnp.argsort(-key)
+    return q_idx[order], q_val[order]
+
+
+def score(state: SinnamonState, spec: EngineSpec, q_idx: Array, q_val: Array,
+          budget: Optional[int] = None) -> Array:
+    """Algorithm 6: upper-bound scores for every slot.  f32[C].
+
+    ``budget`` is the anytime lever: only the ``budget`` largest-|q[j]|
+    coordinates are scored (deterministic adaptation of the paper's wall-clock
+    budget T; see DESIGN.md §6).  None = all coordinates (T = ∞).
+    """
+    q_idx, q_val = _sorted_query(q_idx, q_val)
+    steps = q_idx.shape[0] if budget is None else min(budget, q_idx.shape[0])
+    rows = coord_rows(spec, q_idx)          # bitmap rows in SORTED order
+
+    def body(t, scores):
+        j = q_idx[t]
+        v = q_val[t].astype(jnp.float32)
+        safe_j = jnp.maximum(j, 0)
+        ub, lb = sketch.decode_coord(state.mappings, state.u, state.l, safe_j)
+        contrib = jnp.where(v > 0, v * ub, v * lb)
+        memb = bitindex.row_mask(state.bits, jnp.maximum(rows[t], 0))
+        return scores + jnp.where(memb & (j >= 0), contrib, 0.0)
+
+    scores = jnp.zeros((spec.capacity,), jnp.float32)
+    return jax.lax.fori_loop(0, steps, body, scores)
+
+
+def score_grouped(state: SinnamonState, spec: EngineSpec, q_idx: Array,
+                  q_val: Array, budget: Optional[int] = None) -> Array:
+    """Beyond-paper scoring schedule (EXPERIMENTS.md §Perf): process all
+    budgeted coordinates in ONE fused pass instead of a coordinate-at-a-time
+    loop.  Same math as :func:`score`; the sketch/bitmap rows are gathered as
+    a single [L, ·] batch and reduced with one einsum-style sum, which lets
+    XLA keep the candidate tile resident instead of re-walking scores[C] per
+    coordinate (psi_q x fewer accumulator read-modify-writes).
+    """
+    q_idx, q_val = _sorted_query(q_idx, q_val)
+    L = q_idx.shape[0] if budget is None else min(budget, q_idx.shape[0])
+    j = q_idx[:L]
+    v = q_val[:L].astype(jnp.float32)
+    safe = jnp.where(j >= 0, j, 0)
+    rows = state.mappings[:, safe]                           # [h, L]
+    ub = jnp.min(state.u[rows].astype(jnp.float32), axis=0)  # [L, C]
+    if state.l is None:
+        lb = jnp.zeros_like(ub)
+    else:
+        lb = jnp.max(state.l[rows].astype(jnp.float32), axis=0)
+    contrib = jnp.where(v[:, None] > 0, v[:, None] * ub, v[:, None] * lb)
+    bit_rows = jnp.maximum(coord_rows(spec, j), 0)
+    memb = bitindex.unpack_row(state.bits[bit_rows])         # [L, C]
+    contrib = jnp.where(memb & (j >= 0)[:, None], contrib, 0.0)
+    return jnp.sum(contrib, axis=0)
+
+
+def score_batch(state, spec, q_idx, q_val, budget=None, grouped=False
+                ) -> Array:
+    """[B, C] upper-bound scores for a batch of queries."""
+    fn = score_grouped if grouped else score
+    return jax.vmap(lambda i, v: fn(state, spec, i, v, budget))(q_idx, q_val)
+
+
+def search(state: SinnamonState, spec: EngineSpec, q_idx: Array, q_val: Array,
+           k: int, kprime: int, budget: Optional[int] = None,
+           filter_mask: Optional[Array] = None,
+           score_fn=None):
+    """Algorithms 6+7: scoring → top-k' → exact rerank → top-k.
+
+    filter_mask: optional bool[C] for constrained search (paper §4.2.4, Eq. 3).
+    score_fn: override the scoring backend (e.g. the Pallas kernel wrapper).
+    Returns (ids int64[k], exact_scores f32[k], slots int32[k]).
+    """
+    sfn = score_fn if score_fn is not None else score
+    s = sfn(state, spec, q_idx, q_val, budget)
+    ok = state.active if filter_mask is None else (state.active & filter_mask)
+    s = jnp.where(ok, s, -jnp.inf)
+    cand_scores, cand_slots = jax.lax.top_k(s, kprime)
+
+    q_dense = vecstore.densify_query(spec.n, q_idx, q_val)
+    exact = vecstore.exact_scores(state.store, cand_slots, q_dense)
+    exact = jnp.where(jnp.isneginf(cand_scores), -jnp.inf, exact)
+    top_scores, pos = jax.lax.top_k(exact, k)
+    slots = cand_slots[pos]
+    return state.ids[slots], top_scores, slots
+
+
+def search_batch(state, spec, q_idx, q_val, k, kprime, budget=None,
+                 filter_mask=None, score_fn=None):
+    fn = lambda i, v: search(state, spec, i, v, k, kprime, budget,
+                             filter_mask, score_fn)
+    return jax.vmap(fn)(q_idx, q_val)
+
+
+# ---------------------------------------------------------------------------
+# Host wrapper: slot allocation, id mapping, growth
+# ---------------------------------------------------------------------------
+
+class SinnamonIndex:
+    """Streaming host-facing index.  All heavy math stays jitted/functional."""
+
+    def __init__(self, spec: EngineSpec):
+        self.spec = spec
+        self.state = init(spec)
+        self._free = list(range(spec.capacity - 1, -1, -1))  # pop() -> slot 0 first
+        self._id2slot: dict[int, int] = {}
+        self._insert = jax.jit(insert, static_argnums=(1,))
+        self._insert_batch = jax.jit(insert_batch, static_argnums=(1,))
+        self._delete = jax.jit(delete, static_argnums=(1,))
+        self._search = jax.jit(
+            search, static_argnums=(1, 4, 5, 6),
+            static_argnames=("score_fn",))
+
+    # -- streaming updates ---------------------------------------------------
+    def insert(self, ext_id: int, idx, val) -> None:
+        if ext_id in self._id2slot:
+            self.delete(ext_id)
+        if not self._free:
+            self.grow(self.spec.capacity * 2)
+        slot = self._free.pop()
+        idx, val = pad_sparse(idx, val, self.spec.max_nnz)
+        self.state = self._insert(self.state, self.spec, slot, ext_id, idx, val)
+        self._id2slot[ext_id] = slot
+
+    def insert_many(self, ext_ids, idx_batch, val_batch) -> None:
+        bn = len(ext_ids)
+        while len(self._free) < bn:
+            self.grow(self.spec.capacity * 2)
+        slots = np.array([self._free.pop() for _ in range(bn)], np.int32)
+        self.state = self._insert_batch(
+            self.state, self.spec, jnp.asarray(slots),
+            jnp.asarray(np.asarray(ext_ids, np.int32)),
+            jnp.asarray(idx_batch), jnp.asarray(val_batch))
+        for eid, slot in zip(ext_ids, slots):
+            self._id2slot[int(eid)] = int(slot)
+
+    def delete(self, ext_id: int) -> None:
+        slot = self._id2slot.pop(ext_id)
+        self.state = self._delete(self.state, self.spec, slot)
+        self._free.append(slot)
+
+    # -- retrieval -------------------------------------------------------------
+    def search(self, q_idx, q_val, k: int, kprime: Optional[int] = None,
+               budget: Optional[int] = None, filter_mask=None, score_fn=None):
+        kprime = kprime if kprime is not None else max(5 * k, k)
+        kprime = min(kprime, self.spec.capacity)
+        k = min(k, kprime)
+        ids, scores, _ = self._search(
+            self.state, self.spec, jnp.asarray(q_idx), jnp.asarray(q_val),
+            k, kprime, budget, filter_mask, score_fn=score_fn)
+        return np.asarray(ids), np.asarray(scores)
+
+    # -- capacity management ----------------------------------------------------
+    def grow(self, new_capacity: int) -> None:
+        """Reallocate to a larger capacity, preserving slot numbering."""
+        old, spec = self.state, self.spec
+        if new_capacity <= spec.capacity or new_capacity % 32 != 0:
+            raise ValueError("new capacity must be a larger multiple of 32")
+        new_spec = dataclasses.replace(spec, capacity=new_capacity)
+        st = init(new_spec)
+        c = spec.capacity
+        self.state = SinnamonState(
+            mappings=old.mappings,
+            u=st.u.at[:, :c].set(old.u),
+            l=None if old.l is None else st.l.at[:, :c].set(old.l),
+            bits=st.bits.at[:, : c // 32].set(old.bits),
+            store=vecstore.VecStore(
+                indices=st.store.indices.at[:c].set(old.store.indices),
+                values=st.store.values.at[:c].set(old.store.values)),
+            active=st.active.at[:c].set(old.active),
+            ids=st.ids.at[:c].set(old.ids),
+        )
+        self.spec = new_spec
+        self._free = list(range(new_capacity - 1, c - 1, -1)) + self._free
+
+    @property
+    def size(self) -> int:
+        return len(self._id2slot)
+
+    def memory_bytes(self) -> dict:
+        """Index-size accounting (paper §6.1.2): sketch vs inverted index vs raw."""
+        st = self.state
+        out = {
+            "sketch": st.u.size * st.u.dtype.itemsize
+                      + (0 if st.l is None else st.l.size * st.l.dtype.itemsize),
+            "inverted_index": st.bits.size * st.bits.dtype.itemsize,
+            "storage": st.store.indices.size * st.store.indices.dtype.itemsize
+                       + st.store.values.size * st.store.values.dtype.itemsize,
+        }
+        out["index_total"] = out["sketch"] + out["inverted_index"]
+        return out
+
+
+def pad_sparse(idx, val, width: int):
+    """Pad/truncate a sparse (idx, val) pair to fixed width (pad idx = -1)."""
+    idx = np.asarray(idx, np.int32)[:width]
+    val = np.asarray(val, np.float32)[:width]
+    out_i = np.full((width,), -1, np.int32)
+    out_v = np.zeros((width,), np.float32)
+    out_i[: idx.size] = idx
+    out_v[: val.size] = val
+    return jnp.asarray(out_i), jnp.asarray(out_v)

@@ -1,0 +1,195 @@
+"""The Sinnamon sketch (paper §4.1, Algorithm 5).
+
+A sparse vector ``x ∈ R^n`` with active set ``nz(x)`` is compressed into an
+upper-bound sketch ``u ∈ R^m`` and a lower-bound sketch ``l ∈ R^m`` using ``h``
+independent random mappings ``π_o : [n] → [m]``:
+
+    u[k] = max { x[j] : j ∈ nz(x), ∃o π_o(j) = k }
+    l[k] = min { x[j] : j ∈ nz(x), ∃o π_o(j) = k }
+
+Decoding the value of an *active* coordinate ``j`` probes the same ``h`` cells
+regardless of the vector (Counting-Bloom-style):
+
+    x̄[j] = min_{o} u[π_o(j)]      (least upper bound;   used when q[j] > 0)
+    x̲[j] = max_{o} l[π_o(j)]      (greatest lower bound; used when q[j] < 0)
+
+so that the partial score ``q[j]·decode(j)`` always upper-bounds ``q[j]·x[j]``
+(Theorem 5.1).
+
+TPU adaptation notes
+--------------------
+* Mappings are materialised as an ``int32[h, n]`` table (deterministic Philox),
+  so that both encode and decode are dense gathers — no hashing in the kernel.
+* Sketches are stored in bfloat16 (as in the paper) but with **directed
+  rounding**: values are rounded *up* to the next representable bf16 in ``u``
+  and *down* in ``l``.  Plain round-to-nearest bf16 (the paper's choice) can
+  round an upper bound below the true value and silently void Theorem 5.1;
+  directed rounding restores the guarantee at zero extra cost.
+* Cells that receive no value are filled with 0 rather than ±inf.  They are
+  never decoded for a *valid* (doc, coordinate) pair — the membership index
+  guarantees at least the coordinate's own value landed in all h probed cells —
+  but a finite fill keeps masked dense arithmetic NaN-free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchSpec:
+    """Static configuration of a Sinnamon sketch."""
+
+    n: int                      # ambient dimensionality of the sparse space
+    m: int                      # rows in each of U and L (sketch size = 2m)
+    h: int = 1                  # number of independent random mappings
+    positive_only: bool = False  # Sinnamon+ (paper §4.1): drop L entirely
+    dtype: str = "bfloat16"     # storage dtype of sketch cells
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def sketch_rows(self) -> int:
+        return self.m if self.positive_only else 2 * self.m
+
+
+def make_mappings(seed: int, n: int, m: int, h: int) -> np.ndarray:
+    """h independent uniform random mappings [n] -> [m] as an int32[h, n] table.
+
+    Deterministic in ``seed`` (Philox counter-based bit generator), so an index
+    checkpoint only needs to store the seed, not the table.
+    """
+    gen = np.random.Generator(np.random.Philox(key=seed))
+    return gen.integers(0, m, size=(h, n), dtype=np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Directed bfloat16 rounding (upper bounds round toward +inf, lower toward -inf)
+# ---------------------------------------------------------------------------
+
+def _bf16_next_toward_inf(b: Array, positive: bool) -> Array:
+    """Next representable bf16 strictly toward +inf (positive=True) or -inf."""
+    bits = jax.lax.bitcast_convert_type(b, jnp.uint16)
+    is_nonneg = ~jnp.signbit(b)
+    if positive:
+        # toward +inf: magnitude grows for x>=0, shrinks for x<0.
+        nxt = jnp.where(is_nonneg, bits + 1, bits - 1)
+        # -0.0 (0x8000) - 1 would be garbage; map any zero to smallest +subnormal
+        nxt = jnp.where(b == 0, jnp.uint16(0x0001), nxt)
+    else:
+        nxt = jnp.where(is_nonneg, bits - 1, bits + 1)
+        nxt = jnp.where(b == 0, jnp.uint16(0x8001), nxt)
+    return jax.lax.bitcast_convert_type(nxt, jnp.bfloat16)
+
+
+def quantize_directed(x: Array, dtype, toward_pos_inf: bool) -> Array:
+    """Cast f32 -> dtype rounding toward +inf (u) or -inf (l)."""
+    x = x.astype(jnp.float32)
+    if jnp.dtype(dtype) == jnp.float32:
+        return x
+    if jnp.dtype(dtype) != jnp.dtype(jnp.bfloat16):
+        raise ValueError(f"unsupported sketch dtype {dtype}")
+    b = x.astype(jnp.bfloat16)
+    bf = b.astype(jnp.float32)
+    if toward_pos_inf:
+        need = bf < x
+    else:
+        need = bf > x
+    out = jnp.where(need, _bf16_next_toward_inf(b, toward_pos_inf), b)
+    # XLA CPU flushes bf16 subnormals to zero, which can void the bound for
+    # |x| below the smallest normal bf16 — fall back to ±smallest-normal.
+    tiny = jnp.bfloat16(1.1754944e-38)
+    of = out.astype(jnp.float32)
+    if toward_pos_inf:
+        out = jnp.where(of < x, tiny, out)
+    else:
+        out = jnp.where(of > x, -tiny, out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Encode (Algorithm 5) / decode (Algorithm 6 inner step)
+# ---------------------------------------------------------------------------
+
+def encode(
+    mappings: Array,            # int32[h, n]
+    m: int,
+    idx: Array,                 # int32[P], padded with -1
+    val: Array,                 # f32[P]
+    dtype="bfloat16",
+    positive_only: bool = False,
+) -> Tuple[Array, Optional[Array]]:
+    """Sketch one sparse vector -> (u[m], l[m]) (l is None for Sinnamon+)."""
+    h = mappings.shape[0]
+    valid = idx >= 0
+    safe = jnp.where(valid, idx, 0)
+    targets = mappings[:, safe].reshape(-1)                # [h*P]
+    vals = jnp.broadcast_to(val.astype(jnp.float32), (h,) + val.shape).reshape(-1)
+    ok = jnp.broadcast_to(valid, (h,) + valid.shape).reshape(-1)
+
+    u = jax.ops.segment_max(
+        jnp.where(ok, vals, -jnp.inf), targets, num_segments=m,
+        indices_are_sorted=False, unique_indices=False)
+    u = jnp.where(jnp.isneginf(u), 0.0, u)
+    u = quantize_directed(u, dtype, toward_pos_inf=True)
+    if positive_only:
+        return u, None
+    l = jax.ops.segment_min(
+        jnp.where(ok, vals, jnp.inf), targets, num_segments=m,
+        indices_are_sorted=False, unique_indices=False)
+    l = jnp.where(jnp.isposinf(l), 0.0, l)
+    l = quantize_directed(l, dtype, toward_pos_inf=False)
+    return u, l
+
+
+def encode_batch(mappings, m, idx, val, dtype="bfloat16", positive_only=False):
+    """vmap of :func:`encode` over a leading batch axis of (idx, val)."""
+    fn = lambda i, v: encode(mappings, m, i, v, dtype, positive_only)
+    return jax.vmap(fn)(idx, val)
+
+
+def decode_coord(
+    mappings: Array,    # int32[h, n]
+    u: Array,           # [m, ...]  (sketch matrix; trailing axes = doc slots)
+    l: Optional[Array],
+    j: Array,           # scalar int32 coordinate
+):
+    """Least-upper / greatest-lower bounds of coordinate j for every column.
+
+    Returns (ub[...], lb[...]).  For Sinnamon+ (l=None) lb is zeros — valid
+    because Sinnamon+ is only used for non-negative collections.
+    """
+    rows = mappings[:, j]                                   # [h]
+    ucells = u[rows].astype(jnp.float32)                    # [h, ...]
+    ub = jnp.min(ucells, axis=0)
+    if l is None:
+        lb = jnp.zeros_like(ub)
+    else:
+        lcells = l[rows].astype(jnp.float32)
+        lb = jnp.max(lcells, axis=0)
+    return ub, lb
+
+
+def decode_vector(mappings, u, l, idx):
+    """Reconstruct per-coordinate (ub, lb) for a single sketched vector.
+
+    u, l: [m] sketches of one vector.  idx: int32[P] active coordinates
+    (padded with -1).  Used by the §5 error analysis and its tests.
+    """
+    safe = jnp.where(idx >= 0, idx, 0)
+    rows = mappings[:, safe]                                # [h, P]
+    ub = jnp.min(u[rows].astype(jnp.float32), axis=0)
+    if l is None:
+        lb = jnp.zeros_like(ub)
+    else:
+        lb = jnp.max(l[rows].astype(jnp.float32), axis=0)
+    return ub, lb

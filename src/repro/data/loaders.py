@@ -1,0 +1,36 @@
+"""Synthetic batch generators for the LM and recsys training/serving paths.
+Deterministic in (seed, step) — a restart resumes the exact data stream
+(fault-tolerance: the data pipeline is stateless given the step counter).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.models.recsys import RecsysBatch, RecsysConfig
+
+
+def lm_batch(seed: int, step: int, batch: int, seq: int, vocab: int):
+    gen = np.random.Generator(np.random.Philox(key=(seed << 20) ^ step))
+    # Zipfian tokens — realistic softmax/embedding access pattern.
+    ranks = gen.zipf(1.3, size=(batch, seq + 1))
+    toks = np.minimum(ranks - 1, vocab - 1).astype(np.int32)
+    return toks[:, :-1], toks[:, 1:]
+
+
+def recsys_batch(seed: int, step: int, batch: int, cfg: RecsysConfig
+                 ) -> RecsysBatch:
+    gen = np.random.Generator(np.random.Philox(key=(seed << 20) ^ step))
+    dense = gen.normal(0, 1, (batch, cfg.n_dense)).astype(np.float32)
+    sparse = gen.integers(0, cfg.vocab_per_field,
+                          (batch, cfg.n_sparse, cfg.multi_hot)).astype(np.int32)
+    drop = gen.random((batch, cfg.n_sparse, cfg.multi_hot)) < 0.2
+    sparse = np.where(drop, -1, sparse)
+    hist = gen.integers(0, cfg.n_items, (batch, cfg.seq_len)).astype(np.int32)
+    lengths = gen.integers(1, cfg.seq_len + 1, batch)
+    mask = np.arange(cfg.seq_len)[None, :] >= lengths[:, None]
+    hist = np.where(mask, -1, hist)
+    target = gen.integers(0, cfg.n_items, batch).astype(np.int32)
+    labels = gen.integers(0, 2, batch).astype(np.float32)
+    return RecsysBatch(dense=dense, sparse=sparse, hist=hist,
+                       target=target, labels=labels)

@@ -1,0 +1,49 @@
+"""Mesh construction helpers.
+
+All functions — never module-level constants — so importing this module never
+touches jax device state (required by the dry-run protocol).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    """Build a mesh from the first prod(shape) available devices."""
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise ValueError(f"need {n} devices, have {len(devices)} "
+                         "(dry-run scripts must set XLA_FLAGS "
+                         "--xla_force_host_platform_device_count first)")
+    arr = np.asarray(devices[:n]).reshape(tuple(shape))
+    return Mesh(arr, tuple(axes))
+
+
+def single_device_mesh(axes: Sequence[str] = ("data", "model")) -> Mesh:
+    """1x1 mesh for CPU tests — same code path, no sharding."""
+    return make_mesh((1,) * len(axes), axes)
+
+
+def corpus_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes the retrieval corpus (document slots) is sharded over."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "model"))
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes the query/train batch is sharded over."""
+    return tuple(a for a in mesh.axis_names if a == "data")
+
+
+def n_shards(mesh: Mesh, axes: Sequence[str]) -> int:
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def named(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))

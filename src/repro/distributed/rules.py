@@ -1,0 +1,130 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Models annotate every tensor dimension with a *logical* axis name; a rule
+table maps each logical axis to an ordered list of candidate mesh-axis
+tuples.  ``spec_for`` picks, per dimension, the first candidate whose mesh
+axes (a) are all unused so far in this spec and (b) have a product that
+divides the dimension — otherwise the dimension is replicated.  This single
+mechanism is what lets every (architecture × shape × mesh) cell compile:
+e.g. deepseek's 8 KV heads can't split over model=16, so the decode cache
+falls through to its next rule (shard the KV *sequence* axis) automatically.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisCandidates = Sequence[Tuple[str, ...]]
+Rules = Dict[str, AxisCandidates]
+
+# Candidates are tried in order.  () entries are implicit — a miss replicates.
+TRAIN_RULES: Rules = {
+    # activations
+    "batch":    [("pod", "data"), ("data",)],
+    "seq":      [],
+    # Megatron-style sequence parallelism for the residual stream: the layer
+    # carry is seq-sharded over 'model'; attention/MLP constraints re-shard
+    # to heads/mlp and GSPMD inserts the all-gather/reduce-scatter pairs.
+    "act_seq":  [("model",)],
+    "embed":    [],
+    "heads":    [("model",)],
+    "kv_heads": [("model",)],
+    "kv_seq":   [("pod", "data", "model"), ("data", "model"), ("model",)],
+    "mlp":      [("model",)],
+    "vocab":    [("model",)],
+    "expert":   [("model",)],
+    "cap":      [],
+    "group":    [("pod", "data"), ("data",)],
+    # weights: fan-in dims get ZeRO/FSDP-style sharding over the data axes
+    "fsdp":     [("data",), ("pod",)],
+    # graph: node tensors are REPLICATED on the node axis (arbitrary-index
+    # gathers from a node-sharded array force GSPMD replication anyway) and
+    # sharded over 'model' on the channel axis; edges shard over the data
+    # axes, with partial per-shard aggregation all-reduced into the node
+    # accumulators.  See DESIGN.md §4 (GNN).
+    "nodes":    [],
+    "edges":    [("pod", "data"), ("data",)],
+    "gnn_c":    [("model",)],
+    "feat":     [],
+    "coef":     [],
+    # recsys
+    "table_rows": [("pod", "model"), ("model",)],
+    "fields":   [],
+    "candidates": [("pod", "model"), ("model",)],
+    # retrieval engine
+    "slots":    [("pod", "model"), ("model",)],
+    "slot_words": [("pod", "model"), ("model",)],
+    "sketch_rows": [],
+    "dim":      [],
+}
+
+# Serving differs only in how the (smaller) batch is placed.
+SERVE_RULES: Rules = dict(TRAIN_RULES)
+
+
+def _axes_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def spec_for(mesh: Mesh, shape: Sequence[int],
+             logical: Sequence[Optional[str]],
+             rules: Optional[Rules] = None) -> P:
+    """PartitionSpec for ``shape`` given per-dimension logical axis names."""
+    rules = rules if rules is not None else TRAIN_RULES
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        placed = None
+        if name is not None:
+            for cand in rules.get(name, []):
+                cand = tuple(a for a in cand if a in mesh.axis_names)
+                if not cand or any(a in used for a in cand):
+                    continue
+                if dim % _axes_size(mesh, cand) == 0 and dim > 0:
+                    placed = cand if len(cand) > 1 else cand[0]
+                    used.update(cand)
+                    break
+        out.append(placed)
+    # trim trailing Nones (canonical form)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def sharding_for(mesh, shape, logical, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(mesh, shape, logical, rules))
+
+
+def constrain(x: jax.Array, mesh: Mesh, logical: Sequence[Optional[str]],
+              rules: Optional[Rules] = None) -> jax.Array:
+    """with_sharding_constraint by logical axis names (no-op on 1-dev mesh)."""
+    if mesh.size == 1:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, sharding_for(mesh, x.shape, logical, rules))
+
+
+class L:
+    """Logical-axes annotation for one tensor (an opaque pytree *leaf*)."""
+
+    __slots__ = ("axes",)
+
+    def __init__(self, *axes: Optional[str]):
+        self.axes = tuple(axes)
+
+    def __repr__(self):
+        return f"L{self.axes}"
+
+
+def tree_sharding(mesh: Mesh, abstract_tree, logical_tree, rules=None):
+    """Map (pytree of ShapeDtypeStructs, matching pytree of L(...)) → shardings."""
+    return jax.tree.map(
+        lambda ab, lg: sharding_for(mesh, ab.shape, lg.axes, rules),
+        abstract_tree, logical_tree,
+        is_leaf=lambda x: isinstance(x, L))

@@ -1,0 +1,51 @@
+"""Distributed top-k merge.
+
+The corpus axis of the retrieval engine is sharded over (pod, model); naive
+``lax.top_k`` over a sharded axis makes GSPMD all-gather the *full* score
+matrix (O(B·C) bytes).  The hierarchical merge below all-gathers only the
+per-shard candidate tuples (O(B·shards·k') bytes — the paper's "monolithic
+index, segment the lists" parallelism mapped onto SPMD):
+
+    local top-k'  →  all-gather (value, global-id) pairs  →  global top-k.
+
+Used inside shard_map bodies (see repro.serving.sharded) and directly by
+tests on a 1-device mesh.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def local_candidates(scores: jax.Array, payload: jax.Array, k: int
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Per-shard top-k along the last axis; returns (values, payload)."""
+    vals, pos = jax.lax.top_k(scores, k)
+    return vals, jnp.take_along_axis(
+        jnp.broadcast_to(payload, scores.shape), pos, axis=-1)
+
+
+def merge_over_axes(vals: jax.Array, payload: jax.Array,
+                    axes: Sequence[str], k: int):
+    """All-gather candidate tuples over mesh ``axes`` and take the global top-k.
+
+    Must run inside shard_map with ``axes`` as manual axes.  Output is
+    replicated over ``axes``.
+    """
+    for ax in axes:
+        vals = jax.lax.all_gather(vals, ax, axis=-1, tiled=True)
+        payload = jax.lax.all_gather(payload, ax, axis=-1, tiled=True)
+    top_vals, pos = jax.lax.top_k(vals, k)
+    return top_vals, jnp.take_along_axis(payload, pos, axis=-1)
+
+
+def topk_with_ids(scores: jax.Array, ids: jax.Array, k: int,
+                  axes: Sequence[str] = ()):
+    """Top-k of ``scores`` with payload ``ids``; distributed iff axes given."""
+    vals, pay = local_candidates(scores, ids, min(k, scores.shape[-1]))
+    if axes:
+        vals, pay = merge_over_axes(vals, pay, axes, k)
+    return vals, pay

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  sinnamon_score — Algorithm 6 scoring (tile-resident sketch + bitmask)
+  csr_score      — exact padded-CSR scan (LinScan / Algorithm 7 rerank)
+  embed_bag      — EmbeddingBag gather-reduce (recsys substrate)
+
+Each kernel has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py.
+Validated in interpret mode on CPU; compiled pl.pallas_call on TPU.
+"""

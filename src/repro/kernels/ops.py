@@ -1,0 +1,114 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles operand preparation (query sorting/budgeting, membership-row
+gathering, tile padding) and backend selection: compiled Pallas on TPU,
+interpret mode elsewhere (this container is CPU-only; interpret mode executes
+the kernel body in Python and is the mandated validation path).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import csr_score as _csr
+from repro.kernels import embed_bag as _bag
+from repro.kernels import sinnamon_score as _sinn
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not on_tpu()
+
+
+def pad_axis(x: jax.Array, axis: int, multiple: int, fill=0):
+    size = x.shape[axis]
+    target = ((size + multiple - 1) // multiple) * multiple
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads, constant_values=fill)
+
+
+def prepare_query_operands(state, q_idx: jax.Array, q_val: jax.Array,
+                           budget: Optional[int] = None, spec=None):
+    """Engine state + padded sparse query -> (qv, rows, qbits) kernel operands.
+
+    Sorts coordinates by |q[j]| descending (Algorithm 6 line 2), truncates to
+    the anytime budget, gathers the h sketch-row ids and the membership words
+    per kept coordinate.  Padded / out-of-budget coordinates get qv = 0.
+    """
+    L = q_idx.shape[-1] if budget is None else min(budget, q_idx.shape[-1])
+    key = jnp.where(q_idx >= 0, jnp.abs(q_val.astype(jnp.float32)), -1.0)
+    order = jnp.argsort(-key, axis=-1)[..., :L]
+    idx_s = jnp.take_along_axis(q_idx, order, axis=-1)
+    val_s = jnp.take_along_axis(q_val, order, axis=-1).astype(jnp.float32)
+    valid = idx_s >= 0
+    safe = jnp.where(valid, idx_s, 0)
+    qv = jnp.where(valid, val_s, 0.0)
+    rows = jnp.moveaxis(state.mappings[:, safe], 0, -1)       # [..., L, h]
+    from repro.core import engine as _eng
+    bit_rows = jnp.maximum(_eng.coord_rows(spec, idx_s), 0) if spec \
+        is not None else safe
+    qbits = state.bits[bit_rows]                               # [..., L, W]
+    qbits = jnp.where(valid[..., None], qbits, jnp.uint32(0))
+    return qv, rows, qbits
+
+
+def sinnamon_score_batch(state, qv, rows, qbits, *, tile_c=None,
+                         interpret=None):
+    """Kernel-backed Algorithm 6 over a query batch. f32[B, C]."""
+    C = state.u.shape[1]
+    tile_c = tile_c or min(_sinn.DEFAULT_TILE_C, C)
+    interpret = _interpret() if interpret is None else interpret
+    u = pad_axis(state.u, 1, tile_c)
+    l = None if state.l is None else pad_axis(state.l, 1, tile_c)
+    qbits_p = pad_axis(qbits, -1, tile_c // 32)
+    out = _sinn.sinnamon_score(qv, rows, qbits_p, u, l,
+                               tile_c=tile_c, interpret=interpret)
+    return out[:, :C]
+
+
+def make_engine_score_fn(tile_c=None, interpret=None):
+    """A drop-in ``score_fn`` for `repro.core.engine.search` (single query)."""
+
+    def score_fn(state, spec, q_idx, q_val, budget=None):
+        qv, rows, qbits = prepare_query_operands(
+            state, q_idx[None], q_val[None], budget, spec=spec)
+        return sinnamon_score_batch(state, qv, rows, qbits, tile_c=tile_c,
+                                    interpret=interpret)[0]
+
+    return score_fn
+
+
+def exact_scores_all(store, q_dense, *, tile_c=None, interpret=None):
+    """Kernel-backed exact document-ordered scan (TPU-native LinScan)."""
+    C = store.indices.shape[0]
+    tile_c = tile_c or min(_csr.DEFAULT_TILE_C, C)
+    interpret = _interpret() if interpret is None else interpret
+    idx = pad_axis(store.indices, 0, tile_c, fill=-1)
+    val = pad_axis(store.values, 0, tile_c)
+    qd = pad_axis(q_dense, 0, 128)
+    return _csr.csr_score(qd, idx, val, tile_c=tile_c,
+                          interpret=interpret)[:C]
+
+
+def embed_bag(table, indices, weights=None, *, mode="sum", interpret=None):
+    """EmbeddingBag(sum|mean) built on the Pallas gather kernel."""
+    interpret = _interpret() if interpret is None else interpret
+    B, F = indices.shape
+    if weights is None:
+        weights = jnp.ones((B, F), jnp.float32)
+    if mode == "mean":
+        counts = jnp.maximum((indices >= 0).sum(-1, keepdims=True), 1)
+        weights = weights / counts
+    elif mode != "sum":
+        raise ValueError(mode)
+    return _bag.embed_bag(table, indices, weights, interpret=interpret)

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel for Sinnamon scoring (paper Algorithm 6).
+
+This is the paper's hot spot: for each query coordinate, read h sketch rows,
+take the elementwise min (max for the lower sketch), mask by the bit-packed
+inverted index, scale by q[j] and accumulate.
+
+TPU schedule (the *beyond-paper* tile-resident formulation — see DESIGN.md §2):
+the grid walks document tiles of size ``TC`` along the slot axis; the full
+sketch block ``[m, TC]`` is resident in VMEM while **all** budgeted query
+coordinates stream over it, so each sketch tile is fetched from HBM exactly
+once per query (the faithful coordinate-at-a-time order would fetch ``h``
+rows per coordinate — same arithmetic, ψ_q·h/m× the HBM traffic when
+ψ_q·h > m).  Membership words are pre-gathered per query coordinate
+(``uint32[L, TC/32]`` per tile) and unpacked lane-wise in-kernel.
+
+Block shapes: sketches ``(m, TC)``, membership ``(1, L, TW)``, scores
+``(1, TC)`` with ``TC`` a multiple of 128 lanes (f32 tile 8×128; the m axis is
+the sublane axis).  VMEM footprint ≈ 2·m·TC·2B + L·TC/8 + TC·4B — e.g.
+m=128, TC=2048, L=64: 1.1 MiB, comfortably inside the ~16 MiB VMEM budget.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_C = 2048
+
+
+def _kernel(qv_ref, rows_ref, qbits_ref, u_ref, l_ref, out_ref, *,
+            budget: int, h: int, tile_c: int):
+    U = u_ref[...].astype(jnp.float32)                    # [m, TC]
+    L = None if l_ref is None else l_ref[...].astype(jnp.float32)
+    qv = qv_ref[0]                                        # [Lq]
+    rows = rows_ref[0]                                    # [Lq, h]
+    words = qbits_ref[0]                                  # [Lq, TW]
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+
+    def body(t, acc):
+        r = rows[t]
+        ub = jax.lax.dynamic_index_in_dim(U, r[0], 0, keepdims=False)
+        for o in range(1, h):
+            ub = jnp.minimum(
+                ub, jax.lax.dynamic_index_in_dim(U, r[o], 0, keepdims=False))
+        if L is None:
+            lb = jnp.zeros_like(ub)
+        else:
+            lb = jax.lax.dynamic_index_in_dim(L, r[0], 0, keepdims=False)
+            for o in range(1, h):
+                lb = jnp.maximum(
+                    lb, jax.lax.dynamic_index_in_dim(L, r[o], 0, keepdims=False))
+        v = qv[t]
+        contrib = jnp.where(v > 0, v * ub, v * lb)
+        w = words[t]                                      # [TW] uint32
+        mask = ((w[:, None] >> shifts) & 1).reshape(tile_c) != 0
+        return acc + jnp.where(mask, contrib, 0.0)
+
+    acc = jax.lax.fori_loop(0, budget, body,
+                            jnp.zeros((tile_c,), jnp.float32))
+    out_ref[0, :] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("tile_c", "interpret"))
+def sinnamon_score(
+    qv: jax.Array,               # f32[B, L]
+    rows: jax.Array,             # int32[B, L, h]
+    qbits: jax.Array,            # uint32[B, L, W]  (W = C/32)
+    u: jax.Array,                # [m, C]
+    l: Optional[jax.Array] = None,
+    *,
+    tile_c: int = DEFAULT_TILE_C,
+    interpret: bool = True,
+) -> jax.Array:
+    """Upper-bound scores f32[B, C].  Grid = (B, C / tile_c)."""
+    B, Lq = qv.shape
+    h = rows.shape[-1]
+    m, C = u.shape
+    if C % tile_c != 0:
+        raise ValueError(f"C={C} must be a multiple of tile_c={tile_c}")
+    tw = tile_c // 32
+    grid = (B, C // tile_c)
+
+    in_specs = [
+        pl.BlockSpec((1, Lq), lambda b, c: (b, 0)),            # qv
+        pl.BlockSpec((1, Lq, h), lambda b, c: (b, 0, 0)),      # rows
+        pl.BlockSpec((1, Lq, tw), lambda b, c: (b, 0, c)),     # qbits
+        pl.BlockSpec((m, tile_c), lambda b, c: (0, c)),        # u
+    ]
+    args = [qv, rows, qbits, u]
+    if l is not None:
+        in_specs.append(pl.BlockSpec((m, tile_c), lambda b, c: (0, c)))
+        args.append(l)
+        kern = functools.partial(_kernel, budget=Lq, h=h, tile_c=tile_c)
+    else:
+        kern = functools.partial(
+            lambda qv_ref, rows_ref, qbits_ref, u_ref, out_ref, **kw:
+            _kernel(qv_ref, rows_ref, qbits_ref, u_ref, None, out_ref, **kw),
+            budget=Lq, h=h, tile_c=tile_c)
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, tile_c), lambda b, c: (b, c)),
+        out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
+        interpret=interpret,
+    )(*args)

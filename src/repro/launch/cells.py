@@ -1,0 +1,295 @@
+"""Cell builders for the multi-pod dry-run: for every (architecture × input
+shape) this produces the step function to lower, ShapeDtypeStruct stand-ins
+for all inputs (no allocation), and logical-axis-derived in_shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.core import engine as eng
+from repro.distributed import mesh as meshlib
+from repro.distributed import rules as R
+from repro.distributed.rules import L
+from repro.models import gnn, recsys, transformer as tr
+from repro.optim import adamw
+from repro.serving import sharded
+from repro.storage import vecstore
+from repro.train import loop
+
+
+class CellBundle(NamedTuple):
+    fn: Any                 # callable to jit
+    args: Tuple             # abstract (ShapeDtypeStruct) inputs
+    in_shardings: Tuple
+    donate_argnums: Tuple[int, ...]
+    meta: dict              # MODEL_FLOPS etc. for the roofline report
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _opt_abstract(params_abs):
+    return jax.eval_shape(adamw.init, params_abs)
+
+
+def _opt_axes(params_axes):
+    return adamw.OptState(m=params_axes, v=params_axes, step=L())
+
+
+OPT_CFG = adamw.AdamWConfig()
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_flops(cfg, shape) -> dict:
+    tokens = shape["batch"] * (shape["seq"] if shape["kind"] != "lm_decode"
+                               else 1)
+    n_active = cfg.active_param_count()
+    mult = 6 if shape["kind"] == "lm_train" else 2
+    return {"model_flops": mult * n_active * tokens,
+            "params": cfg.param_count(), "active_params": n_active,
+            "tokens": tokens}
+
+
+def build_lm(mod, shape, mesh, rules=None) -> CellBundle:
+    cfg = mod.full_config()
+    kind = shape["kind"]
+    B, S = shape["batch"], shape["seq"]
+    meta = _lm_flops(cfg, shape)
+    meta["arch_kind"] = kind
+
+    if kind == "lm_train":
+        params_abs = tr.abstract_params(cfg)            # fp32 master weights
+        ax = tr.logical_axes(cfg)
+        state_abs = loop.TrainState(params_abs, _opt_abstract(params_abs), None)
+        state_ax = loop.TrainState(ax, _opt_axes(ax), None)
+        state_sh = R.tree_sharding(mesh, state_abs, state_ax, rules)
+        bsh = R.sharding_for(mesh, (B, S), ("batch", "seq"), rules)
+        batch_abs = (_sds((B, S), jnp.int32), _sds((B, S), jnp.int32))
+
+        def loss_fn(params, batch):
+            loss, metrics = tr.lm_loss(params, batch[0], batch[1], cfg, mesh,
+                                       rules)
+            return loss, metrics
+
+        step = loop.make_train_step(loss_fn, OPT_CFG)
+        return CellBundle(step, (state_abs, batch_abs),
+                          (state_sh, (bsh, bsh)), (0,), meta)
+
+    params_abs = tr.abstract_params(cfg, dtype=jnp.bfloat16)   # serving
+    ax = tr.logical_axes(cfg)
+    psh = R.tree_sharding(mesh, params_abs, ax, rules)
+
+    if kind == "lm_prefill":
+        tokens = _sds((B, S), jnp.int32)
+        tsh = R.sharding_for(mesh, (B, S), ("batch", "seq"), rules)
+        fn = lambda p, t: tr.prefill(p, t, cfg, mesh, rules)
+        return CellBundle(fn, (params_abs, tokens), (psh, tsh), (), meta)
+
+    # decode: one new token against a KV cache of S entries
+    cache_abs = tr.abstract_cache(cfg, B, S)
+    cache_sh = R.tree_sharding(mesh, cache_abs, tr.cache_logical_axes(), rules)
+    tokens = _sds((B, 1), jnp.int32)
+    tsh = R.sharding_for(mesh, (B, 1), ("batch", None), rules)
+    pos = _sds((), jnp.int32)
+    pos_sh = NamedSharding(mesh, P())
+    fn = lambda p, c, t, pos: tr.decode_step(p, c, t, pos, cfg, mesh, rules)
+    return CellBundle(fn, (params_abs, cache_abs, tokens, pos),
+                      (psh, cache_sh, tsh, pos_sh), (1,), meta)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def build_gnn(mod, shape, mesh, rules=None) -> CellBundle:
+    cfg = mod.full_config(shape)
+    pn, pe = shape["pad_nodes"], shape["pad_edges"]
+    n_graphs = shape.get("batch_graphs", 1)
+    labels = (_sds((pn,), jnp.int32) if shape["task"] == "node_class"
+              else _sds((n_graphs,), jnp.float32))
+    g_abs = gnn.GraphBatch(
+        node_feat=_sds((pn, shape["d_feat"]), jnp.float32),
+        edge_src=_sds((pe,), jnp.int32), edge_dst=_sds((pe,), jnp.int32),
+        edge_vec=_sds((pe, 3), jnp.float32),
+        labels=labels, forces=_sds((pn, 3), jnp.float32),
+        graph_id=_sds((pn,), jnp.int32), n_graphs=None)
+    gax = gnn.graph_logical_axes()._replace(
+        labels=L("nodes") if shape["task"] == "node_class" else L(None))
+    # n_graphs is static (None in the traced pytree; re-attached in loss_fn).
+    g_sh = R.tree_sharding(mesh, g_abs, gax, rules)
+
+    from repro.models import gnn_sharded
+    params_abs = gnn.abstract_params(cfg)
+    psh = gnn_sharded.param_shardings(cfg, mesh)
+    state_abs = loop.TrainState(params_abs, _opt_abstract(params_abs), None)
+    state_sh = loop.TrainState(psh, adamw.OptState(
+        m=psh, v=psh, step=NamedSharding(mesh, P())), None)
+    # edges over the data axes, node tensors replicated (DESIGN.md §4 GNN)
+    edge_spec = P(tuple(a for a in mesh.axis_names if a in ("pod", "data")))
+    g_sh = gnn.GraphBatch(
+        node_feat=NamedSharding(mesh, P()),
+        edge_src=NamedSharding(mesh, edge_spec),
+        edge_dst=NamedSharding(mesh, edge_spec),
+        edge_vec=NamedSharding(mesh, P(edge_spec[0], None)),
+        labels=NamedSharding(mesh, P()), forces=NamedSharding(mesh, P()),
+        graph_id=NamedSharding(mesh, P()), n_graphs=None)
+
+    def loss_fn(params, batch):
+        batch = batch._replace(n_graphs=n_graphs)
+        if mesh.size > 1:
+            return gnn_sharded.loss_fn_sharded(params, batch, cfg, mesh)
+        return gnn.loss_fn(params, batch, cfg, mesh, rules)
+
+    step = loop.make_train_step(loss_fn, OPT_CFG)
+    # eSCN per-edge cost: rotate (2×Σ(2l+1)²·C) + SO(2) conv matmuls
+    lm = cfg.l_max
+    rot = 2 * sum((2 * l + 1) ** 2 for l in range(lm + 1)) * cfg.c
+    conv = ((lm + 1) * cfg.c) ** 2 + 2 * sum(
+        ((lm + 1 - m) * cfg.c) ** 2 * 2 for m in range(1, cfg.m_max + 1))
+    meta = {"arch_kind": "gnn_train",
+            "model_flops": 6 * shape["n_edges"] * (rot + conv) * cfg.n_layers,
+            "params": None, "tokens": shape["n_edges"]}
+    return CellBundle(step, (state_abs, g_abs), (state_sh, g_sh), (0,), meta)
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+def _recsys_batch_abs(cfg, B):
+    return recsys.RecsysBatch(
+        dense=_sds((B, cfg.n_dense), jnp.float32),
+        sparse=_sds((B, cfg.n_sparse, cfg.multi_hot), jnp.int32),
+        hist=_sds((B, cfg.seq_len), jnp.int32),
+        target=_sds((B,), jnp.int32),
+        labels=_sds((B,), jnp.float32))
+
+
+def _recsys_flops(cfg, B) -> int:
+    D = cfg.embed_dim
+    if cfg.model == "dlrm":
+        dims_b = (cfg.n_dense,) + cfg.bot_mlp
+        dims_t = (cfg.bot_mlp[-1] + (cfg.n_sparse + 1) * cfg.n_sparse // 2,
+                  ) + cfg.top_mlp
+        mlp = sum(a * b for a, b in zip(dims_b[:-1], dims_b[1:])) + \
+            sum(a * b for a, b in zip(dims_t[:-1], dims_t[1:]))
+        inter = (cfg.n_sparse + 1) ** 2 * D
+        return 2 * B * (mlp + inter)
+    if cfg.model == "din":
+        att = cfg.seq_len * (4 * D * cfg.attn_mlp[0]
+                             + cfg.attn_mlp[0] * cfg.attn_mlp[1])
+        m = 2 * D * cfg.mlp[0] + cfg.mlp[0] * cfg.mlp[1]
+        return 2 * B * (att + m)
+    if cfg.model == "sasrec":
+        S = cfg.seq_len
+        return 2 * B * cfg.n_blocks * (4 * S * D * D + 2 * S * S * D)
+    S = cfg.seq_len
+    return 2 * B * cfg.capsule_iters * (2 * S * cfg.n_interests * D + D * D)
+
+
+def build_recsys(mod, shape, mesh, rules=None) -> CellBundle:
+    cfg = mod.full_config()
+    kind = shape["kind"]
+    B = shape["batch"]
+    batch_abs = _recsys_batch_abs(cfg, B)
+    b_sh = R.tree_sharding(mesh, batch_abs, recsys.batch_logical_axes(), rules)
+    meta = {"arch_kind": kind, "model_flops": _recsys_flops(cfg, B),
+            "tokens": B}
+
+    if kind == "recsys_train":
+        params_abs = recsys.abstract_params(cfg)
+        ax = recsys.logical_axes(cfg)
+        state_abs = loop.TrainState(params_abs, _opt_abstract(params_abs),
+                                    None)
+        state_ax = loop.TrainState(ax, _opt_axes(ax), None)
+        state_sh = R.tree_sharding(mesh, state_abs, state_ax, rules)
+        meta["model_flops"] *= 3
+
+        def loss_fn(params, batch):
+            return recsys.loss(params, batch, cfg, mesh, rules), {}
+
+        step = loop.make_train_step(loss_fn, OPT_CFG)
+        return CellBundle(step, (state_abs, batch_abs), (state_sh, b_sh),
+                          (0,), meta)
+
+    params_abs = recsys.abstract_params(cfg)
+    psh = R.tree_sharding(mesh, params_abs, recsys.logical_axes(cfg), rules)
+    if kind == "recsys_serve":
+        fn = lambda p, b: recsys.score(p, b, cfg, mesh, rules)
+        return CellBundle(fn, (params_abs, batch_abs), (psh, b_sh), (), meta)
+
+    # retrieval_cand: batched-dot MIPS against the full candidate set
+    k = shape["k"]
+    meta["model_flops"] = 2 * B * shape["n_candidates"] * cfg.embed_dim
+
+    def fn(p, b):
+        s = recsys.retrieval_scores(p, b, cfg, mesh, rules)
+        return jax.lax.top_k(s, k)
+
+    return CellBundle(fn, (params_abs, batch_abs), (psh, b_sh), (), meta)
+
+
+# ---------------------------------------------------------------------------
+# Retrieval-engine cells (the paper's own workload)
+# ---------------------------------------------------------------------------
+
+def build_retrieval(mod, shape, mesh, rules=None) -> CellBundle:
+    corpus_ax = meshlib.corpus_axes(mesh)
+    n_shards = meshlib.n_shards(mesh, corpus_ax)
+    spec = mod.full_config(shape, n_shards)
+    C_total = spec.capacity * n_shards
+    W = C_total // 32
+    state_abs = eng.SinnamonState(
+        mappings=_sds((spec.h, spec.n), jnp.int32),
+        u=_sds((spec.m, C_total), jnp.bfloat16),
+        l=_sds((spec.m, C_total), jnp.bfloat16),
+        bits=_sds((spec.index_buckets or spec.n, W), jnp.uint32),
+        store=vecstore.VecStore(
+            indices=_sds((C_total, spec.max_nnz), jnp.int32),
+            values=_sds((C_total, spec.max_nnz), jnp.bfloat16)),
+        active=_sds((C_total,), jnp.bool_),
+        ids=_sds((C_total,), jnp.int32))
+    state_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                            sharded.state_pspecs(mesh, False),
+                            is_leaf=lambda x: isinstance(x, P))
+    B, Lq = shape["batch"], shape["psi_q"]
+    q_abs = (_sds((B, Lq), jnp.int32), _sds((B, Lq), jnp.float32))
+    qsh = NamedSharding(mesh, P("data"))
+    step = sharded.make_search_step(
+        mesh, spec, k=shape["k"], kprime_local=shape["kprime_local"])
+    # scoring reads ψ_q rows of U and the bitmask per query coordinate
+    flops = B * Lq * (spec.h * 2 + 2) * C_total
+    meta = {"arch_kind": "retrieval_serve", "model_flops": flops,
+            "tokens": B}
+    return CellBundle(step, (state_abs,) + (q_abs[0], q_abs[1]),
+                      (state_sh, qsh, qsh), (), meta)
+
+
+# ---------------------------------------------------------------------------
+
+def build(arch: str, shape_name: str, mesh, rules=None) -> CellBundle:
+    mod = registry.get(arch)
+    shape = mod.SHAPES[shape_name]
+    fam = mod.FAMILY
+    if fam == "lm":
+        return build_lm(mod, shape, mesh, rules)
+    if fam == "gnn":
+        return build_gnn(mod, shape, mesh, rules)
+    if fam == "recsys":
+        return build_recsys(mod, shape, mesh, rules)
+    if fam == "retrieval":
+        return build_retrieval(mod, shape, mesh, rules)
+    raise ValueError(fam)

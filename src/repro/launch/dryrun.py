@@ -1,0 +1,190 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape) cell, lower + compile the step
+function on the production mesh — 16×16 = 256 chips single-pod and
+2×16×16 = 512 chips multi-pod — and record memory_analysis(),
+cost_analysis() and the collective-byte census parsed from the optimized
+HLO.  Failures here (sharding mismatch, OOM at compile, unsupported
+collective) are bugs in the system.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-67b \
+        --shape train_4k [--multi-pod] [--out results.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import numpy as np       # noqa: E402
+
+from repro.configs import registry            # noqa: E402
+from repro.launch import cells                # noqa: E402
+from repro.launch.mesh import make_production_mesh   # noqa: E402
+
+# TPU v5e-class hardware constants (per chip) for the roofline terms.
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(?:\([^)]*\)|(\w+)\[[^\]]*\])?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|"
+                       r"pred|c64|c128|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in optimized HLO.
+
+    Bytes are per-participant (the HLO is the per-device SPMD module), i.e.
+    directly comparable to per-chip link bandwidth.
+    """
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0, "count": 0}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)$", s)
+        if not m:
+            continue
+        rest = m.group(1)
+        cm = re.match(
+            r"^(?:\(|tuple\()?\s*(?:(?:f64|f32|f16|bf16|s64|u64|s32|u32|s16|"
+            r"u16|s8|u8|pred|c64|c128|f8e4m3fn|f8e5m2)\[[0-9,]*\][{}\w,/#\s]*"
+            r",?\s*)+\)?\s*(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)(-start)?\(", rest)
+        if not cm:
+            continue
+        op = cm.group(1)
+        nbytes = 0
+        head = rest.split(cm.group(1))[0]
+        for dt, dims in _SHAPE_RE.findall(head):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[op] += nbytes
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in
+                       ("all-gather", "all-reduce", "reduce-scatter",
+                        "all-to-all", "collective-permute"))
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             rules=None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.time()
+    bundle = cells.build(arch, shape_name, mesh, rules)
+    with mesh:
+        jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                         donate_argnums=bundle.donate_argnums)
+        lowered = jitted.lower(*bundle.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+
+    flops = float(cost.get("flops", 0.0))
+    bytes_hbm = float(cost.get("bytes accessed", 0.0))
+    res = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "ok": True,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        # memory_analysis is per-device for SPMD modules
+        "bytes_per_device": int(getattr(mem, "temp_size_in_bytes", 0)
+                                + getattr(mem, "argument_size_in_bytes", 0)
+                                + getattr(mem, "output_size_in_bytes", 0)
+                                - getattr(mem, "alias_size_in_bytes", 0)),
+        "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+        "arg_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+        # cost_analysis of the SPMD module is per-device
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_hbm,
+        "collective_bytes_per_device": coll["total"],
+        "collectives": coll,
+        # roofline terms (seconds)
+        "t_compute": flops / PEAK_FLOPS,
+        "t_memory": bytes_hbm / HBM_BW,
+        "t_collective": coll["total"] / ICI_BW,
+        "meta": bundle.meta,
+    }
+    terms = {"compute": res["t_compute"], "memory": res["t_memory"],
+             "collective": res["t_collective"]}
+    res["bottleneck"] = max(terms, key=terms.get)
+    mf = bundle.meta.get("model_flops")
+    if mf:
+        res["model_flops"] = mf
+        res["useful_flops_frac"] = (mf / (flops * n_chips)
+                                    if flops else None)
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--include-extra", action="store_true",
+                    help="also run the sinnamon-engine cells")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.all:
+        todo = list(registry.all_cells(include_extra=args.include_extra))
+    else:
+        todo = [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for arch, shape in todo:
+        for mp in meshes:
+            tag = f"{arch}/{shape}/{'2x16x16' if mp else '16x16'}"
+            try:
+                res = run_cell(arch, shape, multi_pod=mp)
+                print(f"[OK]   {tag}: bottleneck={res['bottleneck']} "
+                      f"mem/dev={res['bytes_per_device']/2**30:.2f}GiB "
+                      f"t=({res['t_compute']:.3e},{res['t_memory']:.3e},"
+                      f"{res['t_collective']:.3e})s "
+                      f"compile={res['compile_s']:.0f}s", flush=True)
+            except Exception as e:                     # noqa: BLE001
+                res = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16", "ok": False,
+                       "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+                print(f"[FAIL] {tag}: {type(e).__name__}: {e}", flush=True)
+            results.append(res)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    n_ok = sum(1 for r in results if r.get("ok"))
+    print(f"{n_ok}/{len(results)} cells OK")
+    if n_ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Serving launcher for the retrieval engine: build (or restore) an index,
+then serve batched queries with the anytime budget.
+
+    PYTHONPATH=src python -m repro.launch.serve --docs 10000 --queries 64 \
+        [--budget 16] [--kprime 800] [--index-buckets 2048]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core.engine import EngineSpec, SinnamonIndex
+from repro.core.linscan import brute_force_topk
+from repro.data import synth
+from repro.serving.serve import QueryServer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=10_000)
+    ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--kprime", type=int, default=800)
+    ap.add_argument("--budget", type=int, default=None)
+    ap.add_argument("--m", type=int, default=60)
+    ap.add_argument("--h", type=int, default=1)
+    ap.add_argument("--index-buckets", type=int, default=None)
+    ap.add_argument("--dataset", default="splade_like",
+                    choices=list(synth.DATASETS))
+    args = ap.parse_args()
+
+    ds = synth.DATASETS[args.dataset]
+    idx, val = synth.make_corpus(0, ds, args.docs, pad=256)
+    qi, qv = synth.make_queries(1, ds, args.queries, pad=96)
+    spec = EngineSpec(n=ds.n, m=args.m, h=args.h,
+                      capacity=((args.docs + 31) // 32) * 32, max_nnz=256,
+                      positive_only=ds.nonneg,
+                      index_buckets=args.index_buckets)
+    index = SinnamonIndex(spec)
+    for lo in range(0, args.docs, 2048):
+        hi = min(lo + 2048, args.docs)
+        index.insert_many(list(range(lo, hi)), idx[lo:hi], val[lo:hi])
+    print(f"indexed {index.size} docs; bytes: {index.memory_bytes()}")
+
+    server = QueryServer(index, k=args.k, kprime=args.kprime,
+                         budget=args.budget)
+    recalls = []
+    for b in range(args.queries):
+        ids, _ = server.query(qi[b], qv[b])
+        ids0, _ = brute_force_topk(idx, val, qi[b], qv[b], ds.n, args.k)
+        recalls.append(len(set(ids.tolist()) & set(ids0.tolist())) / args.k)
+    lat = server.latency_percentiles()
+    print(f"recall@{args.k}={np.mean(recalls):.3f}  "
+          f"p50={lat['p50']:.1f}ms p90={lat['p90']:.1f}ms "
+          f"p99={lat['p99']:.1f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,346 @@
+"""EquiformerV2 (arXiv:2306.12059): equivariant graph attention via eSCN
+SO(2) convolutions, adapted TPU-native.
+
+Key adaptations (DESIGN.md §2/§5):
+  * Message passing is **edge-chunked** (lax.scan over fixed-size edge blocks)
+    with a **streaming segment-softmax** — flash-attention-style running
+    (max, denom, numerator) per destination node — so the 61.8M-edge
+    ogb_products cell never materialises per-edge features for the whole
+    graph at once.
+  * Per-edge Wigner matrices come from the closed-form z-y-z factorisation in
+    `repro.models.sh` (two small dense matmuls per degree — O(L³), the eSCN
+    speedup — instead of O(L⁶) Clebsch-Gordan contractions).
+  * Scatter/gather is `jax.ops.segment_*` over edge index lists (JAX-native
+    message passing; no sparse formats needed).
+
+Feature layout: [N, (l_max+1)², C] real spherical-harmonic coefficients,
+degree-l block at rows l²..(l+1)², orders m = −l..l.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import rules as R
+from repro.distributed.rules import L
+from repro.models import sh
+
+Array = jax.Array
+NEG = -2.0 ** 30
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str = "equiformer-v2"
+    n_layers: int = 12
+    c: int = 128                 # hidden channels (d_hidden)
+    l_max: int = 6
+    m_max: int = 2
+    n_heads: int = 8
+    n_rbf: int = 32
+    cutoff: float = 5.0
+    f_in: int = 100              # invariant input features
+    n_out: int = 1               # classes (task=node_class) or 1 (energy)
+    task: str = "node_class"     # node_class | energy_force
+    edge_chunk: int = 8192
+    dtype: str = "float32"
+    remat: bool = True
+
+    @property
+    def k(self) -> int:
+        return sh.num_coef(self.l_max)
+
+
+class GraphBatch(NamedTuple):
+    node_feat: Array     # f32[N, F]
+    edge_src: Array      # int32[E]  (pad = -1)
+    edge_dst: Array      # int32[E]  (pad = -1)
+    edge_vec: Array      # f32[E, 3] relative position of src w.r.t. dst
+    labels: Array        # int32[N] (node_class) / f32[G] energies
+    forces: Array        # f32[N, 3] (energy_force) or zeros
+    graph_id: Array      # int32[N]  molecule id for batched small graphs
+    n_graphs: int = 1
+
+
+def graph_logical_axes() -> GraphBatch:
+    return GraphBatch(
+        node_feat=L("nodes", None),      # "nodes" rule = replicated
+        edge_src=L("edges"), edge_dst=L("edges"),
+        edge_vec=L("edges", None),
+        labels=L("nodes"), forces=L("nodes", None),
+        graph_id=L("nodes"), n_graphs=None,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def _m_indices(l_max: int, m: int) -> np.ndarray:
+    """Coefficient rows of order +m (or −m if m<0) for degrees l ≥ |m|."""
+    return np.array([l * l + l + m for l in range(abs(m), l_max + 1)], np.int32)
+
+
+def init_params(key: Array, cfg: GNNConfig, dtype=jnp.float32) -> Dict[str, Any]:
+    ks = jax.random.split(key, 16)
+    Lr, C, lm = cfg.n_layers, cfg.c, cfg.l_max
+    n0 = lm + 1
+
+    def nrm(k, shape, fan_in):
+        return (jax.random.normal(k, shape, jnp.float32)
+                / math.sqrt(fan_in)).astype(dtype)
+
+    so2 = {"w0": nrm(ks[0], (Lr, n0 * C, n0 * C), n0 * C)}
+    for m in range(1, cfg.m_max + 1):
+        nm = lm + 1 - m
+        so2[f"w{m}r"] = nrm(ks[m], (Lr, nm * C, nm * C), nm * C)
+        so2[f"w{m}i"] = nrm(ks[m + 4], (Lr, nm * C, nm * C), nm * C)
+    layers = {
+        "so2": so2,
+        "rad1": nrm(ks[8], (Lr, cfg.n_rbf, C), cfg.n_rbf),
+        "rad2": nrm(ks[9], (Lr, C, n0), C),
+        "wa1": nrm(ks[10], (Lr, C, C), C),
+        "wa2": nrm(ks[11], (Lr, C, cfg.n_heads), C),
+        "w_out": nrm(ks[12], (Lr, n0, C, C), C),
+        "gate": nrm(ks[13], (Lr, C, (lm) * C), C),
+        "ln": jnp.ones((Lr, n0, C), dtype),
+    }
+    return {
+        "embed_in": nrm(ks[14], (cfg.f_in, C), cfg.f_in),
+        "layers": layers,
+        "ro1": nrm(ks[15], (C, C), C),
+        "ro2": nrm(ks[7], (C, cfg.n_out), C),
+        "force_w": nrm(ks[6], (C, 1), C),
+    }
+
+
+def abstract_params(cfg: GNNConfig, dtype=jnp.float32):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg, dtype))
+
+
+def logical_axes(cfg: GNNConfig) -> Dict[str, Any]:
+    so2 = {"w0": L(None, None, "mlp")}
+    for m in range(1, cfg.m_max + 1):
+        so2[f"w{m}r"] = L(None, None, "mlp")
+        so2[f"w{m}i"] = L(None, None, "mlp")
+    layers = {
+        "so2": so2,
+        "rad1": L(None, None, None), "rad2": L(None, None, None),
+        "wa1": L(None, None, None), "wa2": L(None, None, None),
+        "w_out": L(None, None, None, "mlp"),
+        "gate": L(None, None, "mlp"),
+        "ln": L(None, None, None),
+    }
+    return {"embed_in": L(None, None), "layers": layers,
+            "ro1": L(None, None), "ro2": L(None, None),
+            "force_w": L(None, None)}
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _flat_cmajor(x: Array) -> Array:
+    """[e, n_l, C] -> [e, C*n_l] with (channel-major, degree-minor) rows.
+
+    This layout makes a contiguous shard of the flattened axis equal a
+    channel slice × all degrees — which is exactly what the row-sharded
+    weights of the explicit-shard_map path need (models/gnn_sharded.py).
+    """
+    e, nl, C = x.shape
+    return jnp.swapaxes(x, 1, 2).reshape(e, C * nl)
+
+
+def _unflat_cmajor(x: Array, nl: int) -> Array:
+    e = x.shape[0]
+    return jnp.swapaxes(x.reshape(e, -1, nl), 1, 2)    # [e, nl, C]
+
+
+def so2_conv(fr: Array, lp_so2: Dict[str, Array], cfg: GNNConfig) -> Array:
+    """eSCN SO(2) linear layer in the edge-aligned frame.  fr: [e, K, C]."""
+    e, K, C = fr.shape
+    lm = cfg.l_max
+    out = jnp.zeros_like(fr)
+    # m = 0
+    i0 = jnp.asarray(_m_indices(lm, 0))
+    f0 = _flat_cmajor(fr[:, i0, :])
+    o0 = _unflat_cmajor(f0 @ lp_so2["w0"].astype(fr.dtype), lm + 1)
+    out = out.at[:, i0, :].set(o0)
+    # m = 1..m_max: rotation-equivariant 2×2 complex-style mixing
+    for m in range(1, cfg.m_max + 1):
+        ip = jnp.asarray(_m_indices(lm, m))
+        im = jnp.asarray(_m_indices(lm, -m))
+        cm = _flat_cmajor(fr[:, ip, :])
+        sm = _flat_cmajor(fr[:, im, :])
+        wr = lp_so2[f"w{m}r"].astype(fr.dtype)
+        wi = lp_so2[f"w{m}i"].astype(fr.dtype)
+        nm = lm + 1 - m
+        out = out.at[:, ip, :].set(_unflat_cmajor(cm @ wr - sm @ wi, nm))
+        out = out.at[:, im, :].set(_unflat_cmajor(cm @ wi + sm @ wr, nm))
+    # orders |m| > m_max stay zero (eSCN truncation)
+    return out
+
+
+def _rbf(r: Array, cfg: GNNConfig) -> Array:
+    mu = jnp.linspace(0.0, cfg.cutoff, cfg.n_rbf)
+    sig = cfg.cutoff / cfg.n_rbf
+    return jnp.exp(-((r[..., None] - mu) / sig) ** 2)
+
+
+def _per_l_expand(per_l: Array, l_max: int) -> Array:
+    """[..., l_max+1] per-degree values → [..., (l_max+1)²] per-coefficient."""
+    reps = np.repeat(np.arange(l_max + 1), [2 * l + 1 for l in range(l_max + 1)])
+    return per_l[..., jnp.asarray(reps)]
+
+
+def mp_layer(lp, f: Array, g: GraphBatch, cfg: GNNConfig,
+             mesh=None, rules=None) -> Array:
+    """One message-passing block with streaming segment softmax."""
+    N, K, C = f.shape
+    H = cfg.n_heads
+    Ch = C // H
+    E = g.edge_src.shape[0]
+    chunk = min(cfg.edge_chunk, E)
+    while E % chunk != 0:
+        chunk -= 1
+    nch = E // chunk
+
+    resh = lambda x: x.reshape((nch, chunk) + x.shape[1:])
+    xs = (resh(g.edge_src), resh(g.edge_dst), resh(g.edge_vec))
+
+    def chunk_fn(carry, inp):
+        M, Z, acc = carry
+        src, dst, vec = inp
+        valid = src >= 0
+        s_src = jnp.where(valid, src, 0)
+        s_dst = jnp.where(valid, dst, 0)
+        fs = f[s_src]                                         # [e, K, C]
+        if mesh is not None:
+            fs = R.constrain(fs, mesh, ("edges", None, "gnn_c"), rules)
+        blocks = sh.wigner_blocks(cfg.l_max, vec)
+        fr = sh.apply_blocks(blocks, fs)
+        conv = so2_conv(fr, lp["so2"], cfg)                   # [e, K, C]
+        r = jnp.linalg.norm(vec, axis=-1)
+        gate = jax.nn.silu(_rbf(r, cfg) @ lp["rad1"]) @ lp["rad2"]  # [e, l+1]
+        conv = conv * _per_l_expand(gate, cfg.l_max)[..., None]
+        inv = conv[:, 0, :]                                   # [e, C] (l=0)
+        logits = jax.nn.silu(inv @ lp["wa1"]) @ lp["wa2"]     # [e, H]
+        logits = jnp.where(valid[:, None], logits, NEG)
+        msg = sh.apply_blocks(blocks, conv, transpose=True)   # back to global
+        msg = msg.reshape(-1, K, H, Ch)
+
+        mloc = jax.ops.segment_max(logits, s_dst, num_segments=N)
+        M_new = jnp.maximum(M, mloc)
+        scale = jnp.exp(jnp.minimum(M - M_new, 0.0))
+        p = jnp.where(valid[:, None],
+                      jnp.exp(logits - M_new[s_dst]), 0.0)    # [e, H]
+        Z = Z * scale + jax.ops.segment_sum(p, s_dst, num_segments=N)
+        acc = (acc * scale[:, None, :, None]
+               + jax.ops.segment_sum(msg * p[:, None, :, None], s_dst,
+                                     num_segments=N))
+        if mesh is not None:
+            # node accumulators: node axis replicated, channels model-sharded
+            acc = R.constrain(acc, mesh, (None, None, None, "gnn_c"), rules)
+        return (M_new, Z, acc), None
+
+    M0 = jnp.full((N, H), NEG, jnp.float32)
+    Z0 = jnp.zeros((N, H), jnp.float32)
+    A0 = jnp.zeros((N, K, H, Ch), f.dtype)
+    body = jax.checkpoint(chunk_fn) if cfg.remat else chunk_fn
+    (M, Z, acc), _ = jax.lax.scan(body, (M0, Z0, A0), xs)
+    out = (acc / jnp.maximum(Z, 1e-30)[:, None, :, None]).reshape(N, K, C)
+
+    # per-degree output mixing + residual
+    f = f + _per_l_linear(out, lp["w_out"], cfg)
+
+    # equivariant layer norm (per-degree RMS) + gated nonlinearity
+    f = _equivariant_ln(f, lp["ln"], cfg)
+    gates = jax.nn.sigmoid(f[:, 0, :] @ lp["gate"])           # [N, lm*C]
+    gates = gates.reshape(N, cfg.l_max, C)
+    scal = jax.nn.silu(f[:, 0, :])
+    rest = f[:, 1:, :] * _per_l_expand_high(gates, cfg.l_max)
+    f = jnp.concatenate([scal[:, None, :], rest], axis=1)
+    if mesh is not None:
+        f = R.constrain(f, mesh, (None, None, "gnn_c"), rules)
+    return f
+
+
+def _per_l_linear(x: Array, w: Array, cfg: GNNConfig) -> Array:
+    outs = [x[:, sh.l_slice(l), :] @ w[l].astype(x.dtype)
+            for l in range(cfg.l_max + 1)]
+    return jnp.concatenate(outs, axis=1)
+
+
+def _per_l_expand_high(gates: Array, l_max: int) -> Array:
+    """[N, l_max, C] per-degree gates → [N, (l_max+1)²−1, C] (degrees ≥ 1)."""
+    reps = np.repeat(np.arange(l_max), [2 * (l + 1) + 1 for l in range(l_max)])
+    return gates[:, jnp.asarray(reps), :]
+
+
+def _equivariant_ln(f: Array, scales: Array, cfg: GNNConfig) -> Array:
+    outs = []
+    for l in range(cfg.l_max + 1):
+        blk = f[:, sh.l_slice(l), :]
+        rms = jnp.sqrt(jnp.mean(blk.astype(jnp.float32) ** 2,
+                                axis=(1, 2), keepdims=True) + 1e-6)
+        outs.append((blk / rms.astype(blk.dtype))
+                    * scales[l].astype(blk.dtype))
+    return jnp.concatenate(outs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+def forward(params, g: GraphBatch, cfg: GNNConfig, mesh=None, rules=None):
+    N = g.node_feat.shape[0]
+    f = jnp.zeros((N, cfg.k, cfg.c), jnp.dtype(cfg.dtype))
+    f = f.at[:, 0, :].set(
+        (g.node_feat.astype(jnp.float32) @ params["embed_in"]
+         ).astype(f.dtype))
+    if mesh is not None:
+        f = R.constrain(f, mesh, (None, None, "gnn_c"), rules)
+
+    def layer_fn(f, lp):
+        return mp_layer(lp, f, g, cfg, mesh, rules), None
+
+    body = jax.checkpoint(layer_fn) if cfg.remat else layer_fn
+    f, _ = jax.lax.scan(body, f, params["layers"])
+    return f
+
+
+def predict(params, g: GraphBatch, cfg: GNNConfig, mesh=None, rules=None):
+    f = forward(params, g, cfg, mesh, rules)
+    inv = f[:, 0, :].astype(jnp.float32)
+    h = jax.nn.silu(inv @ params["ro1"])
+    out = h @ params["ro2"]                                    # [N, n_out]
+    if cfg.task == "energy_force":
+        energy = jax.ops.segment_sum(out[:, 0], g.graph_id,
+                                     num_segments=g.n_graphs)
+        forces = (f[:, 1:4, :].astype(jnp.float32)
+                  @ params["force_w"])[..., 0]                 # [N, 3]
+        return energy, forces
+    return out                                                 # node logits
+
+
+def loss_fn(params, g: GraphBatch, cfg: GNNConfig, mesh=None, rules=None):
+    if cfg.task == "energy_force":
+        energy, forces = predict(params, g, cfg, mesh, rules)
+        le = jnp.mean((energy - g.labels.astype(jnp.float32)) ** 2)
+        lf = jnp.mean((forces - g.forces) ** 2)
+        return le + 10.0 * lf, {"energy_mse": le, "force_mse": lf}
+    logits = predict(params, g, cfg, mesh, rules)
+    valid = g.labels >= 0
+    labels = jnp.where(valid, g.labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    xent = jnp.sum(jnp.where(valid, lse - gold, 0.0)) / jnp.maximum(
+        valid.sum(), 1)
+    return xent, {"xent": xent}

@@ -1,0 +1,280 @@
+"""Shared transformer layers: RMSNorm, RoPE, blockwise (flash-style)
+attention with GQA + sliding-window support, SwiGLU MLP, and a GShard-style
+top-k MoE layer with capacity-based dispatch (EP-shardable).
+
+Everything is pure-functional jnp over explicit parameter pytrees; sharding
+is expressed through `repro.distributed.rules.constrain` calls that no-op on
+single-device meshes.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import rules as R
+
+Array = jax.Array
+
+NEG_BIG = -2.0 ** 30  # finite mask sentinel (NaN-safe running-max math)
+
+
+# ---------------------------------------------------------------------------
+# Norms & positional encoding
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: Array, positions: Array, theta: float = 10_000.0) -> Array:
+    """Rotary embedding.  x: [..., S, H, D] (D even), positions: [..., S]."""
+    d = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, d // 2, dtype=jnp.float32) / (d // 2))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs     # [..., S, D/2]
+    cos = jnp.cos(ang)[..., :, None, :]                           # [..., S, 1, D/2]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise attention (jnp flash-attention: O(q_chunk·kv_chunk) score memory)
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(x: Array, H: int) -> Array:
+    """[B, S, KV, D] -> [B, S, H, D] by broadcasting each KV head G times.
+
+    Keeping the head axis *flat* (H = KV·G) lets GSPMD shard it over 'model'
+    even when KV alone doesn't divide the axis size — the broadcast is free
+    under sharding (per-chip bytes equal the unrepeated-replicated layout).
+    """
+    B, S, KV, D = x.shape
+    G = H // KV
+    return jnp.broadcast_to(x[:, :, :, None, :], (B, S, KV, G, D)
+                            ).reshape(B, S, H, D)
+
+
+def _mask(q_pos, k_pos, causal, window, kv_len):
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        w = jnp.asarray(window)
+        m &= jnp.where(w > 0, k_pos[None, :] > q_pos[:, None] - w, True)
+    if kv_len is not None:
+        m &= (k_pos < kv_len)[None, :]
+    return m
+
+
+def blockwise_attention(
+    q: Array,                  # [B, Sq, H, D]
+    k: Array,                  # [B, Sk, KV, D]
+    v: Array,                  # [B, Sk, KV, D]
+    *,
+    causal: bool = True,
+    window: Optional[Array] = None,   # tokens of lookback (None/0 = unlimited)
+    q_offset=0,                # absolute position of q[0]
+    kv_len: Optional[Array] = None,   # valid cache length (decode), else Sk
+    chunk: int = 512,
+    q_chunk: int = 1024,
+    mesh=None, rules=None,
+) -> Array:
+    """Numerically-stable doubly-chunked attention with GQA.
+
+    Outer scan over query chunks, inner scan over KV chunks with running
+    (max, denom, acc).  KV heads are broadcast to the flat H axis *per KV
+    chunk* (never materialising the repeated cache), so peak score memory is
+    [B, q_chunk, H, chunk] — head-shardable over 'model' because H is flat.
+    Returns [B, Sq, H, D].
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    chunk = min(chunk, Sk)
+    while Sk % chunk != 0:   # static shapes: largest divisor ≤ chunk
+        chunk -= 1
+    q_chunk = min(q_chunk, Sq)
+    while Sq % q_chunk != 0:
+        q_chunk -= 1
+    scale = 1.0 / math.sqrt(D)
+
+    kc = jnp.moveaxis(k.reshape(B, Sk // chunk, chunk, k.shape[2], D), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, Sk // chunk, chunk, v.shape[2], D), 1, 0)
+    k_starts = jnp.arange(Sk // chunk) * chunk
+    qc = jnp.moveaxis(
+        (q.astype(jnp.float32) * scale).reshape(B, Sq // q_chunk, q_chunk,
+                                                H, D), 1, 0)
+    q_starts = q_offset + jnp.arange(Sq // q_chunk) * q_chunk
+
+    @jax.checkpoint
+    def q_step(_, q_in):
+        qb, q0 = q_in
+        q_pos = q0 + jnp.arange(q_chunk)
+
+        def kv_step(carry, kv_in):
+            m, l, acc = carry
+            kb, vb, k0 = kv_in
+            kbf = _repeat_kv(kb, H).astype(jnp.float32)   # per-chunk only
+            vbf = _repeat_kv(vb, H).astype(jnp.float32)
+            s = jnp.einsum("bqhd,bchd->bqhc", qb, kbf)    # [B, qc, H, chunk]
+            if mesh is not None:
+                s = R.constrain(s, mesh, ("batch", None, "heads", None),
+                                rules)
+            msk = _mask(q_pos, k0 + jnp.arange(chunk), causal, window,
+                        kv_len)[None, :, None, :]
+            s = jnp.where(msk, s, NEG_BIG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.where(msk, jnp.exp(s - m_new[..., None]), 0.0)
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bqhc,bchd->bqhd", p, vbf)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, q_chunk, H), NEG_BIG, jnp.float32)
+        l0 = jnp.zeros((B, q_chunk, H), jnp.float32)
+        a0 = jnp.zeros((B, q_chunk, H, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (kc, vc, k_starts))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out
+
+    _, outs = jax.lax.scan(q_step, None, (qc, q_starts))   # [nq, B, qc, H, D]
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, D)
+    if mesh is not None:
+        out = R.constrain(out, mesh, ("batch", None, "heads", None), rules)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: Array,                  # [B, 1, H, D]
+    k: Array,                  # [B, KV, Sk, D]  (cache layout: heads major)
+    v: Array,
+    *,
+    window: Optional[Array] = None,
+    kv_len: Optional[Array] = None,   # valid cache entries (≤ Sk)
+    q_offset=0,                       # position of the query token
+    mesh=None, rules=None,
+) -> Array:
+    """Single-position attention against a (possibly sharded) KV cache.
+
+    Grouped einsum — the KV cache is never repeated/materialised; scores are
+    [B, Sq, KV, G, Sk] and a softmax over a seq-sharded cache axis lowers to
+    a pair of small all-reduces under GSPMD.
+    """
+    B, Sq, H, D = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Sq, KV, G, D)
+    s = jnp.einsum("bqkgd,bksd->bqkgs", qg, k,
+                   preferred_element_type=jnp.float32)
+    q_pos = q_offset + jnp.arange(Sq)
+    msk = _mask(q_pos, jnp.arange(Sk), True, window,
+                kv_len)[None, :, None, None, :]
+    s = jnp.where(msk, s, NEG_BIG)
+    p = jnp.where(msk, jax.nn.softmax(s, axis=-1), 0.0)
+    out = jnp.einsum("bqkgs,bksd->bqkgd", p, v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_mlp(x: Array, wi: Array, wg: Array, wo: Array,
+               mesh=None, rules=None) -> Array:
+    h = jnp.einsum("...d,df->...f", x, wi.astype(x.dtype))
+    g = jnp.einsum("...d,df->...f", x, wg.astype(x.dtype))
+    h = jax.nn.silu(g) * h
+    if mesh is not None:
+        # NB: constraint dims marked None are REPLICATED — batch must be named
+        h = R.constrain(h, mesh,
+                        ("batch",) + (None,) * (h.ndim - 2) + ("mlp",), rules)
+    out = jnp.einsum("...f,fd->...d", h, wo.astype(x.dtype))
+    if mesh is not None:
+        # Megatron-SP: block outputs are seq-FULL here (the layer-end
+        # constraint reduce-scatters back to act_seq).  Pinning this keeps
+        # the wo weight-grad contraction token-local + psum(data) instead of
+        # an fp32 batch-axis all-gather of the cotangent (see DESIGN.md §4).
+        out = R.constrain(out, mesh,
+                          ("batch",) + (None,) * (out.ndim - 1), rules)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GShard-style top-k MoE with capacity dispatch (expert-parallel shardable)
+# ---------------------------------------------------------------------------
+
+def moe_layer(
+    x: Array,                  # [B, S, d]
+    router: Array,             # [d, E]
+    wi: Array, wg: Array,      # [E, d, f]
+    wo: Array,                 # [E, f, d]
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    group_size: int = 4096,
+    mesh=None, rules=None,
+):
+    """Returns (y [B, S, d], aux_loss scalar)."""
+    B, S, d = x.shape
+    E = router.shape[-1]
+    T = B * S
+    g = min(group_size, T)
+    assert T % g == 0, (T, g)
+    G = T // g
+    xt = x.reshape(G, g, d)
+    if mesh is not None:
+        xt = R.constrain(xt, mesh, ("group", "act_seq", None), rules)
+
+    logits = jnp.einsum("Gtd,de->Gte", xt.astype(jnp.float32),
+                        router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # [G, g, E]
+    top_p, top_e = jax.lax.top_k(probs, top_k)                 # [G, g, k]
+    gates = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(math.ceil(g * top_k / E * capacity_factor / 4.0) * 4)
+    cap = min(cap, g)
+
+    count = jnp.zeros((G, 1, E), jnp.float32)
+    dispatch = jnp.zeros((G, g, E, cap), x.dtype)
+    combine = jnp.zeros((G, g, E, cap), jnp.float32)
+    for r in range(top_k):
+        oh = jax.nn.one_hot(top_e[..., r], E, dtype=jnp.float32)   # [G, g, E]
+        pos = jnp.cumsum(oh, axis=1) - oh + count                  # [G, g, E]
+        pos_t = (pos * oh).sum(-1)                                 # [G, g]
+        count = count + oh.sum(axis=1, keepdims=True)
+        keep = pos_t < cap
+        slot = jax.nn.one_hot(pos_t, cap, dtype=jnp.float32)       # [G, g, cap]
+        d_r = (oh[..., None] * slot[..., None, :]
+               * keep[..., None, None])                            # [G,g,E,cap]
+        dispatch = dispatch + d_r.astype(x.dtype)
+        combine = combine + d_r * gates[..., r][..., None, None]
+
+    disp_x = jnp.einsum("gtec,gtd->gecd", dispatch, xt)            # [G,E,cap,d]
+    if mesh is not None:
+        disp_x = R.constrain(disp_x, mesh, ("group", "expert", None, None),
+                             rules)
+    h = jnp.einsum("gecd,edf->gecf", disp_x, wi.astype(x.dtype))
+    u = jnp.einsum("gecd,edf->gecf", disp_x, wg.astype(x.dtype))
+    h = jax.nn.silu(u) * h
+    eo = jnp.einsum("gecf,efd->gecd", h, wo.astype(x.dtype))
+    if mesh is not None:
+        eo = R.constrain(eo, mesh, ("group", "expert", None, None), rules)
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), eo)
+
+    # Switch-style load-balance auxiliary loss.
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_e[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    mean_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * mean_probs)
+    return y.reshape(B, S, d), aux

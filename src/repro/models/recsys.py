@@ -1,0 +1,441 @@
+"""RecSys architectures: dlrm-rm2, din, sasrec, mind.
+
+Shared substrate: stacked hashed embedding tables with an EmbeddingBag built
+from ``jnp.take`` + masked reduction (JAX has no native EmbeddingBag — the
+Pallas variant lives in repro.kernels.embed_bag; this jnp path is the
+differentiable reference the tables train through).
+
+Every model exposes:
+    init_params / abstract_params / logical_axes
+    loss(params, batch)                      — training objective
+    score(params, batch)                     — pointwise serving (CTR / next-item)
+    user_repr(params, batch) / item_embeddings(params)
+                                             — the MIPS retrieval factorisation
+The ``retrieval_cand`` shape is exactly the paper's MIPS problem: a batched
+dot of user_repr against the candidate table (dense path), or the Sinnamon
+engine over sparsified item vectors (see examples/recsys_retrieval.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import rules as R
+from repro.distributed.rules import L
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    model: str                    # dlrm | din | sasrec | mind
+    embed_dim: int = 64
+    n_items: int = 1_000_000      # item vocabulary (retrieval candidates)
+    # dlrm
+    n_dense: int = 13
+    n_sparse: int = 26
+    vocab_per_field: int = 1_000_000
+    multi_hot: int = 4            # lookups per sparse field (embedding bag)
+    bot_mlp: tuple = (512, 256, 64)
+    top_mlp: tuple = (512, 512, 256, 1)
+    # din
+    seq_len: int = 100
+    attn_mlp: tuple = (80, 40)
+    mlp: tuple = (200, 80)
+    # sasrec
+    n_blocks: int = 2
+    n_heads: int = 1
+    # mind
+    n_interests: int = 4
+    capsule_iters: int = 3
+    dtype: str = "float32"
+
+
+class RecsysBatch(NamedTuple):
+    dense: Array      # f32[B, n_dense]            (dlrm; zeros otherwise)
+    sparse: Array     # int32[B, n_sparse, hot]    (dlrm; pad = -1)
+    hist: Array       # int32[B, seq_len]          (din/sasrec/mind; pad = -1)
+    target: Array     # int32[B]                   target item
+    labels: Array     # f32[B]                     click labels
+
+
+def batch_logical_axes() -> RecsysBatch:
+    return RecsysBatch(dense=L("batch", None), sparse=L("batch", None, None),
+                       hist=L("batch", None), target=L("batch"),
+                       labels=L("batch"))
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+def _mlp_params(key, dims, dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    out = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        out[f"w{i}"] = (jax.random.normal(ks[i], (a, b), jnp.float32)
+                        / math.sqrt(a)).astype(dtype)
+        out[f"b{i}"] = jnp.zeros((b,), dtype)
+    return out
+
+
+def _mlp_axes(dims):
+    out = {}
+    for i in range(len(dims) - 1):
+        out[f"w{i}"] = L(None, None)
+        out[f"b{i}"] = L(None)
+    return out
+
+
+def _mlp(p, x, n, act=jax.nn.relu, final_act=False):
+    for i in range(n):
+        x = x @ p[f"w{i}"].astype(x.dtype) + p[f"b{i}"].astype(x.dtype)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def embedding_bag(table: Array, idx: Array, mode: str = "sum") -> Array:
+    """[..., hot] indices (pad=-1) into [V, D] table → [..., D]."""
+    valid = idx >= 0
+    rows = jnp.take(table, jnp.where(valid, idx, 0), axis=0)
+    rows = jnp.where(valid[..., None], rows, 0)
+    out = rows.sum(axis=-2)
+    if mode == "mean":
+        out = out / jnp.maximum(valid.sum(-1, keepdims=True), 1)
+    return out
+
+
+def _bce(logit: Array, label: Array) -> Array:
+    return jnp.mean(jnp.maximum(logit, 0) - logit * label
+                    + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
+# ---------------------------------------------------------------------------
+# DLRM (arXiv:1906.00091) — rm2 config
+# ---------------------------------------------------------------------------
+
+def _dlrm_init(key, cfg, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    D = cfg.embed_dim
+    tables = (jax.random.normal(
+        k1, (cfg.n_sparse, cfg.vocab_per_field, D), jnp.float32)
+        / math.sqrt(D)).astype(dtype)
+    bot_dims = (cfg.n_dense,) + cfg.bot_mlp
+    n_f = cfg.n_sparse + 1
+    top_in = cfg.bot_mlp[-1] + n_f * (n_f - 1) // 2
+    top_dims = (top_in,) + cfg.top_mlp
+    return {"tables": tables,
+            "bot": _mlp_params(k2, bot_dims, dtype),
+            "top": _mlp_params(k3, top_dims, dtype)}
+
+
+def _dlrm_axes(cfg):
+    return {"tables": L("fields", "table_rows", None),
+            "bot": _mlp_axes((cfg.n_dense,) + cfg.bot_mlp),
+            "top": _mlp_axes((0,) + cfg.top_mlp)}
+
+
+def _dlrm_features(p, batch, cfg, mesh=None, rules=None):
+    B = batch.dense.shape[0]
+    x0 = _mlp(p["bot"], batch.dense.astype(p["tables"].dtype),
+              len(cfg.bot_mlp), final_act=True)                 # [B, D]
+    lookup = jax.vmap(embedding_bag, in_axes=(0, 1), out_axes=1)
+    emb = lookup(p["tables"], batch.sparse)                     # [B, F, D]
+    if mesh is not None:
+        emb = R.constrain(emb, mesh, ("batch", None, None), rules)
+    return x0, emb
+
+
+def _dlrm_score(p, batch, cfg, mesh=None, rules=None):
+    x0, emb = _dlrm_features(p, batch, cfg, mesh, rules)
+    vecs = jnp.concatenate([x0[:, None, :], emb], axis=1)       # [B, F+1, D]
+    gram = jnp.einsum("bfd,bgd->bfg", vecs, vecs)
+    iu, ju = np.triu_indices(vecs.shape[1], k=1)
+    inter = gram[:, jnp.asarray(iu), jnp.asarray(ju)]           # [B, F(F+1)/2]
+    top_in = jnp.concatenate([x0, inter], axis=-1)
+    return _mlp(p["top"], top_in, len(cfg.top_mlp))[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# DIN (arXiv:1706.06978)
+# ---------------------------------------------------------------------------
+
+def _din_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    D = cfg.embed_dim
+    table = (jax.random.normal(k1, (cfg.n_items, D), jnp.float32)
+             / math.sqrt(D)).astype(dtype)
+    attn_dims = (4 * D,) + cfg.attn_mlp + (1,)
+    mlp_dims = (2 * D,) + cfg.mlp + (1,)
+    return {"table": table,
+            "attn": _mlp_params(k2, attn_dims, dtype),
+            "mlp": _mlp_params(k3, mlp_dims, dtype)}
+
+
+def _din_axes(cfg):
+    return {"table": L("table_rows", None),
+            "attn": _mlp_axes((0,) + cfg.attn_mlp + (1,)),
+            "mlp": _mlp_axes((0,) + cfg.mlp + (1,))}
+
+
+def _din_user(p, batch, cfg):
+    """Target-attention pooled user interest vector."""
+    valid = batch.hist >= 0
+    eh = jnp.take(p["table"], jnp.where(valid, batch.hist, 0), axis=0)
+    eh = jnp.where(valid[..., None], eh, 0)                     # [B, S, D]
+    et = jnp.take(p["table"], batch.target, axis=0)             # [B, D]
+    etb = jnp.broadcast_to(et[:, None, :], eh.shape)
+    a_in = jnp.concatenate([eh, etb, eh * etb, eh - etb], axis=-1)
+    logits = _mlp(p["attn"], a_in, len(cfg.attn_mlp) + 1)[..., 0]
+    logits = jnp.where(valid, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bs,bsd->bd", w, eh), et
+
+
+def _din_score(p, batch, cfg, mesh=None, rules=None):
+    u, et = _din_user(p, batch, cfg)
+    x = jnp.concatenate([u, et], axis=-1)
+    return _mlp(p["mlp"], x, len(cfg.mlp) + 1)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# SASRec (arXiv:1808.09781)
+# ---------------------------------------------------------------------------
+
+def _sasrec_init(key, cfg, dtype):
+    ks = jax.random.split(key, 4 + cfg.n_blocks)
+    D = cfg.embed_dim
+    table = (jax.random.normal(ks[0], (cfg.n_items, D), jnp.float32)
+             / math.sqrt(D)).astype(dtype)
+    pos = (jax.random.normal(ks[1], (cfg.seq_len, D), jnp.float32)
+           * 0.02).astype(dtype)
+    blocks = []
+    for b in range(cfg.n_blocks):
+        kb = jax.random.split(ks[2 + b], 6)
+        s = 1 / math.sqrt(D)
+        blocks.append({
+            "wq": (jax.random.normal(kb[0], (D, D)) * s).astype(dtype),
+            "wk": (jax.random.normal(kb[1], (D, D)) * s).astype(dtype),
+            "wv": (jax.random.normal(kb[2], (D, D)) * s).astype(dtype),
+            "ln1": jnp.ones((D,), dtype), "ln2": jnp.ones((D,), dtype),
+            "f1": (jax.random.normal(kb[3], (D, D)) * s).astype(dtype),
+            "f2": (jax.random.normal(kb[4], (D, D)) * s).astype(dtype),
+        })
+    blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    return {"table": table, "pos": pos, "blocks": blocks,
+            "ln_f": jnp.ones((D,), dtype)}
+
+
+def _sasrec_axes(cfg):
+    blk = {"wq": L(None, None, None), "wk": L(None, None, None),
+           "wv": L(None, None, None), "ln1": L(None, None),
+           "ln2": L(None, None), "f1": L(None, None, None),
+           "f2": L(None, None, None)}
+    return {"table": L("table_rows", None), "pos": L(None, None),
+            "blocks": blk, "ln_f": L(None)}
+
+
+def _ln(x, s, eps=1e-6):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * s
+
+
+def _sasrec_hidden(p, hist, cfg):
+    valid = hist >= 0
+    x = jnp.take(p["table"], jnp.where(valid, hist, 0), axis=0)
+    x = jnp.where(valid[..., None], x, 0) + p["pos"][None]
+    S = hist.shape[1]
+    causal = jnp.tril(jnp.ones((S, S), bool))
+
+    def block(x, bp):
+        h = _ln(x, bp["ln1"])
+        q, k, v = h @ bp["wq"], h @ bp["wk"], h @ bp["wv"]
+        s = jnp.einsum("bqd,bkd->bqk", q, k) / math.sqrt(q.shape[-1])
+        s = jnp.where(causal[None] & valid[:, None, :], s, -1e30)
+        x = x + jnp.einsum("bqk,bkd->bqd", jax.nn.softmax(s, axis=-1), v)
+        h = _ln(x, bp["ln2"])
+        x = x + jax.nn.relu(h @ bp["f1"]) @ bp["f2"]
+        return x, None
+
+    x, _ = jax.lax.scan(block, x, p["blocks"])
+    return _ln(x, p["ln_f"]) * valid[..., None]
+
+
+def _sasrec_user(p, batch, cfg):
+    return _sasrec_hidden(p, batch.hist, cfg)[:, -1, :]
+
+
+def _sasrec_loss(p, batch, cfg, key=None, mesh=None, rules=None):
+    """Next-item BCE with one uniform negative per position (the paper's)."""
+    hist = batch.hist
+    # positions 0..S-2 predict items at 1..S-1 (teacher forcing)
+    h = _sasrec_hidden(p, hist, cfg)[:, :-1, :]
+    pos_items = hist[:, 1:]
+    valid = pos_items >= 0
+    pe = jnp.take(p["table"], jnp.where(valid, pos_items, 0), axis=0)
+    neg_items = ((pos_items.astype(jnp.uint32) * jnp.uint32(2654435761)
+                  + jnp.uint32(12345)) % jnp.uint32(cfg.n_items)
+                 ).astype(jnp.int32)
+    ne = jnp.take(p["table"], neg_items, axis=0)
+    lp = jnp.einsum("bsd,bsd->bs", h, pe)
+    ln_ = jnp.einsum("bsd,bsd->bs", h, ne)
+    per = (jnp.log1p(jnp.exp(-lp)) + jnp.log1p(jnp.exp(ln_)))
+    return jnp.sum(jnp.where(valid, per, 0)) / jnp.maximum(valid.sum(), 1)
+
+
+# ---------------------------------------------------------------------------
+# MIND (arXiv:1904.08030) — multi-interest dynamic routing
+# ---------------------------------------------------------------------------
+
+def _mind_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    D = cfg.embed_dim
+    table = (jax.random.normal(k1, (cfg.n_items, D), jnp.float32)
+             / math.sqrt(D)).astype(dtype)
+    bilinear = (jax.random.normal(k2, (D, D), jnp.float32)
+                / math.sqrt(D)).astype(dtype)
+    binit = (jax.random.normal(k3, (cfg.n_interests, cfg.seq_len),
+                               jnp.float32)).astype(dtype)
+    return {"table": table, "bilinear": bilinear, "b_init": binit}
+
+
+def _mind_axes(cfg):
+    return {"table": L("table_rows", None), "bilinear": L(None, None),
+            "b_init": L(None, None)}
+
+
+def _squash(x, axis=-1):
+    n2 = jnp.sum(x * x, axis=axis, keepdims=True)
+    return (n2 / (1 + n2)) * x / jnp.sqrt(n2 + 1e-9)
+
+
+def _mind_interests(p, hist, cfg):
+    """B2I dynamic routing → [B, K, D] interest capsules."""
+    valid = hist >= 0
+    e = jnp.take(p["table"], jnp.where(valid, hist, 0), axis=0)
+    e = jnp.where(valid[..., None], e, 0)                    # [B, S, D]
+    el = e @ p["bilinear"]                                   # shared S matrix
+    b = jnp.broadcast_to(p["b_init"][None], (e.shape[0],) + p["b_init"].shape)
+    caps = None
+    for _ in range(cfg.capsule_iters):
+        w = jax.nn.softmax(b, axis=1)                        # over K interests
+        w = jnp.where(valid[:, None, :], w, 0)
+        caps = _squash(jnp.einsum("bks,bsd->bkd", w, el))
+        b = b + jnp.einsum("bkd,bsd->bks", caps, el)
+    return caps                                               # [B, K, D]
+
+
+def _mind_loss(p, batch, cfg, key=None, mesh=None, rules=None):
+    """Label-aware attention + sampled softmax against uniform negatives."""
+    caps = _mind_interests(p, batch.hist, cfg)               # [B, K, D]
+    et = jnp.take(p["table"], batch.target, axis=0)          # [B, D]
+    att = jax.nn.softmax(jnp.einsum("bkd,bd->bk", caps, et) * 2.0, axis=-1)
+    u = jnp.einsum("bk,bkd->bd", att, caps)
+    n_neg = 64
+    neg = (((batch.target[:, None].astype(jnp.uint32) + jnp.uint32(1))
+            * jnp.arange(1, n_neg + 1, dtype=jnp.uint32)
+            * jnp.uint32(2654435761)) % jnp.uint32(cfg.n_items)
+           ).astype(jnp.int32)                               # [B, n_neg]
+    en = jnp.take(p["table"], neg, axis=0)                   # [B, n_neg, D]
+    lp = jnp.einsum("bd,bd->b", u, et)
+    ln_ = jnp.einsum("bd,bnd->bn", u, en)
+    logits = jnp.concatenate([lp[:, None], ln_], axis=1)
+    return jnp.mean(jax.nn.logsumexp(logits, -1) - lp)
+
+
+def _mind_user(p, batch, cfg):
+    """Serving: strongest interest per user (retrieval uses max over K)."""
+    caps = _mind_interests(p, batch.hist, cfg)
+    norms = jnp.linalg.norm(caps, axis=-1)
+    best = jnp.argmax(norms, axis=-1)
+    return jnp.take_along_axis(caps, best[:, None, None], axis=1)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Dispatch table
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: RecsysConfig, dtype=None):
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    return {"dlrm": _dlrm_init, "din": _din_init,
+            "sasrec": _sasrec_init, "mind": _mind_init}[cfg.model](
+        key, cfg, dtype)
+
+
+def abstract_params(cfg: RecsysConfig, dtype=None):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg,
+                                              dtype))
+
+
+def logical_axes(cfg: RecsysConfig):
+    return {"dlrm": _dlrm_axes, "din": _din_axes,
+            "sasrec": _sasrec_axes, "mind": _mind_axes}[cfg.model](cfg)
+
+
+def score(params, batch: RecsysBatch, cfg: RecsysConfig, mesh=None,
+          rules=None) -> Array:
+    """Pointwise serving logit [B] (CTR for dlrm/din; u·target for seq models)."""
+    if cfg.model == "dlrm":
+        return _dlrm_score(params, batch, cfg, mesh, rules)
+    if cfg.model == "din":
+        return _din_score(params, batch, cfg, mesh, rules)
+    u = user_repr(params, batch, cfg)
+    et = jnp.take(item_embeddings(params, cfg), batch.target, axis=0)
+    return jnp.einsum("bd,bd->b", u, et)
+
+
+def loss(params, batch: RecsysBatch, cfg: RecsysConfig, mesh=None,
+         rules=None) -> Array:
+    if cfg.model in ("dlrm", "din"):
+        return _bce(score(params, batch, cfg, mesh, rules), batch.labels)
+    if cfg.model == "sasrec":
+        return _sasrec_loss(params, batch, cfg, mesh=mesh, rules=rules)
+    return _mind_loss(params, batch, cfg, mesh=mesh, rules=rules)
+
+
+def user_repr(params, batch: RecsysBatch, cfg: RecsysConfig) -> Array:
+    """[B, D] MIPS query vector for retrieval."""
+    if cfg.model == "dlrm":
+        x0, emb = _dlrm_features(params, batch, cfg)
+        return x0 + emb.mean(axis=1)          # two-tower factorisation
+    if cfg.model == "din":
+        valid = batch.hist >= 0
+        eh = jnp.take(params["table"], jnp.where(valid, batch.hist, 0), axis=0)
+        return jnp.where(valid[..., None], eh, 0).sum(1) / jnp.maximum(
+            valid.sum(-1, keepdims=True), 1)
+    if cfg.model == "sasrec":
+        return _sasrec_user(params, batch, cfg)
+    return _mind_user(params, batch, cfg)
+
+
+def item_embeddings(params, cfg: RecsysConfig) -> Array:
+    """[n_items, D] retrieval candidate matrix."""
+    if cfg.model == "dlrm":
+        return params["tables"][0, : cfg.n_items]
+    return params["table"][: cfg.n_items]
+
+
+def retrieval_scores(params, batch: RecsysBatch, cfg: RecsysConfig,
+                     mesh=None, rules=None) -> Array:
+    """retrieval_cand shape: score users against the full candidate set.
+
+    Batched dot — the dense-MIPS path ([B, D] @ [D, n_items]); the sparse
+    Sinnamon path lives in examples/recsys_retrieval.py.
+    """
+    u = user_repr(params, batch, cfg)
+    items = item_embeddings(params, cfg)
+    if mesh is not None:
+        items = R.constrain(items, mesh, ("candidates", None), rules)
+    s = jnp.einsum("bd,nd->bn", u, items)
+    if mesh is not None:
+        s = R.constrain(s, mesh, ("batch", "candidates"), rules)
+    return s

@@ -1,0 +1,367 @@
+"""Decoder-only LM family: dense (deepseek-67b, stablelm-12b, gemma3-27b with
+5:1 local:global attention) and MoE (llama4-scout 16e top-1, moonshot 64e
+top-6), with GQA, RoPE, scanned+remat'ed layers, chunked cross-entropy, and a
+KV-cache decode path.
+
+Parameters are plain nested dicts; `logical_axes` returns a matching tree of
+`repro.distributed.rules.L` annotations that drives all sharding (DP/FSDP over
+(pod, data), TP/EP over model; decode caches fall back from kv_heads→model to
+kv_seq→model when head counts don't divide — see rules.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import rules as R
+from repro.distributed.rules import L
+from repro.models import layers
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    rope_theta: float = 500_000.0
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    moe_top_k: int = 0
+    capacity_factor: float = 1.25
+    group_size: int = 4096
+    # local:global interleave (gemma3): ratio local layers per global layer
+    local_window: int = 0
+    local_global_ratio: int = 0
+    # numerics / scheduling
+    dtype: str = "bfloat16"
+    attn_chunk: int = 512
+    attn_q_chunk: int = 512
+    remat: bool = True
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    def param_count(self) -> int:
+        """Total parameters N (for MODEL_FLOPS = 6·N·D accounting)."""
+        c = self
+        attn = c.d_model * c.head_dim * (c.n_heads * 2 + c.n_kv_heads * 2)
+        if c.moe:
+            mlp = 3 * c.d_model * c.d_ff * c.n_experts + c.d_model * c.n_experts
+        else:
+            mlp = 3 * c.d_model * c.d_ff
+        per_layer = attn + mlp + 2 * c.d_model
+        return (c.n_layers * per_layer + 2 * c.vocab * c.d_model + c.d_model)
+
+    def active_param_count(self) -> int:
+        """Active parameters per token (MoE: only routed experts count)."""
+        if not self.moe:
+            return self.param_count()
+        c = self
+        attn = c.d_model * c.head_dim * (c.n_heads * 2 + c.n_kv_heads * 2)
+        mlp = 3 * c.d_model * c.d_ff * c.moe_top_k + c.d_model * c.n_experts
+        per_layer = attn + mlp + 2 * c.d_model
+        return (c.n_layers * per_layer + 2 * c.vocab * c.d_model + c.d_model)
+
+
+def layer_is_global(cfg: LMConfig) -> np.ndarray:
+    """bool[n_layers]; gemma3 pattern = ratio local layers then one global."""
+    if cfg.local_global_ratio <= 0:
+        return np.ones(cfg.n_layers, bool)
+    period = cfg.local_global_ratio + 1
+    return np.array([(i % period) == cfg.local_global_ratio
+                     for i in range(cfg.n_layers)])
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(key: Array, cfg: LMConfig, dtype=jnp.float32) -> Dict[str, Any]:
+    """Materialised init (small/smoke configs). Use jax.eval_shape for dry-runs."""
+    k = jax.random.split(key, 12)
+    d, hd, H, KV, V, Lr = (cfg.d_model, cfg.head_dim, cfg.n_heads,
+                           cfg.n_kv_heads, cfg.vocab, cfg.n_layers)
+    s = 1.0 / math.sqrt(d)
+
+    def nrm(key, shape, scale):
+        return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+    lp = {
+        "ln1": jnp.ones((Lr, d), dtype),
+        "ln2": jnp.ones((Lr, d), dtype),
+        "wq": nrm(k[0], (Lr, d, H, hd), s),
+        "wk": nrm(k[1], (Lr, d, KV, hd), s),
+        "wv": nrm(k[2], (Lr, d, KV, hd), s),
+        "wo": nrm(k[3], (Lr, H, hd, d), s / math.sqrt(2 * Lr)),
+    }
+    if cfg.moe:
+        E, f = cfg.n_experts, cfg.d_ff
+        lp.update({
+            "router": nrm(k[4], (Lr, d, E), s),
+            "wi": nrm(k[5], (Lr, E, d, f), s),
+            "wg": nrm(k[6], (Lr, E, d, f), s),
+            "wo_mlp": nrm(k[7], (Lr, E, f, d), 1 / math.sqrt(cfg.d_ff)),
+        })
+    else:
+        f = cfg.d_ff
+        lp.update({
+            "wi": nrm(k[5], (Lr, d, f), s),
+            "wg": nrm(k[6], (Lr, d, f), s),
+            "wo_mlp": nrm(k[7], (Lr, f, d), 1 / math.sqrt(f)),
+        })
+    return {
+        "embed": nrm(k[8], (V, d), 1.0),
+        "layers": lp,
+        "ln_f": jnp.ones((d,), dtype),
+        "unembed": nrm(k[9], (d, V), s),
+    }
+
+
+def abstract_params(cfg: LMConfig, dtype=jnp.float32):
+    """ShapeDtypeStruct tree without allocation (dry-run path)."""
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg, dtype))
+
+
+def logical_axes(cfg: LMConfig) -> Dict[str, Any]:
+    lp = {
+        "ln1": L(None, "embed"),
+        "ln2": L(None, "embed"),
+        "wq": L(None, "fsdp", "heads", None),
+        "wk": L(None, "fsdp", "kv_heads", None),
+        "wv": L(None, "fsdp", "kv_heads", None),
+        "wo": L(None, "heads", None, "fsdp"),
+    }
+    if cfg.moe:
+        lp.update({
+            "router": L(None, "fsdp", None),
+            "wi": L(None, "expert", "fsdp", "mlp"),
+            "wg": L(None, "expert", "fsdp", "mlp"),
+            "wo_mlp": L(None, "expert", "mlp", "fsdp"),
+        })
+    else:
+        lp.update({
+            "wi": L(None, "fsdp", "mlp"),
+            "wg": L(None, "fsdp", "mlp"),
+            "wo_mlp": L(None, "mlp", "fsdp"),
+        })
+    return {
+        "embed": L("vocab", "fsdp"),
+        "layers": lp,
+        "ln_f": L("embed"),
+        "unembed": L("fsdp", "vocab"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward (training)
+# ---------------------------------------------------------------------------
+
+def _attention_block(lp, x, positions, *, cfg, window, mesh, rules):
+    h = layers.rms_norm(x, lp["ln1"])
+    q = jnp.einsum("bsd,dhe->bshe", h, lp["wq"].astype(h.dtype))
+    knew = jnp.einsum("bsd,dke->bske", h, lp["wk"].astype(h.dtype))
+    vnew = jnp.einsum("bsd,dke->bske", h, lp["wv"].astype(h.dtype))
+    q = layers.rope(q, positions, cfg.rope_theta)
+    knew = layers.rope(knew, positions, cfg.rope_theta)
+    if mesh is not None:
+        q = R.constrain(q, mesh, ("batch", None, "heads", None), rules)
+    out = layers.blockwise_attention(
+        q, knew, vnew, causal=True, window=window,
+        chunk=cfg.attn_chunk, q_chunk=cfg.attn_q_chunk, mesh=mesh,
+        rules=rules)
+    out = jnp.einsum("bshe,hed->bsd", out, lp["wo"].astype(h.dtype))
+    if mesh is not None:  # seq-full at the block edge (Megatron-SP; see mlp)
+        out = R.constrain(out, mesh, ("batch", None, "embed"), rules)
+    return out, (knew, vnew)
+
+
+def _mlp_block(lp, x, *, cfg, mesh, rules):
+    h = layers.rms_norm(x, lp["ln2"])
+    if cfg.moe:
+        y, aux = layers.moe_layer(
+            h, lp["router"], lp["wi"], lp["wg"], lp["wo_mlp"],
+            top_k=cfg.moe_top_k, capacity_factor=cfg.capacity_factor,
+            group_size=cfg.group_size, mesh=mesh, rules=rules)
+        return y, aux
+    return layers.swiglu_mlp(h, lp["wi"], lp["wg"], lp["wo_mlp"],
+                             mesh=mesh, rules=rules), 0.0
+
+
+def forward(params, tokens: Array, cfg: LMConfig, mesh=None,
+            rules=None, collect_kv: bool = False):
+    """tokens [B, S] -> (final hidden [B, S, d], aux_loss[, kv cache]).
+
+    collect_kv=True additionally returns the per-layer K/V tensors stacked as
+    a decode-ready cache (the prefill serving path).
+    """
+    B, S = tokens.shape
+    dt = cfg.jdtype
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    if mesh is not None:
+        x = R.constrain(x, mesh, ("batch", "act_seq", "embed"), rules)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    is_global = jnp.asarray(layer_is_global(cfg))
+
+    def layer_fn(carry, inputs):
+        x, aux = carry
+        lp, flag_global = inputs
+        window = jnp.where(flag_global, 0, cfg.local_window)
+        attn, kv = _attention_block(lp, x, positions, cfg=cfg,
+                                    window=window, mesh=mesh, rules=rules)
+        x = x + attn
+        mlp, a = _mlp_block(lp, x, cfg=cfg, mesh=mesh, rules=rules)
+        x = x + mlp
+        if mesh is not None:
+            x = R.constrain(x, mesh, ("batch", "act_seq", "embed"), rules)
+        ys = kv if collect_kv else None
+        return (x, aux + a), ys
+
+    body = jax.checkpoint(layer_fn) if cfg.remat else layer_fn
+    (x, aux), kvs = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                 (params["layers"], is_global))
+    x = layers.rms_norm(x, params["ln_f"])
+    if collect_kv:
+        # [L, B, S, KV, hd] -> heads-major [L, B, KV, S, hd] (cache layout:
+        # kv_heads precede kv_seq so head-sharding is preferred when it
+        # divides, with seq-sharding as the fallback — rules.py).
+        cache = {"k": jnp.moveaxis(kvs[0], 3, 2),
+                 "v": jnp.moveaxis(kvs[1], 3, 2)}
+        if mesh is not None:
+            cache = jax.tree.map(lambda c: R.constrain(
+                c, mesh, (None, "batch", "kv_heads", "kv_seq", None), rules),
+                cache)
+        return x, aux / cfg.n_layers, cache
+    return x, aux / cfg.n_layers
+
+
+def lm_loss(params, tokens: Array, labels: Array, cfg: LMConfig, mesh=None,
+            rules=None) -> Tuple[Array, Dict]:
+    """Softmax cross-entropy.
+
+    Logits stay (batch, act_seq)-sharded — with sequence parallelism over
+    'model' the full [B, S, V] bf16 logits are only ~V·(S/16)·(B/16) per
+    device, which beats chunked recomputation on both memory and HBM traffic.
+    """
+    hidden, aux = forward(params, tokens, cfg, mesh, rules)
+    if mesh is not None:
+        # Megatron vocab-parallel xent: logits sharded over vocab ('model'),
+        # per-token max/sum/gold reduced with tiny all-reduces.
+        hidden = R.constrain(hidden, mesh, ("batch", None, "embed"), rules)
+    logits = jnp.einsum("bsd,dv->bsv", hidden,
+                        params["unembed"].astype(hidden.dtype))
+    if mesh is not None:
+        logits = R.constrain(logits, mesh, ("batch", None, "vocab"), rules)
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0].astype(jnp.float32)
+    total = jnp.sum(lse - gold)
+    xent = total / labels.size
+    loss = xent + 0.01 * aux
+    return loss, {"xent": xent, "aux": aux}
+
+
+def prefill(params, tokens: Array, cfg: LMConfig, mesh=None, rules=None):
+    """Inference prefill: next-token logits for the last position + KV cache."""
+    hidden, _, cache = forward(params, tokens, cfg, mesh, rules,
+                               collect_kv=True)
+    logits = jnp.einsum("bd,dv->bv", hidden[:, -1].astype(jnp.float32),
+                        params["unembed"].astype(jnp.float32))
+    if mesh is not None:
+        logits = R.constrain(logits, mesh, ("batch", "vocab"), rules)
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving) path
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int, dtype=None):
+    """KV cache, heads-major: [L, B, KV, S, hd] (see cache_logical_axes)."""
+    dtype = dtype or cfg.jdtype
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_seq, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def abstract_cache(cfg: LMConfig, batch: int, max_seq: int, dtype=None):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_seq, dtype))
+
+
+def cache_logical_axes():
+    ax = L(None, "batch", "kv_heads", "kv_seq", None)
+    return {"k": ax, "v": ax}
+
+
+def decode_step(params, cache, tokens: Array, pos: Array, cfg: LMConfig,
+                mesh=None, rules=None):
+    """One decoding step.
+
+    tokens: [B, 1] current token; pos: scalar int32 — its position (the cache
+    holds `pos` valid entries; the new KV is written at index pos).
+    Returns (logits [B, V], new cache).
+    """
+    B = tokens.shape[0]
+    dt = cfg.jdtype
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)    # [B, 1, d]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    is_global = jnp.asarray(layer_is_global(cfg))
+
+    cax = ("batch", "kv_heads", "kv_seq", None)
+
+    def layer_fn(carry, inputs):
+        # The cache rides in the scan CARRY (not xs/ys) and is updated with
+        # dynamic_update_index_in_dim — XLA keeps carry buffers in place, so
+        # the multi-hundred-GB cache is never double-buffered.
+        x, kall, vall = carry
+        lp, flag_global, li = inputs
+        window = jnp.where(flag_global, 0, cfg.local_window)
+        kc = jax.lax.dynamic_index_in_dim(kall, li, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vall, li, 0, keepdims=False)
+
+        h = layers.rms_norm(x, lp["ln1"])
+        q = jnp.einsum("bsd,dhe->bshe", h, lp["wq"].astype(h.dtype))
+        knew = jnp.einsum("bsd,dke->bske", h, lp["wk"].astype(h.dtype))
+        vnew = jnp.einsum("bsd,dke->bske", h, lp["wv"].astype(h.dtype))
+        q = layers.rope(q, positions, cfg.rope_theta)
+        knew = layers.rope(knew, positions, cfg.rope_theta)
+        # [B, 1, KV, hd] -> heads-major cache slot [B, KV, 1, hd]
+        k2 = jax.lax.dynamic_update_slice(
+            kc, jnp.moveaxis(knew, 1, 2).astype(kc.dtype), (0, 0, pos, 0))
+        v2 = jax.lax.dynamic_update_slice(
+            vc, jnp.moveaxis(vnew, 1, 2).astype(vc.dtype), (0, 0, pos, 0))
+        if mesh is not None:
+            k2 = R.constrain(k2, mesh, cax, rules)
+            v2 = R.constrain(v2, mesh, cax, rules)
+        attn = layers.decode_attention(
+            q, k2, v2, window=window, q_offset=pos, kv_len=pos + 1,
+            mesh=mesh, rules=rules)
+        attn = jnp.einsum("bshe,hed->bsd", attn, lp["wo"].astype(h.dtype))
+        x = x + attn
+        mlp, _ = _mlp_block(lp, x, cfg=cfg, mesh=mesh, rules=rules)
+        x = x + mlp
+        kall = jax.lax.dynamic_update_index_in_dim(kall, k2, li, 0)
+        vall = jax.lax.dynamic_update_index_in_dim(vall, v2, li, 0)
+        return (x, kall, vall), None
+
+    (x, kall, vall), _ = jax.lax.scan(
+        layer_fn, (x, cache["k"], cache["v"]),
+        (params["layers"], is_global, jnp.arange(cfg.n_layers)))
+    x = layers.rms_norm(x, params["ln_f"])
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32),
+                        params["unembed"].astype(jnp.float32))[:, 0]
+    return logits, {"k": kall, "v": vall}

@@ -1,0 +1,71 @@
+"""Host-side serving drivers for the retrieval engine.
+
+* ``QueryServer`` — batched query serving over a (possibly sharded) Sinnamon
+  index with the paper's anytime budget as the latency lever.
+* ``HedgedServer`` — straggler mitigation: the same query is issued to R
+  replica indexes and the first completed answer wins.  On real clusters the
+  replicas are distinct hosts; here they are distinct index objects and the
+  "race" is simulated by a per-replica latency model, which is exactly what
+  the tail-latency analysis needs (the compute results are identical —
+  hedging is a scheduling property, validated as such in tests/test_ft.py).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.engine import SinnamonIndex
+
+
+class QueryServer:
+    def __init__(self, index: SinnamonIndex, k: int = 10,
+                 kprime: int = 1000, budget: Optional[int] = None,
+                 score_fn=None):
+        self.index = index
+        self.k, self.kprime, self.budget = k, kprime, budget
+        self.score_fn = score_fn
+        self.stats = {"queries": 0, "latency_ms": []}
+
+    def query(self, q_idx, q_val):
+        t0 = time.perf_counter()
+        ids, scores = self.index.search(
+            q_idx, q_val, k=self.k, kprime=self.kprime, budget=self.budget,
+            score_fn=self.score_fn)
+        self.stats["queries"] += 1
+        self.stats["latency_ms"].append((time.perf_counter() - t0) * 1e3)
+        return ids, scores
+
+    def latency_percentiles(self):
+        lat = np.asarray(self.stats["latency_ms"])
+        if lat.size == 0:
+            return {}
+        return {f"p{p}": float(np.percentile(lat, p)) for p in (50, 90, 99)}
+
+
+class HedgedServer:
+    """Issue each query to all replicas; take the first simulated finisher."""
+
+    def __init__(self, replicas: Sequence[QueryServer], seed: int = 0,
+                 straggler_prob: float = 0.1, straggler_mult: float = 10.0):
+        self.replicas = list(replicas)
+        self.gen = np.random.Generator(np.random.Philox(key=seed))
+        self.straggler_prob = straggler_prob
+        self.straggler_mult = straggler_mult
+        self.effective_latency_ms: list = []
+
+    def query(self, q_idx, q_val):
+        finish = []
+        answers = []
+        for rep in self.replicas:
+            ids, scores = rep.query(q_idx, q_val)
+            base = rep.stats["latency_ms"][-1]
+            if self.gen.random() < self.straggler_prob:
+                base *= self.straggler_mult
+            finish.append(base)
+            answers.append((ids, scores))
+        win = int(np.argmin(finish))
+        self.effective_latency_ms.append(min(finish))
+        return answers[win]

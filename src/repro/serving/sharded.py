@@ -1,0 +1,90 @@
+"""Sharded Sinnamon serving: the paper's engine as an SPMD program.
+
+Corpus slots are sharded over the (pod, model) mesh axes, the query batch over
+data.  Scoring and the exact rerank are fully shard-local; only (k'-sized)
+candidate tuples cross shards (see repro.distributed.topk).  This is the
+``serve_step`` that the multi-pod dry-run lowers for the paper's own workload
+and that `repro.launch.serve` drives.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import engine as eng
+from repro.distributed import mesh as meshlib
+from repro.distributed import topk
+from repro.storage import vecstore
+
+
+def state_pspecs(mesh: Mesh, positive_only: bool = False) -> eng.SinnamonState:
+    """PartitionSpecs for every SinnamonState leaf (corpus over pod+model)."""
+    corpus = meshlib.corpus_axes(mesh)
+    c = corpus if len(corpus) > 1 else (corpus[0] if corpus else None)
+    return eng.SinnamonState(
+        mappings=P(),                      # replicated
+        u=P(None, c),
+        l=None if positive_only else P(None, c),
+        bits=P(None, c),
+        store=vecstore.VecStore(indices=P(c), values=P(c)),
+        active=P(c),
+        ids=P(c),
+    )
+
+
+def state_shardings(mesh: Mesh, positive_only: bool = False):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        state_pspecs(mesh, positive_only),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_search_step(mesh: Mesh, local_spec: eng.EngineSpec, *,
+                     k: int, kprime_local: int,
+                     budget: Optional[int] = None,
+                     score_fn=None):
+    """Build the jittable SPMD search step.
+
+    local_spec.capacity is the *per-shard* slot count.  Returns
+    ``step(state, q_idx[B, Lq], q_val[B, Lq]) -> (scores[B, k], ids[B, k])``
+    with the batch sharded over 'data' and outputs replicated over corpus axes.
+    """
+    corpus = meshlib.corpus_axes(mesh)
+    qspec = P("data") if "data" in mesh.axis_names else P()
+
+    def local_search(state: eng.SinnamonState, q_idx, q_val):
+        scores = eng.score_batch(state, local_spec, q_idx, q_val, budget) \
+            if score_fn is None else score_fn(state, local_spec, q_idx, q_val,
+                                              budget)
+        scores = jnp.where(state.active[None, :], scores, -jnp.inf)
+        kl = min(kprime_local, local_spec.capacity)
+        ub, slots = jax.lax.top_k(scores, kl)                  # [b, kl]
+
+        dens = functools.partial(vecstore.densify_query, local_spec.n)
+        q_dense = jax.vmap(dens)(q_idx, q_val)                 # [b, n]
+        exact = jax.vmap(lambda s, qd: vecstore.exact_scores(state.store, s, qd)
+                         )(slots, q_dense)                     # [b, kl]
+        exact = jnp.where(jnp.isneginf(ub), -jnp.inf, exact)
+        gids = state.ids[slots]
+        if corpus:
+            return topk.merge_over_axes(exact, gids, corpus, k)
+        vals, pos = jax.lax.top_k(exact, k)
+        return vals, jnp.take_along_axis(gids, pos, axis=-1)
+
+    sharded = shard_map(
+        local_search, mesh=mesh,
+        in_specs=(state_pspecs(mesh, local_spec.positive_only), qspec, qspec),
+        out_specs=(qspec, qspec),
+        check_rep=False,
+    )
+    return jax.jit(sharded)
+
+
+def shard_state(state: eng.SinnamonState, mesh: Mesh):
+    """Place a host-built (global) state onto the mesh."""
+    return jax.device_put(state, state_shardings(mesh, state.l is None))

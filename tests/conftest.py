@@ -1,0 +1,15 @@
+"""Test config. NOTE: no XLA_FLAGS device-count forcing here — smoke tests
+and benches must see 1 device (dry-run scripts set their own flags)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

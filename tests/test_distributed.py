@@ -1,0 +1,96 @@
+"""Distributed runtime: rules, top-k merge, and a subprocess SPMD search
+(the subprocess forces 8 host devices so the main test process keeps 1)."""
+
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import mesh as meshlib
+from repro.distributed import rules as R
+from repro.distributed import topk
+
+
+def test_rules_divisibility_fallback():
+    mesh = meshlib.single_device_mesh(("data", "model"))
+    # single-device mesh: everything divisible, axes named
+    spec = R.spec_for(mesh, (64, 128), ("batch", "mlp"))
+    assert spec == jax.sharding.PartitionSpec("data", "model")
+
+
+def test_rules_fallback_chain():
+    # fake mesh shape checks without devices: use spec_for math directly on a
+    # 1-device mesh named like production (sizes 1 always divide) — then on a
+    # synthetic Mesh-like object for the 16x16 case.
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    spec = R.spec_for(FakeMesh(), (8, 32768, 128),
+                      ("kv_heads", "kv_seq", None))
+    # kv_heads=8 not divisible by 16 -> kv_seq takes (data, model)
+    assert spec == jax.sharding.PartitionSpec(None, ("data", "model"))
+
+    spec = R.spec_for(FakeMesh(), (128, 16, 32768, 128),
+                      ("batch", "kv_heads", "kv_seq", None))
+    assert spec == jax.sharding.PartitionSpec("data", "model")
+
+
+def test_topk_merge_single_device():
+    scores = jnp.asarray(np.random.default_rng(0).normal(0, 1, (4, 100)))
+    ids = jnp.arange(100)[None, :].repeat(4, 0)
+    vals, pay = topk.topk_with_ids(scores, ids, 10)
+    ref = np.sort(np.asarray(scores), axis=-1)[:, ::-1][:, :10]
+    np.testing.assert_allclose(np.asarray(vals), ref, rtol=1e-6)
+    assert np.all(np.take_along_axis(np.asarray(scores), np.asarray(pay),
+                                     axis=-1) == np.asarray(vals))
+
+
+SUBPROC = textwrap.dedent("""
+    import os, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    sys.path.insert(0, "src")
+    import dataclasses
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core.engine import EngineSpec, SinnamonIndex
+    from repro.core.linscan import brute_force_topk
+    from repro.data import synth
+    from repro.distributed import mesh as meshlib
+    from repro.serving import sharded
+
+    ds = synth.SparseDatasetSpec("t", n=300, psi_doc=18, psi_query=9)
+    idx, val = synth.make_corpus(0, ds, 384, pad=36)
+    qi, qv = synth.make_queries(1, ds, 4, pad=18)
+    spec = EngineSpec(n=300, m=16, capacity=384, max_nnz=36, h=1,
+                      value_dtype="float32")
+    index = SinnamonIndex(spec)
+    index.insert_many(list(range(384)), idx, val)
+    mesh = meshlib.make_mesh((2, 4), ("data", "model"))
+    local = dataclasses.replace(spec, capacity=96)
+    step = sharded.make_search_step(mesh, local, k=10, kprime_local=40)
+    state = sharded.shard_state(index.state, mesh)
+    scores, ids = step(state, jnp.asarray(qi), jnp.asarray(qv))
+    ok = True
+    for b in range(4):
+        ids0, sc0 = brute_force_topk(idx, val, qi[b], qv[b], 300, 10)
+        rec = len(set(np.asarray(ids)[b].tolist())
+                  & set(ids0.tolist())) / 10
+        ok &= rec >= 0.9
+    print("RECALL_OK" if ok else "RECALL_BAD")
+""")
+
+
+def test_sharded_search_subprocess():
+    out = subprocess.run([sys.executable, "-c", SUBPROC],
+                         capture_output=True, text=True, cwd=".",
+                         timeout=420)
+    assert "RECALL_OK" in out.stdout, out.stdout + out.stderr
+
+
+def test_corpus_axes():
+    mesh = meshlib.single_device_mesh(("pod", "data", "model"))
+    assert meshlib.corpus_axes(mesh) == ("pod", "model")
+    assert meshlib.batch_axes(mesh) == ("data",)

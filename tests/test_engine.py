@@ -1,0 +1,173 @@
+"""End-to-end behaviour of the Sinnamon engine (paper §4 + §6)."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine as eng
+from repro.core.engine import EngineSpec, SinnamonIndex
+from repro.core.linscan import LinScanIndex, brute_force_topk
+from repro.data import synth
+from repro.storage import vecstore
+
+DS = synth.SparseDatasetSpec("t", n=500, psi_doc=24, psi_query=12,
+                             value_dist="gaussian")
+
+
+def _index(n_docs=300, value_dtype="float32", h=2, m=16, seed=3):
+    idx, val = synth.make_corpus(0, DS, n_docs, pad=48)
+    spec = EngineSpec(n=DS.n, m=m, capacity=((n_docs + 31) // 32) * 32,
+                      max_nnz=48, h=h, seed=seed, value_dtype=value_dtype)
+    index = SinnamonIndex(spec)
+    index.insert_many(list(range(n_docs)), idx, val)
+    return index, idx, val
+
+
+@pytest.fixture(scope="module")
+def built():
+    return _index()
+
+
+def test_scores_upper_bound(built):
+    """Theorem 5.1: Algorithm 6 scores upper-bound the exact inner product."""
+    index, idx, val = built
+    qi, qv = synth.make_queries(1, DS, 8, pad=24)
+    for b in range(8):
+        s = eng.score(index.state, index.spec, jnp.asarray(qi[b]),
+                      jnp.asarray(qv[b]))
+        qd = vecstore.densify_query(DS.n, jnp.asarray(qi[b]),
+                                    jnp.asarray(qv[b]))
+        exact = vecstore.exact_scores_all(index.state.store, qd)
+        active = np.asarray(index.state.active)
+        gap = np.asarray(s)[active] - np.asarray(exact)[active]
+        assert gap.min() >= -1e-4
+
+
+def test_recall_vs_exact(built):
+    index, idx, val = built
+    qi, qv = synth.make_queries(2, DS, 16, pad=24)
+    recalls = []
+    for b in range(16):
+        ids0, _ = brute_force_topk(idx, val, qi[b], qv[b], DS.n, 10)
+        ids, _ = index.search(qi[b], qv[b], k=10, kprime=60)
+        recalls.append(len(set(ids.tolist()) & set(ids0.tolist())) / 10)
+    assert np.mean(recalls) >= 0.9, recalls
+
+
+def test_kprime_monotone_recall(built):
+    """Paper Fig. 10: recall improves with k'."""
+    index, idx, val = built
+    qi, qv = synth.make_queries(3, DS, 12, pad=24)
+    means = []
+    for kprime in (10, 40, 160):
+        rs = []
+        for b in range(12):
+            ids0, _ = brute_force_topk(idx, val, qi[b], qv[b], DS.n, 10)
+            ids, _ = index.search(qi[b], qv[b], k=10, kprime=kprime)
+            rs.append(len(set(ids.tolist()) & set(ids0.tolist())) / 10)
+        means.append(np.mean(rs))
+    assert means[0] <= means[1] + 0.05 and means[1] <= means[2] + 0.05
+    assert means[2] >= means[0]
+
+
+def test_anytime_budget(built):
+    """Anytime lever: tiny budget still returns; full budget is better."""
+    index, idx, val = built
+    qi, qv = synth.make_queries(4, DS, 12, pad=24)
+    r_small, r_full = [], []
+    for b in range(12):
+        ids0, _ = brute_force_topk(idx, val, qi[b], qv[b], DS.n, 10)
+        for budget, acc in ((2, r_small), (None, r_full)):
+            ids, _ = index.search(qi[b], qv[b], k=10, kprime=60,
+                                  budget=budget)
+            acc.append(len(set(ids.tolist()) & set(ids0.tolist())) / 10)
+    assert np.mean(r_full) >= np.mean(r_small)
+
+
+def test_delete_and_recycle():
+    index, idx, val = _index(n_docs=64)
+    qi, qv = synth.make_queries(5, DS, 1, pad=24)
+    ids0, _ = index.search(qi[0], qv[0], k=5, kprime=30)
+    target = int(ids0[0])
+    index.delete(target)
+    ids1, _ = index.search(qi[0], qv[0], k=5, kprime=30)
+    assert target not in ids1
+    # slot recycling: new doc reuses the freed slot (paper §4.3)
+    free_before = len(index._free)
+    nid, nidx, nval = 9999, idx[0], val[0]
+    index.insert(nid, nidx[nidx >= 0], nval[nidx >= 0])
+    assert len(index._free) == free_before - 1
+    ids2, _ = index.search(qi[0], qv[0], k=64, kprime=64)
+    assert nid in ids2 or index.size == 64
+
+
+def test_constrained_search(built):
+    """Eq. (3): filter mask excludes documents from the result set."""
+    index, idx, val = built
+    qi, qv = synth.make_queries(6, DS, 1, pad=24)
+    ids0, _ = index.search(qi[0], qv[0], k=10, kprime=60)
+    mask = np.ones(index.spec.capacity, bool)
+    slots = [index._id2slot[int(d)] for d in ids0[:5]]
+    mask[slots] = False
+    ids1, _ = index.search(qi[0], qv[0], k=10, kprime=60,
+                           filter_mask=jnp.asarray(mask))
+    assert not set(ids0[:5].tolist()) & set(ids1.tolist())
+
+
+def test_grow_preserves_content():
+    index, idx, val = _index(n_docs=64)
+    qi, qv = synth.make_queries(7, DS, 1, pad=24)
+    before, _ = index.search(qi[0], qv[0], k=10, kprime=40)
+    index.grow(256)
+    after, _ = index.search(qi[0], qv[0], k=10, kprime=40)
+    assert np.array_equal(before, after)
+    assert index.spec.capacity == 256
+
+
+def test_update_overwrites():
+    index, idx, val = _index(n_docs=32)
+    keep = idx[0] >= 0
+    index.insert(0, idx[1][idx[1] >= 0], val[1][idx[1] >= 0])  # overwrite doc 0
+    assert index.size == 32
+
+
+def test_memory_accounting(built):
+    index, _, _ = built
+    mem = index.memory_bytes()
+    assert mem["sketch"] == 2 * index.spec.m * index.spec.capacity * 2
+    assert mem["inverted_index"] == index.spec.n * (index.spec.capacity // 32) * 4
+    assert mem["index_total"] < mem["storage"] + mem["index_total"]
+
+
+def test_sinnamon_plus_nonnegative():
+    ds = dataclasses.replace(DS, nonneg=True, value_dist="lognormal",
+                             value_param=0.5)
+    idx, val = synth.make_corpus(11, ds, 128, pad=48)
+    spec = EngineSpec(n=ds.n, m=16, capacity=128, max_nnz=48, h=1,
+                      positive_only=True, value_dtype="float32")
+    index = SinnamonIndex(spec)
+    index.insert_many(list(range(128)), idx, val)
+    qi, qv = synth.make_queries(12, ds, 8, pad=24)
+    rec = []
+    for b in range(8):
+        ids0, _ = brute_force_topk(idx, val, qi[b], qv[b], ds.n, 10)
+        ids, _ = index.search(qi[b], qv[b], k=10, kprime=60)
+        rec.append(len(set(ids.tolist()) & set(ids0.tolist())) / 10)
+    assert np.mean(rec) >= 0.9
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_insert_delete_roundtrip_property(seed):
+    """Inserting then deleting a doc restores search results exactly."""
+    index, idx, val = _index(n_docs=48, seed=seed % 17)
+    qi, qv = synth.make_queries(seed, DS, 1, pad=24)
+    before, _ = index.search(qi[0], qv[0], k=10, kprime=48)
+    extra_i, extra_v = synth.make_corpus(seed ^ 99, DS, 1, pad=48)
+    index.insert(777, extra_i[0][extra_i[0] >= 0], extra_v[0][extra_i[0] >= 0])
+    index.delete(777)
+    after, _ = index.search(qi[0], qv[0], k=10, kprime=48)
+    assert np.array_equal(before, after)

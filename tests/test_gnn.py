@@ -1,0 +1,160 @@
+"""Equivariance + Wigner machinery tests for the eSCN GNN."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import graph as graphdata
+from repro.models import gnn, sh
+
+
+def _rand_rot(gen):
+    A = gen.normal(size=(3, 3))
+    Q, _ = np.linalg.qr(A)
+    if np.linalg.det(Q) < 0:
+        Q[:, 0] *= -1
+    return Q.astype(np.float32)
+
+
+def test_wigner_represents_rotation(rng):
+    """D(R_e) Y(x) == Y(R_e x) and orthogonality, l up to 6."""
+    lmax = 6
+    v = rng.normal(size=(4, 3)).astype(np.float32)
+    blocks = sh.wigner_blocks(lmax, jnp.asarray(v))
+    pts = rng.normal(size=(30, 3))
+    pts /= np.linalg.norm(pts, axis=-1, keepdims=True)
+    Y = sh.real_sh_numpy(lmax, pts)
+    for e in range(4):
+        u = v[e] / np.linalg.norm(v[e])
+        th, ph = np.arccos(u[2]), np.arctan2(u[1], u[0])
+        Ry = lambda a: np.array([[np.cos(a), 0, np.sin(a)], [0, 1, 0],
+                                 [-np.sin(a), 0, np.cos(a)]])
+        Rz = lambda a: np.array([[np.cos(a), -np.sin(a), 0],
+                                 [np.sin(a), np.cos(a), 0], [0, 0, 1]])
+        Rm = Ry(-th) @ Rz(-ph)
+        assert np.allclose(Rm @ u, [0, 0, 1], atol=1e-6)
+        YR = sh.real_sh_numpy(lmax, pts @ Rm.T)
+        for l in range(lmax + 1):
+            D = np.asarray(blocks[l][e])
+            np.testing.assert_allclose(Y[:, sh.l_slice(l)] @ D.T,
+                                       YR[:, sh.l_slice(l)], atol=2e-5)
+            np.testing.assert_allclose(D @ D.T, np.eye(2 * l + 1),
+                                       atol=2e-5)
+
+
+def test_wigner_aligns_edge_to_z(rng):
+    """D(R_e) Y(ê) = Y(ẑ): all m≠0 components vanish in the edge frame."""
+    lmax = 4
+    v = rng.normal(size=(8, 3)).astype(np.float32)
+    blocks = sh.wigner_blocks(lmax, jnp.asarray(v))
+    u = v / np.linalg.norm(v, axis=1, keepdims=True)
+    Y = sh.real_sh_numpy(lmax, u)
+    Yz = sh.real_sh_numpy(lmax, np.array([[0.0, 0.0, 1.0]]))
+    for l in range(lmax + 1):
+        got = jnp.einsum("eij,ej->ei", blocks[l],
+                         jnp.asarray(Y[:, sh.l_slice(l)].astype(np.float32)))
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.broadcast_to(Yz[:, sh.l_slice(l)],
+                                                   got.shape), atol=1e-5)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = gnn.GNNConfig(n_layers=2, c=16, l_max=3, m_max=2, n_heads=4,
+                        n_rbf=8, f_in=5, n_out=3, edge_chunk=16)
+    params = gnn.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _graph(gen, N=12, E=32, f_in=5):
+    pos = gen.normal(size=(N, 3)).astype(np.float32)
+    src = gen.integers(0, N, E).astype(np.int32)
+    dst = ((src + gen.integers(1, N, E)) % N).astype(np.int32)
+    src[-3:] = -1
+    vec = (pos[np.where(src >= 0, src, 0)]
+           - pos[np.where(dst >= 0, dst, 0)]).astype(np.float32)
+    feat = gen.normal(size=(N, f_in)).astype(np.float32)
+    return gnn.GraphBatch(jnp.asarray(feat), jnp.asarray(src),
+                          jnp.asarray(dst), jnp.asarray(vec),
+                          jnp.zeros(N, jnp.int32),
+                          jnp.zeros((N, 3), jnp.float32),
+                          jnp.zeros(N, jnp.int32), 1)
+
+
+def test_model_equivariance(model, rng):
+    """Global rotation: invariant l=0 outputs; l=1 rotates with D₁(R)."""
+    cfg, params = model
+    g = _graph(rng)
+    Rm = _rand_rot(rng)
+    g_rot = g._replace(edge_vec=jnp.asarray(
+        np.asarray(g.edge_vec) @ Rm.T))
+    f1 = gnn.forward(params, g, cfg)
+    f2 = gnn.forward(params, g_rot, cfg)
+    scale = float(jnp.abs(f1).max())
+    assert float(jnp.abs(f1[:, 0, :] - f2[:, 0, :]).max()) < 1e-3 * max(
+        scale, 1)
+    D1 = jnp.asarray(sh.fit_wigner_numpy(1, Rm).astype(np.float32))
+    pred = jnp.einsum("ij,njc->nic", D1, f1[:, 1:4, :])
+    assert float(jnp.abs(pred - f2[:, 1:4, :]).max()) < 2e-3 * max(scale, 1)
+
+
+def test_padded_edges_are_inert(model, rng):
+    """Changing padded-edge payloads never changes the output."""
+    cfg, params = model
+    g = _graph(rng)
+    f1 = gnn.forward(params, g, cfg)
+    vec2 = np.asarray(g.edge_vec).copy()
+    vec2[-3:] = 123.0
+    f2 = gnn.forward(params, g._replace(edge_vec=jnp.asarray(vec2)), cfg)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), atol=1e-6)
+
+
+def test_edge_chunking_invariance(model, rng):
+    """Streaming segment-softmax: result independent of chunk size."""
+    import dataclasses
+    cfg, params = model
+    g = _graph(rng)
+    f1 = gnn.forward(params, g, cfg)
+    cfg2 = dataclasses.replace(cfg, edge_chunk=8)
+    f2 = gnn.forward(params, g, cfg2)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_neighbor_sampler(rng):
+    n, e = 100, 600
+    src = rng.integers(0, n, e)
+    dst = (src + rng.integers(1, n, e)) % n
+    feats = rng.normal(size=(n, 7)).astype(np.float32)
+    labels = rng.integers(0, 5, n).astype(np.int32)
+    sampler = graphdata.NeighborSampler(0, n, np.stack([src, dst]),
+                                        feats, labels)
+    g = sampler.sample(np.arange(8), fanouts=(4, 3), pad_nodes=128,
+                       pad_edges=256)
+    assert g.node_feat.shape == (128, 7)
+    assert g.edge_src.shape == (256,)
+    valid = g.edge_src >= 0
+    assert valid.sum() > 0
+    # sampled edges reference in-range local node ids
+    assert g.edge_src[valid].max() < 128 and g.edge_dst[valid].max() < 128
+    # seeds carry labels, non-seeds are masked
+    assert (g.labels >= 0).sum() <= 8
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=5, deadline=None)
+def test_equivariance_property(seed):
+    """Hypothesis: equivariance holds for random graphs/rotations/params."""
+    gen = np.random.default_rng(seed)
+    cfg = gnn.GNNConfig(n_layers=1, c=8, l_max=2, m_max=1, n_heads=2,
+                        n_rbf=4, f_in=3, n_out=2, edge_chunk=64)
+    params = gnn.init_params(jax.random.PRNGKey(seed), cfg)
+    g = _graph(gen, N=8, E=20, f_in=3)
+    Rm = _rand_rot(gen)
+    g_rot = g._replace(edge_vec=jnp.asarray(np.asarray(g.edge_vec) @ Rm.T))
+    f1 = gnn.forward(params, g, cfg)
+    f2 = gnn.forward(params, g_rot, cfg)
+    scale = max(float(jnp.abs(f1).max()), 1.0)
+    assert float(jnp.abs(f1[:, 0, :] - f2[:, 0, :]).max()) < 2e-3 * scale

@@ -1,0 +1,84 @@
+"""Exactness of the LinScan and WAND baselines (paper §3 / §6.1.4)."""
+
+import numpy as np
+
+from repro.core.linscan import LinScanIndex, brute_force_topk
+from repro.core.wand import WandIndex
+from repro.data import synth
+
+DS = synth.SparseDatasetSpec("t", n=400, psi_doc=20, psi_query=10,
+                             value_dist="gaussian")
+
+
+def _corpus(n=200):
+    idx, val = synth.make_corpus(1, DS, n, pad=40)
+    return idx, val
+
+
+def test_linscan_exact_topk():
+    idx, val = _corpus()
+    ls = LinScanIndex(DS.n)
+    ls.insert_many(range(len(idx)), idx, val)
+    qi, qv = synth.make_queries(2, DS, 6, pad=20)
+    for b in range(6):
+        ids0, sc0 = brute_force_topk(idx, val, qi[b], qv[b], DS.n, 10)
+        ids, sc = ls.search(qi[b], qv[b], k=10)
+        assert set(ids.tolist()) == set(ids0.tolist())
+        np.testing.assert_allclose(np.sort(sc), np.sort(sc0), rtol=1e-5)
+
+
+def test_linscan_anytime_recall_monotone():
+    idx, val = _corpus()
+    ls = LinScanIndex(DS.n)
+    ls.insert_many(range(len(idx)), idx, val)
+    qi, qv = synth.make_queries(3, DS, 8, pad=20)
+    small, large = [], []
+    for b in range(8):
+        ids0, _ = brute_force_topk(idx, val, qi[b], qv[b], DS.n, 10)
+        i1, _ = ls.search(qi[b], qv[b], k=10, kprime=40, posting_budget=40)
+        i2, _ = ls.search(qi[b], qv[b], k=10, kprime=40, posting_budget=100000)
+        small.append(len(set(i1.tolist()) & set(ids0.tolist())) / 10)
+        large.append(len(set(i2.tolist()) & set(ids0.tolist())) / 10)
+    assert np.mean(large) >= np.mean(small)
+    assert np.mean(large) == 1.0
+
+
+def test_linscan_full_deletion():
+    idx, val = _corpus(50)
+    ls = LinScanIndex(DS.n)
+    ls.insert_many(range(50), idx, val)
+    qi, qv = synth.make_queries(4, DS, 1, pad=20)
+    ids, _ = ls.search(qi[0], qv[0], k=5)
+    ls.delete(int(ids[0]))
+    ls.compact()
+    ids2, _ = ls.search(qi[0], qv[0], k=5)
+    assert int(ids[0]) not in ids2.tolist()
+
+
+def test_wand_matches_brute_force():
+    idx, val = _corpus(120)
+    w = WandIndex(DS.n)
+    w.build(range(120), idx, val)
+    qi, qv = synth.make_queries(5, DS, 6, pad=20)
+    for b in range(6):
+        ids0, sc0 = brute_force_topk(idx, val, qi[b], qv[b], DS.n, 10)
+        ids, sc = w.search(qi[b], qv[b], k=10)
+        # WAND only visits docs intersecting the query; brute force may pad
+        # the tail with 0-scored non-matching docs — compare the strictly
+        # positive prefix, which is where top-k is well defined.
+        j = int((sc0 > 1e-6).sum())
+        np.testing.assert_allclose(np.sort(sc)[::-1][:j], sc0[:j],
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_wand_nonnegative_fast_path():
+    ds = synth.BM25_LIKE
+    idx, val = synth.make_corpus(6, ds, 100, pad=100)
+    w = WandIndex(ds.n)
+    w.build(range(100), idx, val)
+    qi, qv = synth.make_queries(7, ds, 4, pad=16)
+    for b in range(4):
+        ids0, sc0 = brute_force_topk(idx, val, qi[b], qv[b], ds.n, 5)
+        ids, sc = w.search(qi[b], qv[b], k=5)
+        np.testing.assert_allclose(np.sort(sc)[::-1], sc0, rtol=1e-4,
+                                   atol=1e-5)

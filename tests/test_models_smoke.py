@@ -1,0 +1,138 @@
+"""Per-architecture smoke tests (deliverable f): reduced configs of the same
+family, one forward/train step on CPU, asserting output shapes + no NaNs.
+The FULL configs are exercised only via the dry-run (no allocation)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.data import graph as graphdata
+from repro.data import loaders
+from repro.models import gnn, recsys, transformer as tr
+
+LM_ARCHS = ["deepseek-67b", "stablelm-12b", "gemma3-27b",
+            "llama4-scout-17b-a16e", "moonshot-v1-16b-a3b"]
+RS_ARCHS = ["sasrec", "mind", "din", "dlrm-rm2"]
+
+
+def _finite(x):
+    return bool(jnp.all(jnp.isfinite(x)))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_train_step(arch):
+    mod = registry.get(arch)
+    cfg = mod.smoke_config()
+    key = jax.random.PRNGKey(0)
+    params = tr.init_params(key, cfg)
+    toks, labels = loaders.lm_batch(0, 0, batch=2, seq=32, vocab=cfg.vocab)
+    loss, metrics = jax.jit(
+        lambda p: tr.lm_loss(p, jnp.asarray(toks), jnp.asarray(labels), cfg)
+    )(params)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+    grads = jax.grad(lambda p: tr.lm_loss(
+        p, jnp.asarray(toks), jnp.asarray(labels), cfg)[0])(params)
+    gn = jax.tree.reduce(
+        lambda a, g: a + float(jnp.sum(g.astype(jnp.float32) ** 2)), grads,
+        0.0)
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_decode_step(arch):
+    mod = registry.get(arch)
+    cfg = mod.smoke_config()
+    params = tr.init_params(jax.random.PRNGKey(1), cfg)
+    cache = tr.init_cache(cfg, 2, 16)
+    logits, cache2 = jax.jit(
+        lambda p, c, t: tr.decode_step(p, c, t, 3, cfg)
+    )(params, cache, jnp.ones((2, 1), jnp.int32))
+    assert logits.shape == (2, cfg.vocab)
+    assert _finite(logits)
+    assert cache2["k"].shape == cache["k"].shape
+
+
+@pytest.mark.parametrize("arch", RS_ARCHS)
+def test_recsys_smoke(arch):
+    mod = registry.get(arch)
+    cfg = mod.smoke_config()
+    params = recsys.init_params(jax.random.PRNGKey(2), cfg)
+    batch = loaders.recsys_batch(0, 0, batch=8, cfg=cfg)
+    batch = jax.tree.map(jnp.asarray, batch)
+    loss = jax.jit(lambda p, b: recsys.loss(p, b, cfg))(params, batch)
+    assert np.isfinite(float(loss))
+    s = recsys.score(params, batch, cfg)
+    assert s.shape == (8,) and _finite(s)
+    r = recsys.retrieval_scores(params, batch, cfg)
+    assert r.shape == (8, cfg.n_items) and _finite(r)
+
+
+def test_gnn_smoke_node_class():
+    mod = registry.get("equiformer-v2")
+    cfg = mod.smoke_config()
+    g = graphdata.random_geometric_graph(0, n_nodes=24, n_edges=64,
+                                         d_feat=cfg.f_in,
+                                         n_classes=cfg.n_out)
+    g = jax.tree.map(lambda x: jnp.asarray(x) if isinstance(
+        x, np.ndarray) else x, g)
+    params = gnn.init_params(jax.random.PRNGKey(3), cfg)
+    loss, _ = jax.jit(lambda p, gg: gnn.loss_fn(p, gg, cfg))(params, g)
+    assert np.isfinite(float(loss))
+    logits = gnn.predict(params, g, cfg)
+    assert logits.shape == (24, cfg.n_out) and _finite(logits)
+
+
+def test_gnn_smoke_energy_force():
+    import dataclasses
+    mod = registry.get("equiformer-v2")
+    cfg = dataclasses.replace(mod.smoke_config(), task="energy_force",
+                              n_out=1, f_in=16)
+    g = graphdata.molecule_batch(1, batch=4, nodes_per=6, edges_per=10,
+                                 d_feat=16)
+    g = jax.tree.map(lambda x: jnp.asarray(x) if isinstance(
+        x, np.ndarray) else x, g)
+    params = gnn.init_params(jax.random.PRNGKey(4), cfg)
+    # close over g: n_graphs is static (segment_sum num_segments)
+    loss, m = jax.jit(lambda p: gnn.loss_fn(p, g, cfg))(params)
+    assert np.isfinite(float(loss))
+    energy, forces = gnn.predict(params, g, cfg)
+    assert energy.shape == (4,) and forces.shape == (24, 3)
+
+
+def test_full_configs_match_assignment():
+    """The full configs carry the exact assigned hyperparameters."""
+    c = registry.get("deepseek-67b").full_config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (95, 8192, 64, 8, 22016, 102400)
+    c = registry.get("stablelm-12b").full_config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (40, 5120, 32, 8, 13824, 100352)
+    c = registry.get("gemma3-27b").full_config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab,
+            c.local_global_ratio) == (62, 5376, 32, 16, 21504, 262144, 5)
+    c = registry.get("llama4-scout-17b-a16e").full_config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab,
+            c.n_experts, c.moe_top_k) == (48, 5120, 40, 8, 8192, 202048, 16, 1)
+    c = registry.get("moonshot-v1-16b-a3b").full_config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab,
+            c.n_experts, c.moe_top_k) == (48, 2048, 16, 16, 1408, 163840,
+                                          64, 6)
+    c = registry.get("equiformer-v2").full_config()
+    assert (c.n_layers, c.c, c.l_max, c.m_max, c.n_heads) == (12, 128, 6, 2, 8)
+    c = registry.get("sasrec").full_config()
+    assert (c.embed_dim, c.n_blocks, c.n_heads, c.seq_len) == (50, 2, 1, 50)
+    c = registry.get("mind").full_config()
+    assert (c.embed_dim, c.n_interests, c.capsule_iters) == (64, 4, 3)
+    c = registry.get("din").full_config()
+    assert (c.embed_dim, c.seq_len, c.attn_mlp, c.mlp) == (
+        18, 100, (80, 40), (200, 80))
+    c = registry.get("dlrm-rm2").full_config()
+    assert (c.n_dense, c.n_sparse, c.embed_dim, c.bot_mlp, c.top_mlp) == (
+        13, 26, 64, (512, 256, 64), (512, 512, 256, 1))
+
+
+def test_all_cells_enumerate_40():
+    cells = list(registry.all_cells())
+    assert len(cells) == 40

@@ -1,0 +1,95 @@
+"""Sketch unit + property tests (paper §4.1/§5, Theorem 5.1 invariant)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sketch
+
+
+def _random_sparse(gen, n, psi, pad):
+    idx = np.full(pad, -1, np.int32)
+    val = np.zeros(pad, np.float32)
+    c = min(psi, pad)
+    idx[:c] = np.sort(gen.choice(n, c, replace=False))
+    val[:c] = gen.normal(0, 1, c)
+    val[:c] = np.where(val[:c] == 0, 1e-6, val[:c])
+    return idx, val
+
+
+@pytest.mark.parametrize("h", [1, 2, 3])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_bounds_invariant(h, dtype, rng):
+    """Decoded value is ALWAYS within [lb, ub] — Theorem 5.1's ingredient."""
+    n, m, pad = 300, 16, 40
+    mp = jnp.asarray(sketch.make_mappings(0, n, m, h))
+    for trial in range(20):
+        idx, val = _random_sparse(rng, n, 25, pad)
+        u, l = sketch.encode(mp, m, jnp.asarray(idx), jnp.asarray(val),
+                             dtype=dtype)
+        ub, lb = sketch.decode_vector(mp, u, l, jnp.asarray(idx))
+        keep = idx >= 0
+        assert np.all(np.asarray(ub)[keep] >= val[keep] - 0), \
+            (np.asarray(ub)[keep] - val[keep]).min()
+        assert np.all(np.asarray(lb)[keep] <= val[keep] + 0)
+
+
+def test_largest_value_exact(rng):
+    """The max value in a vector is always recovered exactly (paper §5.2)."""
+    n, m, h, pad = 200, 8, 1, 30
+    mp = jnp.asarray(sketch.make_mappings(3, n, m, h))
+    for _ in range(10):
+        idx, val = _random_sparse(rng, n, 20, pad)
+        u, l = sketch.encode(mp, m, jnp.asarray(idx), jnp.asarray(val),
+                             dtype="float32")
+        ub, _ = sketch.decode_vector(mp, u, l, jnp.asarray(idx))
+        j = np.argmax(np.where(idx >= 0, val, -np.inf))
+        assert np.asarray(ub)[j] == pytest.approx(val[j], abs=1e-6)
+
+
+def test_positive_only_sinnamon_plus(rng):
+    n, m, pad = 100, 8, 20
+    mp = jnp.asarray(sketch.make_mappings(1, n, m, 2))
+    idx, val = _random_sparse(rng, n, 15, pad)
+    val = np.abs(val)
+    u, l = sketch.encode(mp, m, jnp.asarray(idx), jnp.asarray(val),
+                         positive_only=True)
+    assert l is None
+    ub, lb = sketch.decode_vector(mp, u, None, jnp.asarray(idx))
+    keep = idx >= 0
+    assert np.all(np.asarray(ub)[keep] >= val[keep])
+    assert np.all(np.asarray(lb) == 0)
+
+
+@given(vals=st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                     min_size=1, max_size=16))
+@settings(max_examples=60, deadline=None)
+def test_bf16_directed_rounding_property(vals):
+    """Directed bf16 rounding preserves bound directions for any floats.
+
+    f32 subnormals are excluded: XLA-CPU flushes them to zero on input, so
+    they are indistinguishable from 0 to the engine (hardware FTZ).
+    """
+    arr = np.array(vals, np.float32)
+    arr = np.where(np.abs(arr) < 1.1754944e-38, 0.0, arr)
+    x = jnp.asarray(arr)
+    up = sketch.quantize_directed(x, "bfloat16", toward_pos_inf=True)
+    dn = sketch.quantize_directed(x, "bfloat16", toward_pos_inf=False)
+    assert np.all(np.asarray(up, np.float32) >= np.asarray(x))
+    assert np.all(np.asarray(dn, np.float32) <= np.asarray(x))
+
+
+@given(seed=st.integers(0, 2**31 - 1), h=st.integers(1, 3))
+@settings(max_examples=25, deadline=None)
+def test_upper_bound_property(seed, h):
+    """Hypothesis: encode→decode never underestimates (any vector, any h)."""
+    gen = np.random.default_rng(seed)
+    n, m, pad = 128, 8, 24
+    mp = jnp.asarray(sketch.make_mappings(seed % 97, n, m, h))
+    idx, val = _random_sparse(gen, n, gen.integers(1, 20), pad)
+    u, l = sketch.encode(mp, m, jnp.asarray(idx), jnp.asarray(val))
+    ub, lb = sketch.decode_vector(mp, u, l, jnp.asarray(idx))
+    keep = idx >= 0
+    assert np.all(np.asarray(ub)[keep] >= val[keep])
+    assert np.all(np.asarray(lb)[keep] <= val[keep])

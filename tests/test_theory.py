@@ -1,0 +1,129 @@
+"""Monte-Carlo validation of the §5 theory (paper Tables 1–2, Fig. 4/5/7)."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sketch, theory
+
+
+def _simulate_errors(gen, n, m, h, p, trials, dist="gaussian", sigma=1.0):
+    """Empirical overestimation errors of the upper-bound sketch."""
+    mp = jnp.asarray(sketch.make_mappings(7, n, m, h))
+    errs, probs = [], []
+    for t in range(trials):
+        active = gen.random(n) < p
+        k = active.sum()
+        if k == 0:
+            continue
+        idx = np.where(active)[0].astype(np.int32)
+        if dist == "gaussian":
+            vals = gen.normal(0, sigma, k).astype(np.float32)
+        else:
+            vals = gen.uniform(-1, 1, k).astype(np.float32)
+        pad = np.full(n, -1, np.int32)
+        pv = np.zeros(n, np.float32)
+        pad[:k] = idx
+        pv[:k] = vals
+        u, l = sketch.encode(mp, m, jnp.asarray(pad), jnp.asarray(pv),
+                             dtype="float32")
+        ub, _ = sketch.decode_vector(mp, u, l, jnp.asarray(pad))
+        e = np.asarray(ub)[:k] - vals
+        errs.append(e)
+        probs.append((e > 1e-7).mean())
+    return np.concatenate(errs), float(np.mean(probs))
+
+
+def test_theorem_5_2_probability_gaussian():
+    """Empirical P[overestimate] matches Eq. (6)/(12) within MC error."""
+    gen = np.random.default_rng(0)
+    n, psi = 600, 120
+    p = psi / n
+    for m in (60, 120):
+        _, emp = _simulate_errors(gen, n, m, 1, p, trials=60)
+        pred = theory.prob_overestimate_gaussian_closed(m, 1, n, p)
+        assert abs(emp - pred) < 0.06, (m, emp, pred)
+
+
+def test_theorem_5_4_error_cdf():
+    """Empirical error CDF matches Eq. (13) (paper Fig. 7a)."""
+    gen = np.random.default_rng(1)
+    n, psi, m = 600, 120, 120
+    p = psi / n
+    errs, _ = _simulate_errors(gen, n, m, 1, p, trials=60)
+    pdf, cdf, grid = theory.gaussian_dist(0, 1.0)
+    for delta in (0.25, 0.5, 1.0, 2.0):
+        emp = (errs <= delta).mean()
+        pred = theory.error_cdf(delta, pdf, cdf, grid, psi, m, 1)
+        assert abs(emp - pred) < 0.06, (delta, emp, pred)
+
+
+def test_lemma_5_5_expected_error():
+    gen = np.random.default_rng(2)
+    n, psi, m = 600, 120, 120
+    errs, _ = _simulate_errors(gen, n, m, 1, psi / n, trials=60)
+    pdf, cdf, grid = theory.gaussian_dist(0, 1.0)
+    pred = theory.expected_error(pdf, cdf, grid, psi, m, 1)
+    assert abs(errs.mean() - pred) < 0.06, (errs.mean(), pred)
+
+
+def test_corollary_5_6_closed_form_matches_general():
+    """Cor. 5.6 replaces 1-Φ(α+δ) with the pair-difference tail 1-Φ'(δ) —
+    itself an approximation (paper Appendix B), so agreement is coarse."""
+    pdf, cdf, grid = theory.gaussian_dist(0, 0.5)
+    n, p, m, h = 600, 0.2, 60, 2
+    for delta in (0.1, 0.4, 1.0):
+        general = theory.error_cdf(delta, pdf, cdf, grid, (n - 1) * p, m, h)
+        closed = theory.error_cdf_gaussian_closed(delta, 0.5, m, h, n, p)
+        assert abs(general - closed) < 0.15, (delta, general, closed)
+
+
+def test_lemma_5_7_sizing_rule():
+    """m from Eq. (18) actually achieves P[err > δ] < ε (Monte-Carlo)."""
+    gen = np.random.default_rng(3)
+    n, p, sigma, delta, eps, h = 600, 0.2, 1.0, 1.0, 0.2, 1
+    m = int(math.ceil(theory.required_m(delta, eps, h, n, p, sigma)))
+    errs, _ = _simulate_errors(gen, n, m, h, p, trials=40)
+    assert (errs > delta).mean() < eps + 0.05
+
+
+def test_table1_paper_values():
+    """Reproduce the uniform row of paper Table 1 to 2 decimals."""
+    pdf, cdf, grid = theory.uniform_dist(-1, 1)
+    got = [round(theory.prob_overestimate(pdf, cdf, grid, 120.0, m, h), 2)
+           for m in (60, 120, 240) for h in (1, 2, 3)]
+    want = [0.57, 0.63, 0.69, 0.37, 0.38, 0.43, 0.21, 0.17, 0.17]
+    assert np.allclose(got, want, atol=0.015), got
+
+
+def test_theorem_5_8_z_normality():
+    """The standardised inner-product error Z is ~N(0,1) (paper Fig. 5)."""
+    gen = np.random.default_rng(4)
+    n, psi_d, m, psi_q = 600, 120, 60, 16
+    p = psi_d / n
+    pdf, cdf, grid = theory.gaussian_dist(0, 1.0)
+    mu = theory.expected_error(pdf, cdf, grid, psi_d, m, 1)
+    # variance of the active error via the CDF
+    deltas = np.linspace(0, 8, 400)
+    tail = 1.0 - np.asarray(theory.error_cdf(deltas, pdf, cdf, grid,
+                                             psi_d, m, 1))
+    e2 = float(np.trapezoid(2 * deltas * tail, deltas))
+    var_active = e2 - mu ** 2
+    _, var_u = theory.unconditional_moments(p, mu, var_active)
+
+    zs = []
+    errs, _ = _simulate_errors(gen, n, m, 1, p, trials=200)
+    gen2 = np.random.default_rng(5)
+    for _ in range(400):
+        qv = gen2.normal(0, 1, psi_q)
+        # per-coordinate unconditional error sample (0 w.p. 1-p)
+        ei = np.where(gen2.random(psi_q) < p,
+                      gen2.choice(errs, psi_q), 0.0)
+        ip_err = np.sum(np.abs(qv) * ei)   # sign-aligned: always upper bound
+        zs.append(theory.z_statistic(np.array([ip_err]), np.abs(qv), p, mu,
+                                     var_u)[0])
+    zs = np.asarray(zs)
+    assert abs(zs.mean()) < 0.25, zs.mean()
+    assert abs(zs.std() - 1.0) < 0.3, zs.std()
