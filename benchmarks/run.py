@@ -1,26 +1,40 @@
 # One function per paper table. Prints ``name,value,derived`` CSV.
+# Exits non-zero if any table function errors, so CI smoke jobs fail loudly.
+import os
 import sys
 import time
 
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
 
 def main() -> None:
-    from benchmarks import paper
+    from benchmarks import paper, streaming
 
     only = sys.argv[1] if len(sys.argv) > 1 else None
+    fns = [fn for fn in paper.ALL + streaming.ALL
+           if not only or only in fn.__name__]
+    if not fns:
+        print(f"no benchmark matches {only!r}", file=sys.stderr)
+        sys.exit(2)
+    failed = False
     print("name,value,derived")
-    for fn in paper.ALL:
-        if only and only not in fn.__name__:
-            continue
+    for fn in fns:
         t0 = time.time()
         try:
             rows = fn()
         except Exception as e:                      # noqa: BLE001
             print(f"{fn.__name__},ERROR,{type(e).__name__}: {e}")
+            failed = True
             continue
         for name, value, derived in rows:
             print(f"{name},{value},{derived}")
         print(f"# {fn.__name__} took {time.time() - t0:.1f}s",
               file=sys.stderr)
+    if failed:
+        sys.exit(1)
 
 
 if __name__ == '__main__':

@@ -133,6 +133,40 @@ def insert_batch(state: SinnamonState, spec: EngineSpec, slots: Array,
     return state
 
 
+def insert_batch_masked(state: SinnamonState, spec: EngineSpec, slots: Array,
+                        ext_ids: Array, idx: Array, val: Array,
+                        mask: Array) -> SinnamonState:
+    """:func:`insert_batch` where ``mask=False`` entries are exact no-ops.
+
+    This is the shard_map-body form: each shard receives a host-routed,
+    padded slice of the update batch and applies only its own entries, so a
+    sharded insert needs no collectives (see repro.serving.sharded).
+    """
+
+    def body(st, args):
+        slot, eid, i, v, ok = args
+        st = jax.lax.cond(ok, lambda s: insert(s, spec, slot, eid, i, v),
+                          lambda s: s, st)
+        return st, None
+
+    state, _ = jax.lax.scan(body, state, (slots, ext_ids, idx, val, mask))
+    return state
+
+
+def delete_batch_masked(state: SinnamonState, spec: EngineSpec, slots: Array,
+                        mask: Array) -> SinnamonState:
+    """Masked batch delete (scan); the shard_map-body twin of delete."""
+
+    def body(st, args):
+        slot, ok = args
+        st = jax.lax.cond(ok, lambda s: delete(s, spec, slot),
+                          lambda s: s, st)
+        return st, None
+
+    state, _ = jax.lax.scan(body, state, (slots, mask))
+    return state
+
+
 def delete(state: SinnamonState, spec: EngineSpec, slot) -> SinnamonState:
     """Paper §4.3: clear inverted-index bits; leave the sketch column stale."""
     idx = state.store.indices[slot]
@@ -143,6 +177,29 @@ def delete(state: SinnamonState, spec: EngineSpec, slot) -> SinnamonState:
         bits=bits, store=store,
         active=state.active.at[slot].set(False),
         ids=state.ids.at[slot].set(-1),
+    )
+
+
+def grow_state(state: SinnamonState, spec: EngineSpec,
+               new_spec: EngineSpec) -> SinnamonState:
+    """Pad every per-slot axis from spec.capacity to new_spec.capacity.
+
+    Pure function of the arrays (slot numbering is preserved), so it works
+    both as the host-side reallocation of :class:`SinnamonIndex` and as a
+    shard-local shard_map body where each shard grows its own slot range.
+    """
+    c = spec.capacity
+    st = init(new_spec)
+    return SinnamonState(
+        mappings=state.mappings,
+        u=st.u.at[:, :c].set(state.u),
+        l=None if state.l is None else st.l.at[:, :c].set(state.l),
+        bits=st.bits.at[:, : c // 32].set(state.bits),
+        store=vecstore.VecStore(
+            indices=st.store.indices.at[:c].set(state.store.indices),
+            values=st.store.values.at[:c].set(state.store.values)),
+        active=st.active.at[:c].set(state.active),
+        ids=st.ids.at[:c].set(state.ids),
     )
 
 
@@ -261,6 +318,9 @@ class SinnamonIndex:
         self._search = jax.jit(
             search, static_argnums=(1, 4, 5, 6),
             static_argnames=("score_fn",))
+        self._search_many = jax.jit(
+            search_batch, static_argnums=(1, 4, 5, 6),
+            static_argnames=("score_fn",))
 
     # -- streaming updates ---------------------------------------------------
     def insert(self, ext_id: int, idx, val) -> None:
@@ -301,28 +361,29 @@ class SinnamonIndex:
             k, kprime, budget, filter_mask, score_fn=score_fn)
         return np.asarray(ids), np.asarray(scores)
 
+    def search_many(self, q_idx, q_val, k: int, kprime: Optional[int] = None,
+                    budget: Optional[int] = None, filter_mask=None,
+                    score_fn=None):
+        """Batched search: q_idx/q_val are [B, Lq]; one jit dispatch total."""
+        kprime = kprime if kprime is not None else max(5 * k, k)
+        kprime = min(kprime, self.spec.capacity)
+        k = min(k, kprime)
+        ids, scores, _ = self._search_many(
+            self.state, self.spec, jnp.asarray(q_idx), jnp.asarray(q_val),
+            k, kprime, budget, filter_mask, score_fn=score_fn)
+        return np.asarray(ids), np.asarray(scores)
+
     # -- capacity management ----------------------------------------------------
     def grow(self, new_capacity: int) -> None:
         """Reallocate to a larger capacity, preserving slot numbering."""
-        old, spec = self.state, self.spec
+        spec = self.spec
         if new_capacity <= spec.capacity or new_capacity % 32 != 0:
             raise ValueError("new capacity must be a larger multiple of 32")
         new_spec = dataclasses.replace(spec, capacity=new_capacity)
-        st = init(new_spec)
-        c = spec.capacity
-        self.state = SinnamonState(
-            mappings=old.mappings,
-            u=st.u.at[:, :c].set(old.u),
-            l=None if old.l is None else st.l.at[:, :c].set(old.l),
-            bits=st.bits.at[:, : c // 32].set(old.bits),
-            store=vecstore.VecStore(
-                indices=st.store.indices.at[:c].set(old.store.indices),
-                values=st.store.values.at[:c].set(old.store.values)),
-            active=st.active.at[:c].set(old.active),
-            ids=st.ids.at[:c].set(old.ids),
-        )
+        self.state = grow_state(self.state, spec, new_spec)
         self.spec = new_spec
-        self._free = list(range(new_capacity - 1, c - 1, -1)) + self._free
+        self._free = (list(range(new_capacity - 1, spec.capacity - 1, -1))
+                      + self._free)
 
     @property
     def size(self) -> int:

@@ -10,6 +10,7 @@ import math
 from typing import Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -43,6 +44,19 @@ def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
 
 def n_shards(mesh: Mesh, axes: Sequence[str]) -> int:
     return math.prod(mesh.shape[a] for a in axes)
+
+
+def linear_index(mesh: Mesh, axes: Sequence[str]):
+    """Linearised shard index over ``axes``, traced inside a shard_map body.
+
+    Major-to-minor in the order given, matching how a PartitionSpec with
+    ``axes`` as one tuple entry lays contiguous blocks over the mesh — so
+    shard ``i`` of an array sharded P((axes,)) owns block ``i``.
+    """
+    i = 0
+    for ax in axes:
+        i = i * mesh.shape[ax] + jax.lax.axis_index(ax)
+    return jnp.int32(i)
 
 
 def named(mesh: Mesh, *spec) -> NamedSharding:

@@ -6,7 +6,11 @@ matrix (O(B·C) bytes).  The hierarchical merge below all-gathers only the
 per-shard candidate tuples (O(B·shards·k') bytes — the paper's "monolithic
 index, segment the lists" parallelism mapped onto SPMD):
 
-    local top-k'  →  all-gather (value, global-id) pairs  →  global top-k.
+    local top-k'  →  all-gather (value, payload...) tuples  →  global top-k.
+
+Payloads may be a single array or a tuple of arrays (e.g. external id AND a
+packed (shard, slot) locator) — every payload rides the same top-k permutation
+so one merge carries all of them.
 
 Used inside shard_map bodies (see repro.serving.sharded) and directly by
 tests on a 1-device mesh.
@@ -19,27 +23,59 @@ from typing import Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+# ---------------------------------------------------------------------------
+# (shard, slot) payload encoding
+# ---------------------------------------------------------------------------
+# Candidate tuples crossing shards carry a packed int32 locator so the host
+# (or a later pipeline stage) can route follow-up work — delete, re-rank,
+# cache fill — straight back to the owning shard without a lookup table.
 
-def local_candidates(scores: jax.Array, payload: jax.Array, k: int
-                     ) -> Tuple[jax.Array, jax.Array]:
-    """Per-shard top-k along the last axis; returns (values, payload)."""
+SLOT_BITS = 24                      # up to 16M slots per shard
+_SLOT_MASK = (1 << SLOT_BITS) - 1
+
+
+def pack_shard_slot(shard, slot) -> jax.Array:
+    """Encode (shard, local slot) into one int32: shard << SLOT_BITS | slot."""
+    shard = jnp.asarray(shard, jnp.int32)
+    slot = jnp.asarray(slot, jnp.int32)
+    return (shard << SLOT_BITS) | (slot & _SLOT_MASK)
+
+
+def unpack_shard_slot(packed) -> Tuple[jax.Array, jax.Array]:
+    """Decode :func:`pack_shard_slot` back to (shard, local slot)."""
+    packed = jnp.asarray(packed, jnp.int32)
+    return packed >> SLOT_BITS, packed & _SLOT_MASK
+
+
+def _as_tuple(payload):
+    return (payload, True) if isinstance(payload, tuple) else ((payload,),
+                                                               False)
+
+
+def local_candidates(scores: jax.Array, payload, k: int):
+    """Per-shard top-k along the last axis; returns (values, payload(s))."""
     vals, pos = jax.lax.top_k(scores, k)
-    return vals, jnp.take_along_axis(
-        jnp.broadcast_to(payload, scores.shape), pos, axis=-1)
+    pays, is_tuple = _as_tuple(payload)
+    out = tuple(jnp.take_along_axis(jnp.broadcast_to(p, scores.shape), pos,
+                                    axis=-1) for p in pays)
+    return vals, (out if is_tuple else out[0])
 
 
-def merge_over_axes(vals: jax.Array, payload: jax.Array,
-                    axes: Sequence[str], k: int):
+def merge_over_axes(vals: jax.Array, payload, axes: Sequence[str], k: int):
     """All-gather candidate tuples over mesh ``axes`` and take the global top-k.
 
+    ``payload`` is one array or a tuple of arrays, all shaped like ``vals``.
     Must run inside shard_map with ``axes`` as manual axes.  Output is
     replicated over ``axes``.
     """
+    pays, is_tuple = _as_tuple(payload)
     for ax in axes:
         vals = jax.lax.all_gather(vals, ax, axis=-1, tiled=True)
-        payload = jax.lax.all_gather(payload, ax, axis=-1, tiled=True)
+        pays = tuple(jax.lax.all_gather(p, ax, axis=-1, tiled=True)
+                     for p in pays)
     top_vals, pos = jax.lax.top_k(vals, k)
-    return top_vals, jnp.take_along_axis(payload, pos, axis=-1)
+    out = tuple(jnp.take_along_axis(p, pos, axis=-1) for p in pays)
+    return top_vals, (out if is_tuple else out[0])
 
 
 def topk_with_ids(scores: jax.Array, ids: jax.Array, k: int,

@@ -2,22 +2,20 @@
 then serve batched queries with the anytime budget.
 
     PYTHONPATH=src python -m repro.launch.serve --docs 10000 --queries 64 \
-        [--budget 16] [--kprime 800] [--index-buckets 2048]
+        [--budget 16] [--kprime 800] [--index-buckets 2048] [--shards 4]
+
+``--shards N`` (N > 1) serves through the mesh-sharded streaming index on a
+host-local mesh (N forced host devices, corpus sharded over 'model'), using
+the batched `query_many` path; the default is the single-device index.
 """
 
 from __future__ import annotations
 
 import argparse
-
-import numpy as np
-
-from repro.core.engine import EngineSpec, SinnamonIndex
-from repro.core.linscan import brute_force_topk
-from repro.data import synth
-from repro.serving.serve import QueryServer
+import os
 
 
-def main():
+def parse_args(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--docs", type=int, default=10_000)
     ap.add_argument("--queries", type=int, default=64)
@@ -27,30 +25,64 @@ def main():
     ap.add_argument("--m", type=int, default=60)
     ap.add_argument("--h", type=int, default=1)
     ap.add_argument("--index-buckets", type=int, default=None)
-    ap.add_argument("--dataset", default="splade_like",
-                    choices=list(synth.DATASETS))
-    args = ap.parse_args()
+    ap.add_argument("--shards", type=int, default=1,
+                    help=">1: sharded streaming index on a host-local mesh")
+    ap.add_argument("--query-batch", type=int, default=16)
+    ap.add_argument("--dataset", default="splade_like")
+    return ap.parse_args(argv)
+
+
+def main():
+    args = parse_args()
+    if args.shards > 1:
+        # Must happen before jax initialises its backends; append so any
+        # user-provided XLA_FLAGS survive.
+        flag = f"--xla_force_host_platform_device_count={args.shards}"
+        prev = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in prev:
+            os.environ["XLA_FLAGS"] = f"{prev} {flag}".strip()
+
+    import numpy as np
+
+    from repro.core.engine import EngineSpec, SinnamonIndex
+    from repro.core.linscan import brute_force_topk
+    from repro.data import synth
+    from repro.distributed import mesh as meshlib
+    from repro.serving.serve import QueryServer
+    from repro.serving.sharded import ShardedSinnamonIndex
 
     ds = synth.DATASETS[args.dataset]
     idx, val = synth.make_corpus(0, ds, args.docs, pad=256)
     qi, qv = synth.make_queries(1, ds, args.queries, pad=96)
-    spec = EngineSpec(n=ds.n, m=args.m, h=args.h,
-                      capacity=((args.docs + 31) // 32) * 32, max_nnz=256,
-                      positive_only=ds.nonneg,
-                      index_buckets=args.index_buckets)
-    index = SinnamonIndex(spec)
+    cap = ((args.docs + 31) // 32) * 32
+    if args.shards > 1:
+        cap_local = ((cap // args.shards + 31) // 32) * 32
+        spec = EngineSpec(n=ds.n, m=args.m, h=args.h, capacity=cap_local,
+                          max_nnz=256, positive_only=ds.nonneg,
+                          index_buckets=args.index_buckets)
+        mesh = meshlib.make_mesh((1, args.shards), ("data", "model"))
+        index = ShardedSinnamonIndex(spec, mesh)
+    else:
+        spec = EngineSpec(n=ds.n, m=args.m, h=args.h, capacity=cap,
+                          max_nnz=256, positive_only=ds.nonneg,
+                          index_buckets=args.index_buckets)
+        index = SinnamonIndex(spec)
     for lo in range(0, args.docs, 2048):
         hi = min(lo + 2048, args.docs)
         index.insert_many(list(range(lo, hi)), idx[lo:hi], val[lo:hi])
-    print(f"indexed {index.size} docs; bytes: {index.memory_bytes()}")
+    n_shards = args.shards if args.shards > 1 else 1
+    print(f"indexed {index.size} docs over {n_shards} shard(s)")
 
     server = QueryServer(index, k=args.k, kprime=args.kprime,
                          budget=args.budget)
     recalls = []
-    for b in range(args.queries):
-        ids, _ = server.query(qi[b], qv[b])
-        ids0, _ = brute_force_topk(idx, val, qi[b], qv[b], ds.n, args.k)
-        recalls.append(len(set(ids.tolist()) & set(ids0.tolist())) / args.k)
+    for lo in range(0, args.queries, args.query_batch):
+        hi = min(lo + args.query_batch, args.queries)
+        ids, _ = server.query_many(qi[lo:hi], qv[lo:hi])
+        for b in range(lo, hi):
+            ids0, _ = brute_force_topk(idx, val, qi[b], qv[b], ds.n, args.k)
+            recalls.append(
+                len(set(ids[b - lo].tolist()) & set(ids0.tolist())) / args.k)
     lat = server.latency_percentiles()
     print(f"recall@{args.k}={np.mean(recalls):.3f}  "
           f"p50={lat['p50']:.1f}ms p90={lat['p90']:.1f}ms "

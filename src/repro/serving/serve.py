@@ -13,17 +13,21 @@
 from __future__ import annotations
 
 import time
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core.engine import SinnamonIndex
+from repro.serving.sharded import ShardedSinnamonIndex
 
 
 class QueryServer:
-    def __init__(self, index: SinnamonIndex, k: int = 10,
-                 kprime: int = 1000, budget: Optional[int] = None,
-                 score_fn=None):
+    """Serves one index — single-device or mesh-sharded; both expose the same
+    ``search`` / ``search_many`` surface, so the server is layout-agnostic."""
+
+    def __init__(self, index: Union[SinnamonIndex, ShardedSinnamonIndex],
+                 k: int = 10, kprime: int = 1000,
+                 budget: Optional[int] = None, score_fn=None):
         self.index = index
         self.k, self.kprime, self.budget = k, kprime, budget
         self.score_fn = score_fn
@@ -36,6 +40,23 @@ class QueryServer:
             score_fn=self.score_fn)
         self.stats["queries"] += 1
         self.stats["latency_ms"].append((time.perf_counter() - t0) * 1e3)
+        return ids, scores
+
+    def query_many(self, q_idx, q_val):
+        """Batched serving path: [B, Lq] queries in ONE device dispatch.
+
+        Amortizes dispatch + (on a sharded index) the candidate merge across
+        the batch; per-query latency is recorded as batch time / B, so the
+        percentile accounting stays comparable with :meth:`query`.
+        """
+        bn = len(q_idx)
+        t0 = time.perf_counter()
+        ids, scores = self.index.search_many(
+            q_idx, q_val, k=self.k, kprime=self.kprime, budget=self.budget,
+            score_fn=self.score_fn)
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        self.stats["queries"] += bn
+        self.stats["latency_ms"].extend([dt_ms / bn] * bn)
         return ids, scores
 
     def latency_percentiles(self):

@@ -2,18 +2,32 @@
 
 Corpus slots are sharded over the (pod, model) mesh axes, the query batch over
 data.  Scoring and the exact rerank are fully shard-local; only (k'-sized)
-candidate tuples cross shards (see repro.distributed.topk).  This is the
-``serve_step`` that the multi-pod dry-run lowers for the paper's own workload
-and that `repro.launch.serve` drives.
+candidate tuples cross shards (see repro.distributed.topk).
+
+This module now covers the full *streaming* lifecycle at sharded scale:
+
+* ``make_search_step``  — batched SPMD search (the original serve step),
+  returning external ids plus packed (shard, slot) locators.
+* ``make_insert_step`` / ``make_delete_step`` — collective-free shard-local
+  updates: the host routes each document to its owning shard (hash of the
+  external id), pads the per-shard update batches to one rectangle, and every
+  shard applies only its masked slice.
+* ``make_grow_step``    — shard-local capacity growth (each shard pads its own
+  slot range; the re-laid-out global state falls out of the out_specs).
+* ``ShardedSinnamonIndex`` — the host wrapper that owns routing, per-shard
+  slot free lists, and the id → (shard, slot) map, mirroring the
+  single-device ``SinnamonIndex`` API (insert/delete/search/grow).
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -23,10 +37,14 @@ from repro.distributed import topk
 from repro.storage import vecstore
 
 
+def _corpus_spec(mesh: Mesh):
+    corpus = meshlib.corpus_axes(mesh)
+    return corpus if len(corpus) > 1 else (corpus[0] if corpus else None)
+
+
 def state_pspecs(mesh: Mesh, positive_only: bool = False) -> eng.SinnamonState:
     """PartitionSpecs for every SinnamonState leaf (corpus over pod+model)."""
-    corpus = meshlib.corpus_axes(mesh)
-    c = corpus if len(corpus) > 1 else (corpus[0] if corpus else None)
+    c = _corpus_spec(mesh)
     return eng.SinnamonState(
         mappings=P(),                      # replicated
         u=P(None, c),
@@ -51,8 +69,12 @@ def make_search_step(mesh: Mesh, local_spec: eng.EngineSpec, *,
     """Build the jittable SPMD search step.
 
     local_spec.capacity is the *per-shard* slot count.  Returns
-    ``step(state, q_idx[B, Lq], q_val[B, Lq]) -> (scores[B, k], ids[B, k])``
-    with the batch sharded over 'data' and outputs replicated over corpus axes.
+    ``step(state, q_idx[B, Lq], q_val[B, Lq])
+        -> (scores[B, k], ids[B, k], locators[B, k])``
+    with the batch sharded over 'data' and outputs replicated over corpus
+    axes.  ``locators`` packs (shard, local slot) per hit
+    (see topk.pack_shard_slot) so follow-up work routes straight back to the
+    owning shard.
     """
     corpus = meshlib.corpus_axes(mesh)
     qspec = P("data") if "data" in mesh.axis_names else P()
@@ -71,20 +93,275 @@ def make_search_step(mesh: Mesh, local_spec: eng.EngineSpec, *,
                          )(slots, q_dense)                     # [b, kl]
         exact = jnp.where(jnp.isneginf(ub), -jnp.inf, exact)
         gids = state.ids[slots]
+        shard = meshlib.linear_index(mesh, corpus)
+        loc = topk.pack_shard_slot(shard, slots)
         if corpus:
-            return topk.merge_over_axes(exact, gids, corpus, k)
+            vals, (ids, loc) = topk.merge_over_axes(
+                exact, (gids, loc), corpus, k)
+            return vals, ids, loc
         vals, pos = jax.lax.top_k(exact, k)
-        return vals, jnp.take_along_axis(gids, pos, axis=-1)
+        take = lambda p: jnp.take_along_axis(p, pos, axis=-1)
+        return vals, take(gids), take(loc)
 
     sharded = shard_map(
         local_search, mesh=mesh,
         in_specs=(state_pspecs(mesh, local_spec.positive_only), qspec, qspec),
-        out_specs=(qspec, qspec),
+        out_specs=(qspec, qspec, qspec),
         check_rep=False,
     )
     return jax.jit(sharded)
 
 
+# ---------------------------------------------------------------------------
+# Collective-free SPMD updates
+# ---------------------------------------------------------------------------
+# Update batches arrive as [S, B, ...] rectangles whose leading axis is
+# sharded over the corpus axes: shard s sees only its own [1, B, ...] slice,
+# applies the mask-valid entries against its local slots, and no bytes ever
+# cross shards.  The host (ShardedSinnamonIndex) is responsible for routing —
+# entry (s, b) must actually belong to shard s.
+
+def make_insert_step(mesh: Mesh, local_spec: eng.EngineSpec):
+    """``step(state, slots[S,B], ids[S,B], idx[S,B,P], val[S,B,P], mask[S,B])``
+    → state, with every array's leading axis sharded over the corpus axes."""
+    c = _corpus_spec(mesh)
+    sspec = state_pspecs(mesh, local_spec.positive_only)
+    uspec = P(c)
+
+    def local_insert(state, slots, eids, idx, val, mask):
+        return eng.insert_batch_masked(state, local_spec, slots[0], eids[0],
+                                       idx[0], val[0], mask[0])
+
+    sharded = shard_map(
+        local_insert, mesh=mesh,
+        in_specs=(sspec, uspec, uspec, uspec, uspec, uspec),
+        out_specs=sspec, check_rep=False)
+    return jax.jit(sharded)
+
+
+def make_delete_step(mesh: Mesh, local_spec: eng.EngineSpec):
+    """``step(state, slots[S,B], mask[S,B])`` → state (shard-local deletes)."""
+    c = _corpus_spec(mesh)
+    sspec = state_pspecs(mesh, local_spec.positive_only)
+    uspec = P(c)
+
+    def local_delete(state, slots, mask):
+        return eng.delete_batch_masked(state, local_spec, slots[0], mask[0])
+
+    sharded = shard_map(
+        local_delete, mesh=mesh,
+        in_specs=(sspec, uspec, uspec),
+        out_specs=sspec, check_rep=False)
+    return jax.jit(sharded)
+
+
+def make_grow_step(mesh: Mesh, local_spec: eng.EngineSpec,
+                   new_local_capacity: int):
+    """``step(state)`` → state with every shard grown to new_local_capacity.
+
+    Each shard pads its own slot range (pure shard-local grow_state); the
+    out_specs re-assemble the blocks into the grown global layout, so slot
+    numbering *within a shard* is preserved and no collective is emitted.
+    """
+    new_spec = dataclasses.replace(local_spec, capacity=new_local_capacity)
+    sspec_in = state_pspecs(mesh, local_spec.positive_only)
+
+    def local_grow(state):
+        return eng.grow_state(state, local_spec, new_spec)
+
+    sharded = shard_map(local_grow, mesh=mesh, in_specs=(sspec_in,),
+                        out_specs=sspec_in, check_rep=False)
+    return jax.jit(sharded), new_spec
+
+
 def shard_state(state: eng.SinnamonState, mesh: Mesh):
     """Place a host-built (global) state onto the mesh."""
     return jax.device_put(state, state_shardings(mesh, state.l is None))
+
+
+# ---------------------------------------------------------------------------
+# Host wrapper
+# ---------------------------------------------------------------------------
+
+class ShardedSinnamonIndex:
+    """Streaming host-facing index over a mesh-sharded SinnamonState.
+
+    ``spec.capacity`` is the PER-SHARD slot count; global capacity is
+    ``spec.capacity * n_shards``.  Documents are routed to an owning shard by
+    a multiplicative hash of the external id, so insert, delete and search
+    all agree on placement without any shared table beyond the host's
+    id → (shard, slot) dict.  All device work is jitted shard_map programs;
+    queries go through the hierarchical top-k merge, so only (k'·shards)
+    candidate tuples ever cross shards.
+    """
+
+    def __init__(self, spec: eng.EngineSpec, mesh: Mesh, *,
+                 update_block: int = 32):
+        self.mesh = mesh
+        self.spec = spec                       # per-shard spec
+        self.corpus = meshlib.corpus_axes(mesh)
+        self.n_shards = meshlib.n_shards(mesh, self.corpus)
+        self.update_block = update_block
+        global_spec = dataclasses.replace(
+            spec, capacity=spec.capacity * self.n_shards)
+        self.state = shard_state(eng.init(global_spec), mesh)
+        self._free = [list(range(spec.capacity - 1, -1, -1))
+                      for _ in range(self.n_shards)]
+        self._id2slot: dict[int, tuple[int, int]] = {}
+        self._steps: dict = {}
+
+    # -- routing ------------------------------------------------------------
+    def route(self, ext_id: int) -> int:
+        """Owning shard of an external id (Knuth multiplicative hash)."""
+        return ((int(ext_id) * 2654435761) & 0xFFFFFFFF) % self.n_shards
+
+    def _step(self, key, build):
+        if key not in self._steps:
+            self._steps[key] = build()
+        return self._steps[key]
+
+    # -- streaming updates --------------------------------------------------
+    def insert(self, ext_id: int, idx, val) -> None:
+        idx = np.asarray(idx, np.int32)
+        val = np.asarray(val, np.float32)
+        self.insert_many([ext_id], idx[None], val[None])
+
+    def insert_many(self, ext_ids, idx_batch, val_batch) -> None:
+        ext_ids = [int(e) for e in ext_ids]
+        if len(set(ext_ids)) != len(ext_ids):
+            # Sequential overwrite semantics: only the LAST occurrence of a
+            # duplicated id survives; earlier ones never touch the index.
+            last = {e: pos for pos, e in enumerate(ext_ids)}
+            keep = sorted(last.values())
+            ext_ids = [ext_ids[p] for p in keep]
+            idx_batch = np.asarray(idx_batch)[keep]
+            val_batch = np.asarray(val_batch)[keep]
+        stale = [e for e in ext_ids if e in self._id2slot]
+        if stale:
+            self.delete_many(stale)
+        idx_batch = self._pad(np.asarray(idx_batch, np.int32), -1)
+        val_batch = self._pad(np.asarray(val_batch, np.float32), 0)
+
+        per_shard = [[] for _ in range(self.n_shards)]
+        for pos, e in enumerate(ext_ids):
+            per_shard[self.route(e)].append(pos)
+        while any(len(self._free[s]) < len(per_shard[s])
+                  for s in range(self.n_shards)):
+            self.grow()
+
+        step = self._step("insert", lambda: make_insert_step(self.mesh,
+                                                             self.spec))
+        S, B, Pw = self.n_shards, self.update_block, self.spec.max_nnz
+        offsets = [0] * S
+        while any(offsets[s] < len(per_shard[s]) for s in range(S)):
+            slots = np.zeros((S, B), np.int32)
+            eids = np.full((S, B), -1, np.int32)
+            idxs = np.full((S, B, Pw), -1, np.int32)
+            vals = np.zeros((S, B, Pw), np.float32)
+            mask = np.zeros((S, B), bool)
+            for s in range(S):
+                take = per_shard[s][offsets[s]:offsets[s] + B]
+                offsets[s] += len(take)
+                for b, pos in enumerate(take):
+                    slot = self._free[s].pop()
+                    slots[s, b] = slot
+                    eids[s, b] = ext_ids[pos]
+                    idxs[s, b] = idx_batch[pos]
+                    vals[s, b] = val_batch[pos]
+                    mask[s, b] = True
+                    self._id2slot[ext_ids[pos]] = (s, slot)
+            self.state = step(self.state, jnp.asarray(slots),
+                              jnp.asarray(eids), jnp.asarray(idxs),
+                              jnp.asarray(vals), jnp.asarray(mask))
+
+    def delete(self, ext_id: int) -> None:
+        self.delete_many([ext_id])
+
+    def delete_many(self, ext_ids) -> None:
+        ext_ids = [int(e) for e in ext_ids]
+        missing = [e for e in ext_ids if e not in self._id2slot]
+        if missing:     # fail atomically, before any bookkeeping mutates
+            raise KeyError(f"unknown document ids: {missing[:5]}")
+        per_shard = [[] for _ in range(self.n_shards)]
+        for e in ext_ids:
+            s, slot = self._id2slot.pop(e)
+            per_shard[s].append(slot)
+        step = self._step("delete", lambda: make_delete_step(self.mesh,
+                                                             self.spec))
+        S, B = self.n_shards, self.update_block
+        offsets = [0] * S
+        while any(offsets[s] < len(per_shard[s]) for s in range(S)):
+            slots = np.zeros((S, B), np.int32)
+            mask = np.zeros((S, B), bool)
+            for s in range(S):
+                take = per_shard[s][offsets[s]:offsets[s] + B]
+                offsets[s] += len(take)
+                slots[s, :len(take)] = take
+                mask[s, :len(take)] = True
+            self.state = step(self.state, jnp.asarray(slots),
+                              jnp.asarray(mask))
+        for s in range(S):
+            self._free[s].extend(reversed(per_shard[s]))
+
+    # -- retrieval ----------------------------------------------------------
+    def search(self, q_idx, q_val, k: int, kprime: Optional[int] = None,
+               budget: Optional[int] = None, score_fn=None):
+        q_idx = np.asarray(q_idx, np.int32)
+        q_val = np.asarray(q_val, np.float32)
+        ids, scores = self.search_many(q_idx[None], q_val[None], k,
+                                       kprime=kprime, budget=budget,
+                                       score_fn=score_fn)
+        return ids[0], scores[0]
+
+    def search_many(self, q_idx, q_val, k: int,
+                    kprime: Optional[int] = None,
+                    budget: Optional[int] = None, score_fn=None,
+                    return_locators: bool = False):
+        """Batched search over [B, Lq] queries (one SPMD dispatch).
+
+        ``kprime`` is the per-shard candidate count k'.  With
+        ``return_locators`` the packed (shard, slot) payload of every hit is
+        also returned (decode with topk.unpack_shard_slot).
+        """
+        kprime = kprime if kprime is not None else max(5 * k, k)
+        kl = min(kprime, self.spec.capacity)
+        k = min(k, kl * self.n_shards)
+        key = ("search", k, kl, budget, score_fn)
+        step = self._step(key, lambda: make_search_step(
+            self.mesh, self.spec, k=k, kprime_local=kl, budget=budget,
+            score_fn=score_fn))
+        scores, ids, loc = step(self.state, jnp.asarray(q_idx),
+                                jnp.asarray(q_val))
+        if return_locators:
+            return np.asarray(ids), np.asarray(scores), np.asarray(loc)
+        return np.asarray(ids), np.asarray(scores)
+
+    # -- capacity management ------------------------------------------------
+    def grow(self, new_local_capacity: Optional[int] = None) -> None:
+        """Double (or set) every shard's local capacity, shard-locally."""
+        old_c = self.spec.capacity
+        new_c = new_local_capacity or old_c * 2
+        if new_c <= old_c or new_c % 32 != 0:
+            raise ValueError("new capacity must be a larger multiple of 32")
+        step, new_spec = make_grow_step(self.mesh, self.spec, new_c)
+        self.state = step(self.state)
+        self.spec = new_spec
+        self._steps.clear()        # cached steps close over the old capacity
+        for s in range(self.n_shards):
+            self._free[s] = (list(range(new_c - 1, old_c - 1, -1))
+                             + self._free[s])
+
+    # -- misc ----------------------------------------------------------------
+    @property
+    def size(self) -> int:
+        return len(self._id2slot)
+
+    def _pad(self, arr: np.ndarray, fill) -> np.ndarray:
+        w = self.spec.max_nnz
+        if arr.shape[1] > w:
+            raise ValueError(f"document nnz {arr.shape[1]} > max_nnz {w}")
+        if arr.shape[1] == w:
+            return arr
+        out = np.full((arr.shape[0], w), fill, arr.dtype)
+        out[:, :arr.shape[1]] = arr
+        return out

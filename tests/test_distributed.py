@@ -8,6 +8,7 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.distributed import mesh as meshlib
 from repro.distributed import rules as R
@@ -72,17 +73,24 @@ SUBPROC = textwrap.dedent("""
     local = dataclasses.replace(spec, capacity=96)
     step = sharded.make_search_step(mesh, local, k=10, kprime_local=40)
     state = sharded.shard_state(index.state, mesh)
-    scores, ids = step(state, jnp.asarray(qi), jnp.asarray(qv))
+    scores, ids, loc = step(state, jnp.asarray(qi), jnp.asarray(qv))
     ok = True
     for b in range(4):
         ids0, sc0 = brute_force_topk(idx, val, qi[b], qv[b], 300, 10)
         rec = len(set(np.asarray(ids)[b].tolist())
                   & set(ids0.tolist())) / 10
         ok &= rec >= 0.9
+    # (shard, slot) locators must resolve back to the returned external ids:
+    # global slot = shard * C_local + local slot under the contiguous layout.
+    from repro.distributed import topk as topklib
+    sh_ids, sl = topklib.unpack_shard_slot(jnp.asarray(loc))
+    gslot = np.asarray(sh_ids) * 96 + np.asarray(sl)
+    ok &= bool(np.all(np.asarray(index.state.ids)[gslot] == np.asarray(ids)))
     print("RECALL_OK" if ok else "RECALL_BAD")
 """)
 
 
+@pytest.mark.distributed
 def test_sharded_search_subprocess():
     out = subprocess.run([sys.executable, "-c", SUBPROC],
                          capture_output=True, text=True, cwd=".",

@@ -5,7 +5,6 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import engine as eng
 from repro.core.engine import EngineSpec, SinnamonIndex
@@ -159,15 +158,6 @@ def test_sinnamon_plus_nonnegative():
     assert np.mean(rec) >= 0.9
 
 
-@given(seed=st.integers(0, 10_000))
-@settings(max_examples=10, deadline=None)
-def test_insert_delete_roundtrip_property(seed):
-    """Inserting then deleting a doc restores search results exactly."""
-    index, idx, val = _index(n_docs=48, seed=seed % 17)
-    qi, qv = synth.make_queries(seed, DS, 1, pad=24)
-    before, _ = index.search(qi[0], qv[0], k=10, kprime=48)
-    extra_i, extra_v = synth.make_corpus(seed ^ 99, DS, 1, pad=48)
-    index.insert(777, extra_i[0][extra_i[0] >= 0], extra_v[0][extra_i[0] >= 0])
-    index.delete(777)
-    after, _ = index.search(qi[0], qv[0], k=10, kprime=48)
-    assert np.array_equal(before, after)
+# The hypothesis-based insert/delete round-trip property lives in
+# tests/test_engine_property.py so a missing optional `hypothesis` degrades
+# to ONE skipped module instead of erroring this whole suite at collection.

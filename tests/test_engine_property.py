@@ -1,0 +1,30 @@
+"""Property-based engine tests (require the optional `hypothesis` dev dep).
+
+Kept separate from test_engine.py so that a missing `hypothesis` degrades to
+a skipped module instead of a collection error for the whole engine suite.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="optional dev dep; property tests skip without it")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.data import synth  # noqa: E402
+
+from test_engine import DS, _index  # noqa: E402
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_insert_delete_roundtrip_property(seed):
+    """Inserting then deleting a doc restores search results exactly."""
+    index, idx, val = _index(n_docs=48, seed=seed % 17)
+    qi, qv = synth.make_queries(seed, DS, 1, pad=24)
+    before, _ = index.search(qi[0], qv[0], k=10, kprime=48)
+    extra_i, extra_v = synth.make_corpus(seed ^ 99, DS, 1, pad=48)
+    index.insert(777, extra_i[0][extra_i[0] >= 0], extra_v[0][extra_i[0] >= 0])
+    index.delete(777)
+    after, _ = index.search(qi[0], qv[0], k=10, kprime=48)
+    assert np.array_equal(before, after)

@@ -4,10 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.data import graph as graphdata
 from repro.models import gnn, sh
+
+pytestmark = pytest.mark.slow
 
 
 def _rand_rot(gen):
@@ -143,18 +144,5 @@ def test_neighbor_sampler(rng):
     assert (g.labels >= 0).sum() <= 8
 
 
-@given(seed=st.integers(0, 1000))
-@settings(max_examples=5, deadline=None)
-def test_equivariance_property(seed):
-    """Hypothesis: equivariance holds for random graphs/rotations/params."""
-    gen = np.random.default_rng(seed)
-    cfg = gnn.GNNConfig(n_layers=1, c=8, l_max=2, m_max=1, n_heads=2,
-                        n_rbf=4, f_in=3, n_out=2, edge_chunk=64)
-    params = gnn.init_params(jax.random.PRNGKey(seed), cfg)
-    g = _graph(gen, N=8, E=20, f_in=3)
-    Rm = _rand_rot(gen)
-    g_rot = g._replace(edge_vec=jnp.asarray(np.asarray(g.edge_vec) @ Rm.T))
-    f1 = gnn.forward(params, g, cfg)
-    f2 = gnn.forward(params, g_rot, cfg)
-    scale = max(float(jnp.abs(f1).max()), 1.0)
-    assert float(jnp.abs(f1[:, 0, :] - f2[:, 0, :]).max()) < 2e-3 * scale
+# The hypothesis-based equivariance property lives in
+# tests/test_gnn_property.py (see test_engine_property.py for the rationale).

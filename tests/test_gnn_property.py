@@ -1,0 +1,34 @@
+"""Property-based GNN equivariance test (optional `hypothesis` dev dep);
+separate module so a missing dep degrades to a skip, not a collection error."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="optional dev dep; property tests skip without it")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.models import gnn  # noqa: E402
+
+from test_gnn import _graph, _rand_rot  # noqa: E402
+
+pytestmark = pytest.mark.slow
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=5, deadline=None)
+def test_equivariance_property(seed):
+    """Hypothesis: equivariance holds for random graphs/rotations/params."""
+    gen = np.random.default_rng(seed)
+    cfg = gnn.GNNConfig(n_layers=1, c=8, l_max=2, m_max=1, n_heads=2,
+                        n_rbf=4, f_in=3, n_out=2, edge_chunk=64)
+    params = gnn.init_params(jax.random.PRNGKey(seed), cfg)
+    g = _graph(gen, N=8, E=20, f_in=3)
+    Rm = _rand_rot(gen)
+    g_rot = g._replace(edge_vec=jnp.asarray(np.asarray(g.edge_vec) @ Rm.T))
+    f1 = gnn.forward(params, g, cfg)
+    f2 = gnn.forward(params, g_rot, cfg)
+    scale = max(float(jnp.abs(f1).max()), 1.0)
+    assert float(jnp.abs(f1[:, 0, :] - f2[:, 0, :]).max()) < 2e-3 * scale

@@ -12,6 +12,8 @@ from repro.data import graph as graphdata
 from repro.data import loaders
 from repro.models import gnn, recsys, transformer as tr
 
+pytestmark = pytest.mark.slow
+
 LM_ARCHS = ["deepseek-67b", "stablelm-12b", "gemma3-27b",
             "llama4-scout-17b-a16e", "moonshot-v1-16b-a3b"]
 RS_ARCHS = ["sasrec", "mind", "din", "dlrm-rm2"]

@@ -1,0 +1,226 @@
+"""ISSUE 2 tentpole: the sharded streaming index must reproduce the
+single-device ``SinnamonIndex`` exactly on the same document stream.
+
+All tests here run on a 1x1 ("data", "model") mesh — the same shard_map
+code path as production, no multi-device runtime needed — and assert
+*elementwise* equality of returned ids and exact rerank scores.  The
+multi-shard equivalence run lives in the `distributed`-marked subprocess
+test at the bottom (forced host devices, like tests/test_distributed.py).
+"""
+
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.engine import EngineSpec, SinnamonIndex
+from repro.data import synth
+from repro.distributed import mesh as meshlib
+from repro.distributed import topk
+from repro.serving.serve import QueryServer
+from repro.serving.sharded import ShardedSinnamonIndex
+
+DS = synth.SparseDatasetSpec("t", n=400, psi_doc=20, psi_query=10,
+                             value_dist="gaussian")
+N_DOCS = 160
+
+
+def _spec(capacity):
+    return EngineSpec(n=DS.n, m=16, capacity=capacity, max_nnz=48, h=2,
+                      seed=3, value_dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def pair():
+    """(sharded on 1x1 mesh, single-device) indexes fed the same stream."""
+    idx, val = synth.make_corpus(0, DS, N_DOCS, pad=48)
+    mesh = meshlib.single_device_mesh(("data", "model"))
+    sharded = ShardedSinnamonIndex(_spec(192), mesh)
+    single = SinnamonIndex(_spec(192))
+    for lo in range(0, N_DOCS, 64):
+        hi = min(lo + 64, N_DOCS)
+        ids = list(range(lo, hi))
+        sharded.insert_many(ids, idx[lo:hi], val[lo:hi])
+        single.insert_many(ids, idx[lo:hi], val[lo:hi])
+    return sharded, single, idx, val
+
+
+def _assert_same_results(sharded, single, seed, k=10, kprime=60, nq=6):
+    qi, qv = synth.make_queries(seed, DS, nq, pad=24)
+    for b in range(nq):
+        ids_s, sc_s = sharded.search(qi[b], qv[b], k=k, kprime=kprime)
+        ids_0, sc_0 = single.search(qi[b], qv[b], k=k, kprime=kprime)
+        np.testing.assert_array_equal(ids_s, ids_0)
+        np.testing.assert_array_equal(sc_s, sc_0)
+
+
+def test_insert_matches_single_device(pair):
+    sharded, single, _, _ = pair
+    assert sharded.size == single.size == N_DOCS
+    _assert_same_results(sharded, single, seed=1)
+
+
+def test_locators_resolve_to_owner_shard(pair):
+    sharded, _, _, _ = pair
+    qi, qv = synth.make_queries(2, DS, 2, pad=24)
+    ids, _, loc = sharded.search_many(qi, qv, k=10, kprime=60,
+                                      return_locators=True)
+    sh, sl = topk.unpack_shard_slot(loc)
+    for b in range(2):
+        for e, s, slot in zip(ids[b], np.asarray(sh)[b], np.asarray(sl)[b]):
+            assert sharded.route(int(e)) == int(s)
+            assert sharded._id2slot[int(e)] == (int(s), int(slot))
+
+
+def test_delete_and_slot_recycling_round_trip():
+    idx, val = synth.make_corpus(4, DS, 96, pad=48)
+    mesh = meshlib.single_device_mesh(("data", "model"))
+    sharded = ShardedSinnamonIndex(_spec(96), mesh)
+    single = SinnamonIndex(_spec(96))
+    ids = list(range(96))
+    sharded.insert_many(ids, idx, val)
+    single.insert_many(ids, idx, val)
+
+    qi, qv = synth.make_queries(5, DS, 1, pad=24)
+    top, _ = single.search(qi[0], qv[0], k=5, kprime=40)
+    victims = [int(d) for d in top[:3]]
+    for v in victims:
+        sharded.delete(v)
+        single.delete(v)
+    _assert_same_results(sharded, single, seed=6)
+    ids_after, _ = sharded.search(qi[0], qv[0], k=5, kprime=40)
+    assert not set(victims) & set(ids_after.tolist())
+
+    # slot recycling: re-inserting reuses freed slots on the owning shard
+    free_before = sum(len(f) for f in sharded._free)
+    extra_i, extra_v = synth.make_corpus(7, DS, 3, pad=48)
+    new_ids = [1000, 1001, 1002]
+    sharded.insert_many(new_ids, extra_i, extra_v)
+    single.insert_many(new_ids, extra_i, extra_v)
+    assert sum(len(f) for f in sharded._free) == free_before - 3
+    assert sharded.size == single.size == 96
+    _assert_same_results(sharded, single, seed=8)
+
+
+def test_update_overwrites_in_place():
+    idx, val = synth.make_corpus(9, DS, 2, pad=48)
+    mesh = meshlib.single_device_mesh(("data", "model"))
+    sharded = ShardedSinnamonIndex(_spec(64), mesh)
+    single = SinnamonIndex(_spec(64))
+    sharded.insert_many([0, 1], idx, val)
+    single.insert_many([0, 1], idx, val)
+    sharded.insert(0, idx[1][idx[1] >= 0], val[1][idx[1] >= 0])
+    single.insert(0, idx[1][idx[1] >= 0], val[1][idx[1] >= 0])
+    assert sharded.size == single.size == 2
+    _assert_same_results(sharded, single, seed=10, k=2, kprime=8, nq=2)
+
+
+def test_grow_preserves_content_and_matches():
+    idx, val = synth.make_corpus(11, DS, 64, pad=48)
+    mesh = meshlib.single_device_mesh(("data", "model"))
+    sharded = ShardedSinnamonIndex(_spec(64), mesh)
+    single = SinnamonIndex(_spec(64))
+    sharded.insert_many(list(range(64)), idx, val)
+    single.insert_many(list(range(64)), idx, val)
+    qi, qv = synth.make_queries(12, DS, 1, pad=24)
+    before, _ = sharded.search(qi[0], qv[0], k=10, kprime=40)
+    sharded.grow(128)
+    single.grow(128)
+    after, _ = sharded.search(qi[0], qv[0], k=10, kprime=40)
+    np.testing.assert_array_equal(before, after)
+    assert sharded.spec.capacity == 128
+    _assert_same_results(sharded, single, seed=13)
+
+
+def test_duplicate_ids_in_one_batch_keep_last():
+    idx, val = synth.make_corpus(16, DS, 2, pad=48)
+    mesh = meshlib.single_device_mesh(("data", "model"))
+    sharded = ShardedSinnamonIndex(_spec(32), mesh)
+    sharded.insert_many([7, 7], idx, val)       # only the last survives
+    assert sharded.size == 1
+    sharded.delete(7)
+    assert sharded.size == 0
+    assert sum(len(f) for f in sharded._free) == 32   # no leaked slot
+
+
+def test_delete_many_unknown_id_is_atomic():
+    idx, val = synth.make_corpus(17, DS, 2, pad=48)
+    mesh = meshlib.single_device_mesh(("data", "model"))
+    sharded = ShardedSinnamonIndex(_spec(32), mesh)
+    sharded.insert_many([0, 1], idx, val)
+    with pytest.raises(KeyError):
+        sharded.delete_many([0, 999])
+    assert sharded.size == 2                     # nothing was popped
+    sharded.delete_many([0, 1])                  # still fully deletable
+    assert sharded.size == 0
+
+
+def test_auto_grow_on_overflow():
+    idx, val = synth.make_corpus(14, DS, 80, pad=48)
+    mesh = meshlib.single_device_mesh(("data", "model"))
+    sharded = ShardedSinnamonIndex(_spec(32), mesh)
+    sharded.insert_many(list(range(80)), idx, val)   # forces two doublings
+    assert sharded.size == 80
+    assert sharded.spec.capacity >= 80
+
+
+def test_query_server_batched_path(pair):
+    sharded, single, _, _ = pair
+    qi, qv = synth.make_queries(15, DS, 8, pad=24)
+    srv_s = QueryServer(sharded, k=10, kprime=60)
+    srv_0 = QueryServer(single, k=10, kprime=60)
+    ids_s, sc_s = srv_s.query_many(qi, qv)
+    ids_0, sc_0 = srv_0.query_many(qi, qv)
+    np.testing.assert_array_equal(ids_s, ids_0)
+    np.testing.assert_array_equal(sc_s, sc_0)
+    assert srv_s.stats["queries"] == 8
+    assert len(srv_s.stats["latency_ms"]) == 8
+
+
+MULTI = textwrap.dedent("""
+    import os, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    sys.path.insert(0, "src")
+    import numpy as np
+    from repro.core.engine import EngineSpec, SinnamonIndex
+    from repro.data import synth
+    from repro.distributed import mesh as meshlib
+    from repro.serving.sharded import ShardedSinnamonIndex
+
+    ds = synth.SparseDatasetSpec("t", n=400, psi_doc=20, psi_query=10)
+    idx, val = synth.make_corpus(0, ds, 200, pad=48)
+    qi, qv = synth.make_queries(1, ds, 6, pad=24)
+    spec = EngineSpec(n=400, m=16, capacity=96, max_nnz=48, h=2,
+                      value_dtype="float32")
+    mesh = meshlib.make_mesh((1, 4), ("data", "model"))
+    sharded = ShardedSinnamonIndex(spec, mesh)
+    single = SinnamonIndex(
+        EngineSpec(n=400, m=16, capacity=384, max_nnz=48, h=2,
+                   value_dtype="float32"))
+    sharded.insert_many(list(range(200)), idx, val)
+    single.insert_many(list(range(200)), idx, val)
+    ok = True
+    for b in range(6):
+        i_s, s_s = sharded.search(qi[b], qv[b], k=10, kprime=96)
+        i_0, s_0 = single.search(qi[b], qv[b], k=10, kprime=384)
+        ok &= set(i_s.tolist()) == set(i_0.tolist())
+        ok &= bool(np.allclose(np.sort(s_s), np.sort(s_0), atol=1e-5))
+    victims = [int(d) for d in i_0[:3]]
+    sharded.delete_many(victims)
+    for v in victims:
+        single.delete(v)
+    for b in range(6):
+        i_s, _ = sharded.search(qi[b], qv[b], k=10, kprime=96)
+        i_0, _ = single.search(qi[b], qv[b], k=10, kprime=384)
+        ok &= set(i_s.tolist()) == set(i_0.tolist())
+    print("STREAM_OK" if ok else "STREAM_BAD")
+""")
+
+
+@pytest.mark.distributed
+def test_multi_shard_stream_subprocess():
+    out = subprocess.run([sys.executable, "-c", MULTI], capture_output=True,
+                         text=True, cwd=".", timeout=600)
+    assert "STREAM_OK" in out.stdout, out.stdout + out.stderr[-3000:]

@@ -1,0 +1,47 @@
+"""Property-based sketch tests (optional `hypothesis` dev dep); separate
+module so a missing dep degrades to a skip, not a collection error."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="optional dev dep; property tests skip without it")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import sketch  # noqa: E402
+
+from test_sketch import _random_sparse  # noqa: E402
+
+
+@given(vals=st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                     min_size=1, max_size=16))
+@settings(max_examples=60, deadline=None)
+def test_bf16_directed_rounding_property(vals):
+    """Directed bf16 rounding preserves bound directions for any floats.
+
+    f32 subnormals are excluded: XLA-CPU flushes them to zero on input, so
+    they are indistinguishable from 0 to the engine (hardware FTZ).
+    """
+    arr = np.array(vals, np.float32)
+    arr = np.where(np.abs(arr) < 1.1754944e-38, 0.0, arr)
+    x = jnp.asarray(arr)
+    up = sketch.quantize_directed(x, "bfloat16", toward_pos_inf=True)
+    dn = sketch.quantize_directed(x, "bfloat16", toward_pos_inf=False)
+    assert np.all(np.asarray(up, np.float32) >= np.asarray(x))
+    assert np.all(np.asarray(dn, np.float32) <= np.asarray(x))
+
+
+@given(seed=st.integers(0, 2**31 - 1), h=st.integers(1, 3))
+@settings(max_examples=25, deadline=None)
+def test_upper_bound_property(seed, h):
+    """Hypothesis: encode→decode never underestimates (any vector, any h)."""
+    gen = np.random.default_rng(seed)
+    n, m, pad = 128, 8, 24
+    mp = jnp.asarray(sketch.make_mappings(seed % 97, n, m, h))
+    idx, val = _random_sparse(gen, n, gen.integers(1, 20), pad)
+    u, l = sketch.encode(mp, m, jnp.asarray(idx), jnp.asarray(val))
+    ub, lb = sketch.decode_vector(mp, u, l, jnp.asarray(idx))
+    keep = idx >= 0
+    assert np.all(np.asarray(ub)[keep] >= val[keep])
+    assert np.all(np.asarray(lb)[keep] <= val[keep])
