@@ -1,0 +1,191 @@
+"""Durability benchmarks: recovery time vs. WAL length, WAL write overhead,
+and churn-drift before/after sketch compaction.
+
+All functions run in-process on the single-device index (no forced device
+counts), sized so the whole module stays CI-friendly.  Rows follow run.py's
+``(name, value, derived)`` convention.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+
+def _corpus(n_docs, seed=0):
+    from repro.data import synth
+    ds = synth.SparseDatasetSpec("persist", n=2000, psi_doc=32, psi_query=12,
+                                 value_dist="gaussian")
+    idx, val = synth.make_corpus(seed, ds, n_docs, pad=48)
+    return ds, idx, val
+
+
+def _spec(capacity):
+    from repro.core.engine import EngineSpec
+    return EngineSpec(n=2000, m=16, capacity=capacity, max_nnz=48, h=1,
+                      value_dtype="float32")
+
+
+def persist_recovery():
+    """Recovery wall-time vs. WAL tail length (snapshot fixed at op 0)."""
+    from repro.persist.durable import DurableSinnamonIndex
+
+    rows = []
+    for n_ops in (256, 1024):
+        d = tempfile.mkdtemp(prefix="bench_persist_")
+        try:
+            ds, idx, val = _corpus(n_ops)
+            index = DurableSinnamonIndex.open(
+                _spec(((n_ops + 31) // 32) * 32),
+                wal_dir=os.path.join(d, "wal"),
+                snapshot_dir=os.path.join(d, "snap"))
+            index.snapshot()                      # empty base snapshot
+            bs = 64
+            for lo in range(0, n_ops, bs):
+                hi = min(lo + bs, n_ops)
+                index.insert_many(list(range(lo, hi)), idx[lo:hi],
+                                  val[lo:hi])
+            t0 = time.perf_counter()
+            rec = DurableSinnamonIndex.open(
+                index.spec, wal_dir=os.path.join(d, "wal"),
+                snapshot_dir=os.path.join(d, "snap"))
+            dt = (time.perf_counter() - t0) * 1e3
+            assert rec.size == n_ops
+            rows.append((f"persist/recovery_ms_wal{n_ops}", f"{dt:.1f}",
+                         f"{n_ops / max(dt, 1e-9) * 1e3:.0f} docs/s"))
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+    return rows
+
+
+def persist_overhead():
+    """Insert throughput with the WAL off / on (fsync off) / on (fsync)."""
+    from repro.core.engine import SinnamonIndex
+    from repro.persist.durable import DurableSinnamonIndex
+
+    n_docs, bs = 1024, 64
+    ds, idx, val = _corpus(n_docs)
+    spec = _spec(((n_docs + 31) // 32) * 32)
+
+    def run(build):
+        d = tempfile.mkdtemp(prefix="bench_persist_")
+        try:
+            index = build(d)
+            t0 = time.perf_counter()
+            for lo in range(0, n_docs, bs):
+                hi = min(lo + bs, n_docs)
+                index.insert_many(list(range(lo, hi)), idx[lo:hi],
+                                  val[lo:hi])
+            import jax
+            jax.block_until_ready(index.state.u)
+            return n_docs / (time.perf_counter() - t0)
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+
+    run(lambda d: SinnamonIndex(spec))       # jit-compile warmup, unmeasured
+    base = run(lambda d: SinnamonIndex(spec))
+    nosync = run(lambda d: DurableSinnamonIndex(
+        spec, wal_dir=os.path.join(d, "wal"), fsync=False))
+    sync = run(lambda d: DurableSinnamonIndex(
+        spec, wal_dir=os.path.join(d, "wal"), fsync=True))
+    return [
+        ("persist/insert_tput_wal_off", f"{base:.1f}", "docs/s"),
+        ("persist/insert_tput_wal_nosync", f"{nosync:.1f}",
+         f"{nosync / base:.2f}x of off"),
+        ("persist/insert_tput_wal_fsync", f"{sync:.1f}",
+         f"{sync / base:.2f}x of off"),
+    ]
+
+
+def persist_drift():
+    """Churn drift: max/mean sketch overestimate after delete/re-insert
+    cycles, and the same after compaction (should collapse to ~0)."""
+    from repro.core.engine import SinnamonIndex
+    from repro.persist import compact
+
+    n_docs = 512
+    ds, idx, val = _corpus(n_docs)
+    index = SinnamonIndex(_spec(n_docs))
+    index.insert_many(list(range(n_docs)), idx, val)
+    gen = np.random.Generator(np.random.Philox(key=7))
+    next_id = n_docs
+    for _ in range(4):                       # churn: delete + recycle waves
+        victims = gen.choice(index.doc_ids(), size=n_docs // 4,
+                             replace=False)
+        for v in victims:
+            index.delete(int(v))
+        fresh_i, fresh_v = _corpus(len(victims), seed=next_id)[1:]
+        index.insert_many(list(range(next_id, next_id + len(victims))),
+                          fresh_i, fresh_v)
+        next_id += len(victims)
+    before = compact.drift_metrics(index)
+    t0 = time.perf_counter()
+    rebuilt = index.compact()
+    dt = (time.perf_counter() - t0) * 1e3
+    after = compact.drift_metrics(index)
+    return [
+        ("persist/drift_max_before", f"{before['max_overestimate']:.4f}",
+         f"{before['dirty_active']} recycled slots"),
+        ("persist/drift_mean_before", f"{before['mean_overestimate']:.4f}",
+         ""),
+        ("persist/drift_max_after", f"{after['max_overestimate']:.4f}",
+         f"compacted {rebuilt} cols in {dt:.0f}ms"),
+    ]
+
+
+def persist_smoke():
+    """CI-sized durability round trip: snapshot → more ops → truncate the
+    WAL mid-record → recover → compare queries against the surviving-ops
+    reference.  Exercises the whole persist stack in a few seconds."""
+    from repro.persist import wal
+    from repro.persist.durable import DurableSinnamonIndex
+
+    d = tempfile.mkdtemp(prefix="bench_persist_")
+    try:
+        from repro.data import synth
+        n_docs = 256
+        ds, idx, val = _corpus(n_docs)
+        spec = _spec(n_docs)
+        index = DurableSinnamonIndex.open(
+            spec, wal_dir=os.path.join(d, "wal"),
+            snapshot_dir=os.path.join(d, "snap"))
+        index.insert_many(list(range(128)), idx[:128], val[:128])
+        index.snapshot()
+        for e in range(0, 16):
+            index.delete(e)
+        index.insert_many(list(range(128, n_docs)), idx[128:], val[128:])
+        # tear the last record mid-payload, as a crash would
+        part = os.path.join(d, "wal", wal.partition_name(0))
+        seg = os.path.join(part, sorted(os.listdir(part))[-1])
+        with open(seg, "r+b") as f:
+            f.truncate(os.path.getsize(seg) - 11)
+        t0 = time.perf_counter()
+        rec = DurableSinnamonIndex.open(
+            spec, wal_dir=os.path.join(d, "wal"),
+            snapshot_dir=os.path.join(d, "snap"))
+        dt = (time.perf_counter() - t0) * 1e3
+        # the torn record is the last insert batch: 128 snapshot docs
+        # minus 16 deletes must have survived
+        ok = rec.size == 128 - 16
+        qi, qv = synth.make_queries(3, ds, 4, pad=24)
+        ids, _ = rec.search(qi[0], qv[0], k=10, kprime=64)
+        ok &= not (set(range(16)) & set(ids.tolist()))
+        if not ok:      # raise so run.py emits an ERROR row and CI fails
+            raise RuntimeError(
+                f"persist smoke failed: recovered {rec.size} docs, "
+                f"top ids {ids.tolist()}")
+        return [
+            ("persist/smoke_recovered_docs", str(rec.size),
+             "after mid-record WAL truncation"),
+            ("persist/smoke_recovery_ms", f"{dt:.1f}", ""),
+            ("persist/smoke_ok", str(int(ok)), "1 = queries consistent"),
+        ]
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+ALL = [persist_smoke, persist_recovery, persist_overhead, persist_drift]

@@ -1,5 +1,9 @@
-# One function per paper table. Prints ``name,value,derived`` CSV.
+# One function per paper table. Prints ``name,value,derived`` CSV; with
+# ``--json PATH`` also writes a machine-readable {name: {value, derived}}
+# map so CI can archive the perf trajectory as BENCH_<n>.json artifacts.
 # Exits non-zero if any table function errors, so CI smoke jobs fail loudly.
+import argparse
+import json
 import os
 import sys
 import time
@@ -10,16 +14,26 @@ for p in (_ROOT, os.path.join(_ROOT, "src")):
         sys.path.insert(0, p)
 
 
-def main() -> None:
-    from benchmarks import paper, streaming
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("only", nargs="?", default=None,
+                    help="run only benchmark functions matching this substring")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as JSON (BENCH_<n>.json)")
+    return ap.parse_args(argv)
 
-    only = sys.argv[1] if len(sys.argv) > 1 else None
-    fns = [fn for fn in paper.ALL + streaming.ALL
-           if not only or only in fn.__name__]
+
+def main() -> None:
+    from benchmarks import paper, persist, streaming
+
+    args = parse_args()
+    fns = [fn for fn in paper.ALL + streaming.ALL + persist.ALL
+           if not args.only or args.only in fn.__name__]
     if not fns:
-        print(f"no benchmark matches {only!r}", file=sys.stderr)
+        print(f"no benchmark matches {args.only!r}", file=sys.stderr)
         sys.exit(2)
     failed = False
+    results = {}
     print("name,value,derived")
     for fn in fns:
         t0 = time.time()
@@ -27,12 +41,19 @@ def main() -> None:
             rows = fn()
         except Exception as e:                      # noqa: BLE001
             print(f"{fn.__name__},ERROR,{type(e).__name__}: {e}")
+            results[fn.__name__] = {"value": "ERROR",
+                                    "derived": f"{type(e).__name__}: {e}"}
             failed = True
             continue
         for name, value, derived in rows:
             print(f"{name},{value},{derived}")
+            results[name] = {"value": value, "derived": derived}
         print(f"# {fn.__name__} took {time.time() - t0:.1f}s",
               file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": results, "failed": failed}, f, indent=1)
+        print(f"# wrote {args.json}", file=sys.stderr)
     if failed:
         sys.exit(1)
 

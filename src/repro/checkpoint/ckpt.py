@@ -27,6 +27,20 @@ import numpy as np
 _EXOTIC = {"bfloat16": (ml_dtypes.bfloat16, np.uint16)}
 
 
+def _fsync(path: str) -> None:
+    """Durably persist a file's contents or a directory's entries.
+
+    Callers that delete their redundancy once a checkpoint exists (the
+    retrieval WAL is pruned against snapshots) need the publish itself to
+    survive a power cut, not just a process crash.
+    """
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def _flatten(tree) -> dict:
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
@@ -43,6 +57,7 @@ def _flatten(tree) -> dict:
 def save(ckpt_dir: str, step: int, tree, keep: int = 3,
          extra: Optional[dict] = None) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
+    adopt_strays(ckpt_dir)
     final = os.path.join(ckpt_dir, f"step_{step:010d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
@@ -65,10 +80,24 @@ def save(ckpt_dir: str, step: int, tree, keep: int = 3,
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
+    for name in ("arrays.npz", "manifest.json"):
+        _fsync(os.path.join(tmp, name))
+    _fsync(tmp)
     if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)                       # atomic publish
-    _gc(ckpt_dir, keep)
+        # Never delete the published step before its replacement is in
+        # place: rename it aside, publish, then drop the old copy — so the
+        # window in which no valid copy exists shrinks from a full rmtree
+        # to the instant between two renames.
+        old = final + ".old"
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        os.rename(final, old)
+        os.rename(tmp, final)                   # atomic publish
+        shutil.rmtree(old)
+    else:
+        os.rename(tmp, final)                   # atomic publish
+    _fsync(ckpt_dir)      # persist the rename: the publish must survive a
+    _gc(ckpt_dir, keep)   # power cut, not just a process crash
     return final
 
 
@@ -79,12 +108,39 @@ def _gc(ckpt_dir: str, keep: int) -> None:
                       ignore_errors=True)
 
 
+def adopt_strays(ckpt_dir: str) -> None:
+    """Recover from a save() that crashed between its two swap renames.
+
+    Such a crash strands the previously published (complete, valid) copy at
+    ``step_<N>.old`` with ``step_<N>`` gone: promote it back so the step
+    stays recoverable.  With ``step_<N>`` present the ``.old`` copy is
+    superseded leftovers and is removed.  Only the directory's writer (a
+    fresh save, or recovery before any reads) may call this — a reader
+    doing it would race a concurrent save's swap.
+    """
+    if not os.path.isdir(ckpt_dir):
+        return
+    for name in os.listdir(ckpt_dir):
+        if (name.startswith("step_") and name.endswith(".old")
+                and name[5:-4].isdigit()):
+            stray = os.path.join(ckpt_dir, name)
+            final = os.path.join(ckpt_dir, name[:-4])
+            try:
+                if os.path.exists(final):
+                    shutil.rmtree(stray)
+                else:
+                    os.rename(stray, final)
+            except OSError:
+                pass                           # read-only fs etc.
+
+
 def all_steps(ckpt_dir: str):
     if not os.path.isdir(ckpt_dir):
         return []
     out = []
     for name in os.listdir(ckpt_dir):
-        if name.startswith("step_") and not name.endswith(".tmp"):
+        # digits-only filter also skips in-flight .tmp / .old dirs
+        if name.startswith("step_") and name[5:].isdigit():
             out.append(int(name[5:]))
     return sorted(out)
 
@@ -92,6 +148,22 @@ def all_steps(ckpt_dir: str):
 def latest_step(ckpt_dir: str) -> Optional[int]:
     steps = all_steps(ckpt_dir)
     return steps[-1] if steps else None
+
+
+def read_manifest(ckpt_dir: str, step: Optional[int] = None):
+    """Peek at a checkpoint's manifest without materialising arrays.
+
+    Lets a caller that stores its reconstruction recipe in ``extra`` (e.g.
+    the retrieval-index snapshots: engine spec, id↔slot maps, WAL position)
+    build the restore template *before* calling :func:`restore`.
+    Returns (manifest dict, step).
+    """
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        return json.load(f), step
 
 
 def restore(ckpt_dir: str, tree_template, step: Optional[int] = None,

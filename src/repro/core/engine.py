@@ -13,8 +13,14 @@ State layout (one shard):
 
 Retrieval = Algorithm 6 (budgeted, coordinate-at-a-time upper-bound scoring)
           + Algorithm 7 (top-k' candidates → exact rerank → top-k).
-Deletion  = bit-clear + slot recycling; the sketch column is left in place and
-            recycled by the next insert (paper §4.3).
+Deletion  = bit-clear + slot recycling (paper §4.3): the sketch column is left
+            *dirty* and the next insert MERGES into it (max into u, min into l)
+            instead of rebuilding it.  That keeps deletion O(ψ) and preserves
+            the Theorem 5.1 upper-bound property — the merged column bounds the
+            union of the stale and the new document — but the bound gets
+            *looser* under sustained churn.  ``dirty`` tracks which columns
+            carry stale residue; :func:`compact_state` rebuilds them exactly
+            from the raw vectors in the VecStore (see repro.persist.compact).
 """
 
 from __future__ import annotations
@@ -80,6 +86,7 @@ class SinnamonState(NamedTuple):
     store: vecstore.VecStore
     active: Array
     ids: Array
+    dirty: Array     # bool[C]: sketch column carries stale (deleted-doc) residue
 
 
 # ---------------------------------------------------------------------------
@@ -99,23 +106,38 @@ def init(spec: EngineSpec) -> SinnamonState:
                              dtype=jnp.dtype(spec.value_dtype)),
         active=jnp.zeros((spec.capacity,), jnp.bool_),
         ids=jnp.full((spec.capacity,), -1, jnp.int32),
+        dirty=jnp.zeros((spec.capacity,), jnp.bool_),
     )
 
 
 def insert(state: SinnamonState, spec: EngineSpec, slot, ext_id,
            idx: Array, val: Array) -> SinnamonState:
-    """Algorithm 5: index one document at ``slot`` (recycles stale columns)."""
+    """Algorithm 5: index one document at ``slot``.
+
+    A clean slot gets the document's exact sketch column.  A *dirty* slot
+    (recycled after a §4.3 deletion) is MERGED into — max for u, min for l —
+    so the column still upper/lower-bounds every value it ever saw.  The bound
+    stays valid but loose; the slot stays dirty until compaction rebuilds it.
+    """
     u_col, l_col = sketch.encode(state.mappings, spec.m, idx, val,
                                  dtype=spec.dtype,
                                  positive_only=spec.positive_only)
-    u = state.u.at[:, slot].set(u_col.astype(state.u.dtype))
-    l = None if state.l is None else state.l.at[:, slot].set(
-        l_col.astype(state.l.dtype))
+    was_dirty = state.dirty[slot]
+    u_col = u_col.astype(state.u.dtype)
+    u_col = jnp.where(was_dirty, jnp.maximum(state.u[:, slot], u_col), u_col)
+    u = state.u.at[:, slot].set(u_col)
+    if state.l is None:
+        l = None
+    else:
+        l_col = l_col.astype(state.l.dtype)
+        l_col = jnp.where(was_dirty, jnp.minimum(state.l[:, slot], l_col),
+                          l_col)
+        l = state.l.at[:, slot].set(l_col)
     bits = bitindex.set_doc(state.bits, coord_rows(spec, idx), slot,
                             on=True)
     store = vecstore.write(state.store, slot, idx, val)
-    return SinnamonState(
-        mappings=state.mappings, u=u, l=l, bits=bits, store=store,
+    return state._replace(
+        u=u, l=l, bits=bits, store=store,
         active=state.active.at[slot].set(True),
         ids=state.ids.at[slot].set(ext_id),
     )
@@ -168,7 +190,11 @@ def delete_batch_masked(state: SinnamonState, spec: EngineSpec, slots: Array,
 
 
 def delete(state: SinnamonState, spec: EngineSpec, slot) -> SinnamonState:
-    """Paper §4.3: clear inverted-index bits; leave the sketch column stale."""
+    """Paper §4.3: clear inverted-index bits; leave the sketch column stale.
+
+    The stale column is marked dirty so the next insert merges rather than
+    overwrites, and compaction knows which columns to rebuild.
+    """
     idx = state.store.indices[slot]
     bits = bitindex.set_doc(state.bits, coord_rows(spec, idx), slot,
                             on=False)
@@ -177,6 +203,7 @@ def delete(state: SinnamonState, spec: EngineSpec, slot) -> SinnamonState:
         bits=bits, store=store,
         active=state.active.at[slot].set(False),
         ids=state.ids.at[slot].set(-1),
+        dirty=state.dirty.at[slot].set(True),
     )
 
 
@@ -200,7 +227,62 @@ def grow_state(state: SinnamonState, spec: EngineSpec,
             values=st.store.values.at[:c].set(state.store.values)),
         active=st.active.at[:c].set(state.active),
         ids=st.ids.at[:c].set(state.ids),
+        dirty=st.dirty.at[:c].set(state.dirty),
     )
+
+
+# ---------------------------------------------------------------------------
+# Sketch compaction (repro.persist.compact drives these; pure so they work as
+# shard_map bodies too)
+# ---------------------------------------------------------------------------
+
+def fresh_sketch(state: SinnamonState, spec: EngineSpec
+                 ) -> Tuple[Array, Optional[Array]]:
+    """Exact sketch matrix re-encoded from the raw vectors in the VecStore.
+
+    Returns (u[m, C], l[m, C]).  Erased slots encode to all-zero columns.
+    This is the Theorem 5.1-tight reference: no recycled-slot residue.
+    """
+    u, l = sketch.encode_batch(
+        state.mappings, spec.m, state.store.indices,
+        state.store.values.astype(jnp.float32),
+        dtype=spec.dtype, positive_only=spec.positive_only)
+    return u.T, None if l is None else l.T
+
+
+def compact_state(state: SinnamonState, spec: EngineSpec) -> SinnamonState:
+    """Rebuild every dirty sketch column exactly from the VecStore.
+
+    Dirty+active columns become the document's fresh sketch; dirty+inactive
+    (deleted, not yet recycled) columns become zero.  Clean columns are left
+    untouched bit-for-bit.  Pure function of the arrays — usable directly or
+    as a shard-local shard_map body (see repro.serving.sharded).
+    """
+    u_f, l_f = fresh_sketch(state, spec)
+    d = state.dirty[None, :]
+    u = jnp.where(d, u_f.astype(state.u.dtype), state.u)
+    l = None if state.l is None else jnp.where(
+        d, l_f.astype(state.l.dtype), state.l)
+    return state._replace(u=u, l=l, dirty=jnp.zeros_like(state.dirty))
+
+
+def slot_drift(state: SinnamonState, spec: EngineSpec) -> Array:
+    """Per-slot sketch overestimate vs. a fresh sketch.  f32[C].
+
+    For each active slot: the max over sketch cells of how far the stored
+    upper bound sits ABOVE the tight one (plus, symmetrically, how far the
+    stored lower bound sits below).  0 for clean slots (up to storage-dtype
+    effects when value_dtype != float32) and for inactive slots.
+    """
+    u_f, l_f = fresh_sketch(state, spec)
+    over = jnp.max(jnp.clip(state.u.astype(jnp.float32)
+                            - u_f.astype(jnp.float32), 0.0, None), axis=0)
+    if state.l is not None:
+        over_l = jnp.max(jnp.clip(l_f.astype(jnp.float32)
+                                  - state.l.astype(jnp.float32), 0.0, None),
+                         axis=0)
+        over = jnp.maximum(over, over_l)
+    return jnp.where(state.active, over, 0.0)
 
 
 def _sorted_query(q_idx: Array, q_val: Array) -> Tuple[Array, Array]:
@@ -321,6 +403,8 @@ class SinnamonIndex:
         self._search_many = jax.jit(
             search_batch, static_argnums=(1, 4, 5, 6),
             static_argnames=("score_fn",))
+        self._compact = jax.jit(compact_state, static_argnums=(1,))
+        self._slot_drift = jax.jit(slot_drift, static_argnums=(1,))
 
     # -- streaming updates ---------------------------------------------------
     def insert(self, ext_id: int, idx, val) -> None:
@@ -334,6 +418,18 @@ class SinnamonIndex:
         self._id2slot[ext_id] = slot
 
     def insert_many(self, ext_ids, idx_batch, val_batch) -> None:
+        ext_ids = [int(e) for e in ext_ids]
+        if len(set(ext_ids)) != len(ext_ids):
+            # Sequential overwrite semantics (same as the sharded index):
+            # only the LAST occurrence of a duplicated id survives.
+            last = {e: pos for pos, e in enumerate(ext_ids)}
+            keep = sorted(last.values())
+            ext_ids = [ext_ids[p] for p in keep]
+            idx_batch = np.asarray(idx_batch)[keep]
+            val_batch = np.asarray(val_batch)[keep]
+        for e in ext_ids:
+            if e in self._id2slot:      # overwrite: drop the stale copy
+                self.delete(e)
         bn = len(ext_ids)
         while len(self._free) < bn:
             self.grow(self.spec.capacity * 2)
@@ -385,9 +481,33 @@ class SinnamonIndex:
         self._free = (list(range(new_capacity - 1, spec.capacity - 1, -1))
                       + self._free)
 
+    # -- maintenance -----------------------------------------------------------
+    def compact(self) -> int:
+        """Rebuild all dirty sketch columns from the VecStore.
+
+        Restores the Theorem 5.1 upper-bound tightness lost to §4.3
+        delete-then-recycle churn.  Returns the number of columns rebuilt.
+        """
+        n_dirty = int(jnp.sum(self.state.dirty))
+        if n_dirty:
+            self.state = self._compact(self.state, self.spec)
+        return n_dirty
+
+    def slot_drift(self) -> np.ndarray:
+        """Per-slot sketch overestimate vs. a fresh sketch (f32[C])."""
+        return np.asarray(self._slot_drift(self.state, self.spec))
+
     @property
     def size(self) -> int:
         return len(self._id2slot)
+
+    def __contains__(self, ext_id) -> bool:
+        """True iff ``ext_id`` is currently live in the index."""
+        return int(ext_id) in self._id2slot
+
+    def doc_ids(self) -> list:
+        """Sorted external ids of every live document."""
+        return sorted(self._id2slot)
 
     def memory_bytes(self) -> dict:
         """Index-size accounting (paper §6.1.2): sketch vs inverted index vs raw."""

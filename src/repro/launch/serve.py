@@ -1,12 +1,22 @@
-"""Serving launcher for the retrieval engine: build (or restore) an index,
+"""Serving launcher for the retrieval engine: build (or recover) an index,
 then serve batched queries with the anytime budget.
 
     PYTHONPATH=src python -m repro.launch.serve --docs 10000 --queries 64 \
-        [--budget 16] [--kprime 800] [--index-buckets 2048] [--shards 4]
+        [--budget 16] [--kprime 800] [--index-buckets 2048] [--shards 4] \
+        [--wal runs/wal --snapshot-dir runs/snap --snapshot-every 5000 \
+         --compact-threshold 0.5]
 
 ``--shards N`` (N > 1) serves through the mesh-sharded streaming index on a
 host-local mesh (N forced host devices, corpus sharded over 'model'), using
 the batched `query_many` path; the default is the single-device index.
+
+``--wal DIR`` makes the index durable: every insert/delete is logged to the
+write-ahead log before it is applied, and on startup the launcher *recovers*
+(latest snapshot from ``--snapshot-dir`` + WAL tail replay) instead of
+re-indexing — so a second run with the same dirs skips the build entirely.
+``--snapshot-every N`` snapshots after every N logged ops;
+``--compact-threshold X`` rebuilds recycled sketch columns whenever the max
+per-slot overestimate exceeds X (see repro.persist).
 """
 
 from __future__ import annotations
@@ -29,7 +39,53 @@ def parse_args(argv=None):
                     help=">1: sharded streaming index on a host-local mesh")
     ap.add_argument("--query-batch", type=int, default=16)
     ap.add_argument("--dataset", default="splade_like")
-    return ap.parse_args(argv)
+    ap.add_argument("--wal", default=None, metavar="DIR",
+                    help="write-ahead-log dir; enables the durable index")
+    ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
+                    help="snapshot dir (recovery base + periodic snapshots)")
+    ap.add_argument("--snapshot-every", type=int, default=None, metavar="N",
+                    help="snapshot after every N logged ops")
+    ap.add_argument("--compact-threshold", type=float, default=None,
+                    metavar="X", help="compact when max sketch drift > X")
+    args = ap.parse_args(argv)
+    if args.wal is None and (args.snapshot_dir is not None
+                             or args.snapshot_every is not None
+                             or args.compact_threshold is not None):
+        ap.error("--snapshot-dir/--snapshot-every/--compact-threshold "
+                 "require --wal (durability is WAL-based)")
+    if args.snapshot_every is not None and args.snapshot_dir is None:
+        ap.error("--snapshot-every requires --snapshot-dir "
+                 "(periodic snapshots need somewhere to go)")
+    return args
+
+
+def _check_launch_params(args) -> None:
+    """Pin the corpus/spec flags of a durable run to its WAL directory."""
+    import json
+    import sys
+
+    params = {"dataset": args.dataset, "docs": args.docs, "m": args.m,
+              "h": args.h, "index_buckets": args.index_buckets,
+              "shards": args.shards}
+    os.makedirs(args.wal, exist_ok=True)
+    pfile = os.path.join(args.wal, "launch_params.json")
+    if os.path.exists(pfile):
+        with open(pfile) as f:
+            prev = json.load(f)
+        changed = {k: (prev.get(k), v) for k, v in params.items()
+                   if prev.get(k) != v and k != "shards"}
+        if changed:
+            sys.exit(f"refusing to recover from {args.wal}: "
+                     f"{', '.join(f'--{k} was {a!r}, now {b!r}' for k, (a, b) in changed.items())} "
+                     f"— the synthetic corpus/spec would no longer match the "
+                     f"indexed vectors; rerun with the original flags or "
+                     f"fresh --wal/--snapshot-dir directories")
+        if prev != params:       # only the (elastic) shard count changed
+            with open(pfile, "w") as f:
+                json.dump(params, f)
+    else:
+        with open(pfile, "w") as f:
+            json.dump(params, f)
 
 
 def main():
@@ -55,23 +111,49 @@ def main():
     idx, val = synth.make_corpus(0, ds, args.docs, pad=256)
     qi, qv = synth.make_queries(1, ds, args.queries, pad=96)
     cap = ((args.docs + 31) // 32) * 32
+    durable = dict(wal_dir=args.wal, snapshot_dir=args.snapshot_dir,
+                   snapshot_every=args.snapshot_every,
+                   compact_threshold=args.compact_threshold)
+    if args.wal:
+        # Recovery serves the PREVIOUS run's vectors, while the corpus and
+        # the recall ground truth are regenerated from the flags — and
+        # synth.make_corpus is not prefix-stable across --docs.  Refuse to
+        # mix durable state with a differently-drawn corpus (or a spec the
+        # snapshot would silently override).
+        _check_launch_params(args)
     if args.shards > 1:
         cap_local = ((cap // args.shards + 31) // 32) * 32
         spec = EngineSpec(n=ds.n, m=args.m, h=args.h, capacity=cap_local,
                           max_nnz=256, positive_only=ds.nonneg,
                           index_buckets=args.index_buckets)
         mesh = meshlib.make_mesh((1, args.shards), ("data", "model"))
-        index = ShardedSinnamonIndex(spec, mesh)
+        if args.wal:
+            from repro.persist import DurableShardedSinnamonIndex
+            index = DurableShardedSinnamonIndex.open(spec, mesh, **durable)
+        else:
+            index = ShardedSinnamonIndex(spec, mesh)
     else:
         spec = EngineSpec(n=ds.n, m=args.m, h=args.h, capacity=cap,
                           max_nnz=256, positive_only=ds.nonneg,
                           index_buckets=args.index_buckets)
-        index = SinnamonIndex(spec)
-    for lo in range(0, args.docs, 2048):
-        hi = min(lo + 2048, args.docs)
-        index.insert_many(list(range(lo, hi)), idx[lo:hi], val[lo:hi])
+        if args.wal:
+            from repro.persist import DurableSinnamonIndex
+            index = DurableSinnamonIndex.open(spec, **durable)
+        else:
+            index = SinnamonIndex(spec)
+    recovered = index.size
+    if recovered:
+        print(f"recovered {recovered} docs from snapshot + WAL tail")
+    todo = [d for d in range(args.docs)
+            if args.wal is None or d not in index]
+    for lo in range(0, len(todo), 2048):
+        chunk = todo[lo:lo + 2048]
+        index.insert_many(chunk, idx[chunk], val[chunk])
     n_shards = args.shards if args.shards > 1 else 1
     print(f"indexed {index.size} docs over {n_shards} shard(s)")
+    if args.wal and args.snapshot_dir:
+        index.snapshot()
+        print(f"snapshot written to {args.snapshot_dir}")
 
     server = QueryServer(index, k=args.k, kprime=args.kprime,
                          budget=args.budget)

@@ -1,0 +1,17 @@
+"""Durability layer for the streaming retrieval engine.
+
+* ``wal``      — append-only write-ahead log of insert/delete/grow/compact ops
+                 (numpy record batches, fsync'd segments, CRC-checked replay).
+* ``snapshot`` — full-state snapshots built on checkpoint/ckpt.py's atomic
+                 rename layout; always stored *unsharded* so a sharded index
+                 can be restored elastically onto a different shard count.
+* ``compact``  — drift metrics + compaction policy (including a background
+                 compactor thread) for §4.3 recycled-slot sketch residue.
+* ``durable``  — ``DurableSinnamonIndex`` / ``DurableShardedSinnamonIndex``:
+                 WAL-on-write wrappers with recovery = snapshot + WAL tail.
+"""
+
+from repro.persist.durable import (  # noqa: F401
+    DurableShardedSinnamonIndex,
+    DurableSinnamonIndex,
+)

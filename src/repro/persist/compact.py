@@ -1,0 +1,109 @@
+"""Sketch-drift metrics and compaction policy.
+
+The paper's §4.3 deletion leaves recycled sketch columns carrying stale
+maxima (see repro.core.engine: merge-on-recycle insert), so the Theorem 5.1
+upper bound stays *valid* but grows *loose* under churn — candidate
+generation quality silently degrades.  This module measures that drift
+against a freshly encoded sketch and decides when to pay for a rebuild:
+
+* :func:`drift_metrics`  — mean/max per-slot overestimate + dirty counts,
+  for any index flavour (single-device or mesh-sharded, durable or not).
+* :func:`maybe_compact`  — threshold policy: compact iff max drift exceeds.
+* :class:`BackgroundCompactor` — a daemon thread that polls drift and
+  compacts optimistically (state-identity CAS swap via
+  ``DurableIndex.try_compact_async``), so serving never blocks.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import numpy as np
+
+
+def drift_metrics(index) -> dict:
+    """Drift of the live sketch vs. a fresh one.  All values are host floats.
+
+    mean/max are over ACTIVE slots (inactive columns never contribute to a
+    search).  ``dirty_active`` counts recycled columns — the only place
+    drift can live; ``dirty_total`` additionally counts deleted-not-yet-
+    recycled columns (zeroed by the next compaction).
+    """
+    # A concurrent grow() can swap state between reads; retry until the
+    # drift vector and the state snapshot agree on capacity.
+    for _ in range(5):
+        per_slot = index.slot_drift()                    # f32[C]
+        state = index.state
+        if per_slot.shape[0] == state.active.shape[0]:
+            break
+    else:
+        raise RuntimeError("index capacity kept changing during drift scan")
+    active = np.asarray(state.active)
+    dirty = np.asarray(state.dirty)
+    act = per_slot[active] if active.any() else np.zeros((0,), np.float32)
+    return {
+        "mean_overestimate": float(act.mean()) if act.size else 0.0,
+        "max_overestimate": float(act.max()) if act.size else 0.0,
+        "dirty_active": int((dirty & active).sum()),
+        "dirty_total": int(dirty.sum()),
+        "active": int(active.sum()),
+    }
+
+
+def maybe_compact(index, threshold: float) -> Optional[dict]:
+    """Compact iff the max per-slot overestimate exceeds ``threshold``.
+
+    Returns the pre-compaction metrics dict when compaction ran, else None.
+    """
+    metrics = drift_metrics(index)
+    if metrics["max_overestimate"] > threshold:
+        index.compact()
+        return metrics
+    return None
+
+
+class BackgroundCompactor:
+    """Daemon thread: poll drift every ``interval_s``, compact when above
+    ``threshold``.  Requires a durable index (``try_compact_async``) so the
+    rebuild happens off the serving path and the WAL stays consistent."""
+
+    def __init__(self, index, threshold: float, interval_s: float = 1.0):
+        self.index = index
+        self.threshold = threshold
+        self.interval_s = interval_s
+        self.compactions = 0
+        self.skipped_races = 0
+        self.errors = 0
+        self.last_error: Optional[BaseException] = None
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+
+    def start(self) -> "BackgroundCompactor":
+        self._thread.start()
+        return self
+
+    def _run(self) -> None:
+        while not self._stop.wait(self.interval_s):
+            # The daemon must survive transient races (e.g. a grow swapping
+            # state mid-scan): record the error and retry next tick rather
+            # than silently dying and letting drift grow unbounded.
+            try:
+                self._tick()
+            except Exception as e:                      # noqa: BLE001
+                self.errors += 1
+                self.last_error = e
+
+    def _tick(self) -> None:
+        metrics = drift_metrics(self.index)
+        if metrics["max_overestimate"] <= self.threshold:
+            return
+        n = self.index.try_compact_async()
+        if n is None:
+            self.skipped_races += 1     # a mutation raced us; retry next tick
+        elif n:
+            self.compactions += 1
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=30)

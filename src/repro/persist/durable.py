@@ -1,0 +1,502 @@
+"""WAL-on-write wrappers around the streaming indexes.
+
+``DurableSinnamonIndex`` / ``DurableShardedSinnamonIndex`` subclass the
+in-memory indexes and log every public mutation to the write-ahead log
+*before* applying it, so recovery = latest snapshot + replay of the WAL tail
+through the exact same host code paths.  Replay therefore reproduces slot
+allocation, free-list order, capacity growth, recycled-column merges and
+compaction points bit-for-bit: a recovered index returns byte-identical
+search results to the never-restarted one.
+
+Determinism notes:
+
+* Auto-grow (free-list exhaustion inside an insert) is NOT logged — it is a
+  deterministic function of the op stream and replays identically.  Explicit
+  ``grow()`` calls are logged.
+* ``compact()`` IS logged (KIND_COMPACT): compaction changes upper-bound
+  scores, so replay must rebuild the dirty columns at the same op position
+  to keep candidate generation identical.
+* Serving never blocks: searches read ``self.state`` (an immutable pytree
+  ref) without taking the op lock, so snapshots and background compaction
+  can run while a ``QueryServer`` keeps answering queries.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine as eng
+from repro.persist import snapshot as snaplib
+from repro.persist import wal
+from repro.serving.sharded import ShardedSinnamonIndex, make_compact_step
+
+
+class _DurableOps:
+    """Logging, policy and recovery machinery shared by both wrappers."""
+
+    def _init_durable(self, *, wal_dir: str, snapshot_dir: Optional[str],
+                      fsync: bool, segment_bytes: int,
+                      snapshot_every: Optional[int],
+                      compact_threshold: Optional[float],
+                      compact_check_every: int,
+                      snapshot_keep: int):
+        self.wal_dir = wal_dir
+        self.snapshot_dir = snapshot_dir
+        self.fsync = fsync
+        self.segment_bytes = segment_bytes
+        self.snapshot_every = snapshot_every
+        self.compact_threshold = compact_threshold
+        self.compact_check_every = compact_check_every
+        self.snapshot_keep = snapshot_keep
+        self._lock = threading.RLock()
+        self._suspend = 0            # >0: inside a replay or an internal call
+        self._writers: dict[int, wal.WalWriter] = {}
+        self._next_lsn = 0
+        self._last_lsn = -1
+        self._ops_since_snapshot = 0
+        self._ops_since_compact_check = 0
+
+    @contextmanager
+    def _nolog(self):
+        self._suspend += 1
+        try:
+            yield
+        finally:
+            self._suspend -= 1
+
+    @property
+    def _logging(self) -> bool:
+        return self._suspend == 0
+
+    def _writer(self, shard: int) -> wal.WalWriter:
+        if shard not in self._writers:
+            self._writers[shard] = wal.writer_for(
+                self.wal_dir, shard, fsync=self.fsync,
+                segment_bytes=self.segment_bytes)
+        return self._writers[shard]
+
+    def _append(self, shard: int, kind: int, arrays: dict) -> int:
+        lsn = self._writer(shard).append(kind, arrays, lsn=self._next_lsn)
+        self._next_lsn = lsn + 1
+        self._last_lsn = lsn
+        return lsn
+
+    # -- policy ---------------------------------------------------------------
+    def _after_ops(self, n: int) -> None:
+        if not self._logging:
+            return
+        self._ops_since_snapshot += n
+        self._ops_since_compact_check += n
+        # The drift metric re-encodes the whole store (O(corpus)), so it is
+        # only recomputed every compact_check_every ops — and only when a
+        # recycled (dirty+active) slot exists, the sole place drift can live.
+        if (self.compact_threshold is not None
+                and self._ops_since_compact_check >= self.compact_check_every):
+            self._ops_since_compact_check = 0
+            st = self.state
+            if bool(np.asarray(jnp.any(st.dirty & st.active))):
+                drift = self.slot_drift()
+                if float(drift.max()) > self.compact_threshold:
+                    self.compact()
+        if (self.snapshot_every is not None and self.snapshot_dir
+                and self._ops_since_snapshot >= self.snapshot_every):
+            self.snapshot()
+
+    # -- snapshot / compaction ------------------------------------------------
+    def snapshot(self) -> str:
+        """Write a full snapshot and prune WAL segments it covers.
+
+        Safe to call while a ``QueryServer`` is serving: searches never take
+        the op lock; the lock only orders the snapshot against concurrent
+        mutations so (state, id↔slot map, free lists, LSN) stay consistent.
+        """
+        if not self.snapshot_dir:
+            raise ValueError("index was opened without a snapshot_dir")
+        with self._lock:
+            ms = snaplib.latest_manifest(self.snapshot_dir)
+            extra = None if ms is None else ms[0]["extra"]
+            if (extra is not None and snaplib.matches_layout(extra, self)
+                    and int(extra["wal_lsn"]) == self._last_lsn):
+                # State at a given LSN is deterministic, so the on-disk
+                # snapshot is already current: rewriting it would briefly
+                # unpublish the only recovery base for zero gain.
+                path = snaplib.step_path(self.snapshot_dir, ms[1])
+            else:
+                path = snaplib.save(self.snapshot_dir, self, self._last_lsn,
+                                    keep=self.snapshot_keep)
+            self._ops_since_snapshot = 0
+            wal.prune(self.wal_dir, self._last_lsn)
+            # The prune may unlink a writer's open segment; close so the next
+            # append rotates to a fresh file instead of a dead inode.
+            for w in self._writers.values():
+                w.close()
+        return path
+
+    def compact(self) -> int:
+        """Logged compaction: rebuild dirty sketch columns (see superclass)."""
+        with self._lock:
+            if not int(np.asarray(jnp.sum(self.state.dirty))):
+                return 0
+            if self._logging:
+                self._append(0, wal.KIND_COMPACT, {})
+            with self._nolog():
+                return super().compact()
+
+    def try_compact_async(self) -> Optional[int]:
+        """Optimistic compaction for a background thread.
+
+        Computes the compacted state from a snapshot of ``self.state``
+        WITHOUT holding the op lock, then swaps it in only if no mutation
+        raced us (otherwise returns None and the caller retries later).  The
+        KIND_COMPACT record is appended at the swap point, so replay rebuilds
+        at the same position in the op stream.
+        """
+        st = self.state
+        n_dirty = int(np.asarray(jnp.sum(st.dirty)))
+        if not n_dirty:
+            return 0
+        new_state = self._compacted_state(st)
+        with self._lock:
+            if self.state is not st:
+                return None
+            if self._logging:
+                self._append(0, wal.KIND_COMPACT, {})
+            self.state = new_state
+        return n_dirty
+
+    # -- recovery -------------------------------------------------------------
+    def _recover(self, restore_fn) -> None:
+        """Shared open flow: latest snapshot (if any) + WAL tail replay.
+
+        ``restore_fn(state, extra) -> (wal_lsn, rebased)`` fills the index
+        from the restored snapshot parts; ``rebased`` means the restore was
+        elastic (cross-layout / different shard count), in which case a fresh
+        snapshot is written so later recoveries skip the rebuild.
+        """
+        snap_lsn = -1
+        rebased = False
+        ms = None
+        if self.snapshot_dir:
+            # Recovery owns the dir at this point (nothing serves yet), so
+            # crash-stranded resaves can safely be promoted back.
+            snaplib.adopt_strays(self.snapshot_dir)
+            ms = snaplib.latest_manifest(self.snapshot_dir)
+        if ms is not None:
+            if snaplib.matches_layout(ms[0]["extra"], self):
+                # A same-layout restore replaces the state wholesale: free
+                # the constructor's fresh arrays BEFORE materialising the
+                # snapshot so recovery never holds two full copies.  (An
+                # elastic restore re-inserts into the fresh state, so it
+                # must stay.)
+                self.state = None
+            state, extra = snaplib.restore_parts(self.snapshot_dir, ms)
+            with self._nolog():     # elastic re-inserts must not re-log
+                snap_lsn, rebased = restore_fn(state, extra)
+        self._replay(snap_lsn)
+        if rebased:
+            self.snapshot()
+
+    def _replay(self, after_lsn: int) -> int:
+        """Apply the WAL tail (> after_lsn); returns the replay horizon.
+
+        One scan serves replay, the orphan check and the repair decision;
+        repair itself (which must re-read files to rewrite them) only runs
+        when there is actually a torn tail or an orphan to drop.
+        """
+        merged, torn = wal.scan_all(self.wal_dir)
+        ops = wal.gap_free_ops(merged, after_lsn)
+        horizon = after_lsn
+        with self._nolog():
+            for lsn, kind, arrays in ops:
+                self._apply_op(kind, arrays)
+                horizon = lsn
+        # Records beyond the horizon that repair would drop: a torn final
+        # batch reaches at most one-batch past the horizon (one record per
+        # shard).  Anything further means the replay base itself is wrong —
+        # typically a WAL pruned against a snapshot this open() wasn't given —
+        # and "repairing" would silently destroy acknowledged data.
+        orphans = [lsn for lsn, _, _ in merged if lsn > horizon]
+        max_batch = max(len(wal.partitions(self.wal_dir)),
+                        getattr(self, "n_shards", 1))
+        if orphans and orphans[-1] > horizon + max_batch:
+            raise RuntimeError(
+                f"{self.wal_dir}: WAL records at LSNs {orphans[:3]}"
+                f"{'...' if len(orphans) > 3 else ''} are unreachable from "
+                f"recovery base LSN {after_lsn} — this is not a torn batch "
+                f"tail (wrong or missing snapshot_dir?); refusing to repair")
+        if torn or orphans:
+            wal.repair(self.wal_dir, horizon)
+        self._next_lsn = horizon + 1
+        self._last_lsn = horizon
+        return horizon
+
+    def _apply_op(self, kind: int, arrays: dict) -> None:
+        if kind == wal.KIND_INSERT:
+            self.insert_many([int(e) for e in arrays["ext_ids"]],
+                             arrays["idx"], arrays["val"])
+        elif kind == wal.KIND_INSERT_ONE:
+            self.insert(int(arrays["ext_ids"][0]), arrays["idx"][0],
+                        arrays["val"][0])
+        elif kind == wal.KIND_DELETE:
+            self._apply_delete([int(e) for e in arrays["ext_ids"]])
+        elif kind == wal.KIND_GROW:
+            try:
+                self.grow(int(arrays["capacity"]))
+            except ValueError:
+                # Cross-layout elastic replay: the logged capacity was for a
+                # different layout (e.g. per-shard local).  Skipping is safe:
+                # grow never changes content, and auto-grow covers need.
+                pass
+        elif kind == wal.KIND_COMPACT:
+            self.compact()
+        else:
+            raise ValueError(f"unknown WAL record kind {kind}")
+
+
+class DurableSinnamonIndex(_DurableOps, eng.SinnamonIndex):
+    """Single-device streaming index with WAL + snapshot durability."""
+
+    def __init__(self, spec: eng.EngineSpec, *, wal_dir: str,
+                 snapshot_dir: Optional[str] = None, fsync: bool = True,
+                 segment_bytes: int = 4 << 20,
+                 snapshot_every: Optional[int] = None,
+                 compact_threshold: Optional[float] = None,
+                 compact_check_every: int = 64,
+                 snapshot_keep: int = 3):
+        eng.SinnamonIndex.__init__(self, spec)
+        self._init_durable(wal_dir=wal_dir, snapshot_dir=snapshot_dir,
+                           fsync=fsync, segment_bytes=segment_bytes,
+                           snapshot_every=snapshot_every,
+                           compact_threshold=compact_threshold,
+                           compact_check_every=compact_check_every,
+                           snapshot_keep=snapshot_keep)
+
+    @classmethod
+    def open(cls, spec: eng.EngineSpec, *, wal_dir: str,
+             snapshot_dir: Optional[str] = None,
+             **kw) -> "DurableSinnamonIndex":
+        """Open-or-recover: fresh if no durable data exists, otherwise
+        latest snapshot + WAL tail replay (torn tails repaired)."""
+        index = cls(spec, wal_dir=wal_dir, snapshot_dir=snapshot_dir, **kw)
+        index._recover(lambda state, extra: (
+            snaplib.apply_single(index, state, extra),
+            extra["kind"] != "single"))             # cross-layout elastic
+        return index
+
+    def _compacted_state(self, state):
+        return self._compact(state, self.spec)
+
+    # -- logged mutations -----------------------------------------------------
+    # Every op validates BEFORE appending to the WAL: a record is only
+    # written for an op that will succeed, so a caller-handled error (bad id,
+    # bad capacity, wrong width) can never leave a poison record that breaks
+    # every future replay.
+
+    def insert(self, ext_id: int, idx, val) -> None:
+        with self._lock:
+            if self._logging:
+                pi, pv = eng.pad_sparse(idx, val, self.spec.max_nnz)
+                self._append(0, wal.KIND_INSERT_ONE, {
+                    "ext_ids": np.asarray([ext_id], np.int64),
+                    "idx": np.asarray(pi)[None],
+                    "val": np.asarray(pv)[None]})
+            with self._nolog():
+                super().insert(ext_id, idx, val)
+            self._after_ops(1)
+
+    def insert_many(self, ext_ids, idx_batch, val_batch) -> None:
+        with self._lock:
+            idx_batch = np.asarray(idx_batch, np.int32)
+            val_batch = np.asarray(val_batch, np.float32)
+            if idx_batch.shape[1] != self.spec.max_nnz:
+                raise ValueError(f"batch nnz width {idx_batch.shape[1]} != "
+                                 f"max_nnz {self.spec.max_nnz}")
+            if not (len(ext_ids) == idx_batch.shape[0] == val_batch.shape[0]):
+                raise ValueError(
+                    f"batch length mismatch: {len(ext_ids)} ids vs "
+                    f"{idx_batch.shape[0]} idx rows / "
+                    f"{val_batch.shape[0]} val rows")
+            if self._logging:
+                self._append(0, wal.KIND_INSERT, {
+                    "ext_ids": np.asarray(ext_ids, np.int64),
+                    "idx": idx_batch, "val": val_batch})
+            with self._nolog():
+                super().insert_many(ext_ids, idx_batch, val_batch)
+            self._after_ops(len(ext_ids))
+
+    def delete(self, ext_id: int) -> None:
+        with self._lock:
+            if ext_id not in self._id2slot:
+                raise KeyError(f"unknown document id: {ext_id}")
+            if self._logging:
+                self._append(0, wal.KIND_DELETE, {
+                    "ext_ids": np.asarray([ext_id], np.int64)})
+            with self._nolog():
+                super().delete(ext_id)
+            self._after_ops(1)
+
+    def _apply_delete(self, ext_ids) -> None:
+        for e in ext_ids:
+            self.delete(e)
+
+    def grow(self, new_capacity: int) -> None:
+        with self._lock:
+            if new_capacity <= self.spec.capacity or new_capacity % 32 != 0:
+                raise ValueError("new capacity must be a larger multiple of 32")
+            if self._logging:
+                self._append(0, wal.KIND_GROW, {
+                    "capacity": np.asarray(new_capacity, np.int64)})
+            super().grow(new_capacity)
+
+
+class DurableShardedSinnamonIndex(_DurableOps, ShardedSinnamonIndex):
+    """Mesh-sharded streaming index with per-shard WAL partitions.
+
+    Each operation batch is routed exactly as the in-memory index routes it
+    and logged to the owning shard's partition (control records — grow,
+    compact — go to partition 0).  LSNs come from one global counter, so the
+    merged log totally orders the stream and elastic recovery onto a
+    *different* shard count can replay it through the new routing.
+    """
+
+    def __init__(self, spec: eng.EngineSpec, mesh, *,
+                 wal_dir: str, snapshot_dir: Optional[str] = None,
+                 update_block: int = 32, fsync: bool = True,
+                 segment_bytes: int = 4 << 20,
+                 snapshot_every: Optional[int] = None,
+                 compact_threshold: Optional[float] = None,
+                 compact_check_every: int = 64,
+                 snapshot_keep: int = 3):
+        ShardedSinnamonIndex.__init__(self, spec, mesh,
+                                      update_block=update_block)
+        self._init_durable(wal_dir=wal_dir, snapshot_dir=snapshot_dir,
+                           fsync=fsync, segment_bytes=segment_bytes,
+                           snapshot_every=snapshot_every,
+                           compact_threshold=compact_threshold,
+                           compact_check_every=compact_check_every,
+                           snapshot_keep=snapshot_keep)
+
+    @classmethod
+    def open(cls, spec: eng.EngineSpec, mesh, *, wal_dir: str,
+             snapshot_dir: Optional[str] = None,
+             **kw) -> "DurableShardedSinnamonIndex":
+        """Open-or-recover onto ``mesh``.
+
+        If the snapshot was taken with a different shard count the restore is
+        elastic (re-route + re-insert from raw vectors, which freshens the
+        sketch) and a new snapshot is written immediately so later recoveries
+        don't repeat the rebuild.
+        """
+        index = cls(spec, mesh, wal_dir=wal_dir, snapshot_dir=snapshot_dir,
+                    **kw)
+        index._recover(lambda state, extra: (
+            snaplib.apply_sharded(index, state, extra, mesh),
+            extra["kind"] != "sharded"              # cross-layout elastic
+            or int(extra["n_shards"]) != index.n_shards))
+        return index
+
+    def _compacted_state(self, state):
+        step = self._step("compact", lambda: make_compact_step(self.mesh,
+                                                               self.spec))
+        return step(state)
+
+    # -- logged mutations (validate BEFORE logging; see single-device note) ---
+    def insert_many(self, ext_ids, idx_batch, val_batch) -> None:
+        with self._lock:
+            idx_batch = np.asarray(idx_batch)
+            val_batch = np.asarray(val_batch)
+            if idx_batch.shape[1] > self.spec.max_nnz:
+                raise ValueError(
+                    f"document nnz {idx_batch.shape[1]} > "
+                    f"max_nnz {self.spec.max_nnz}")
+            if not (len(ext_ids) == idx_batch.shape[0] == val_batch.shape[0]):
+                raise ValueError(
+                    f"batch length mismatch: {len(ext_ids)} ids vs "
+                    f"{idx_batch.shape[0]} idx rows / "
+                    f"{val_batch.shape[0]} val rows")
+            if self._logging:
+                self._log_routed(wal.KIND_INSERT, ext_ids, idx_batch,
+                                 val_batch)
+            with self._nolog():
+                super().insert_many(ext_ids, idx_batch, val_batch)
+            self._after_ops(len(ext_ids))
+
+    def delete_many(self, ext_ids) -> None:
+        with self._lock:
+            # Dedup BEFORE logging: a duplicated id would pass the missing
+            # check, get logged, then fail on apply — a poison record.
+            ext_ids = list(dict.fromkeys(int(e) for e in ext_ids))
+            missing = [e for e in ext_ids if e not in self._id2slot]
+            if missing:
+                raise KeyError(f"unknown document ids: {missing[:5]}")
+            if self._logging:
+                self._log_routed(wal.KIND_DELETE, ext_ids, None, None)
+            with self._nolog():
+                super().delete_many(ext_ids)
+            self._after_ops(len(ext_ids))
+
+    def _apply_delete(self, ext_ids) -> None:
+        self.delete_many(ext_ids)
+
+    def _log_routed(self, kind: int, ext_ids, idx_batch, val_batch) -> None:
+        """One record per owning shard partition.
+
+        Per-shard sub-batches replay identically to the combined batch:
+        state touched by different shards is disjoint, and within a shard the
+        original batch order is preserved.  Insert payloads are padded to
+        ``max_nnz`` so a cross-layout replay (whose width check is strict)
+        accepts them.
+
+        The batch's LSNs are assigned in shard order but the records are
+        APPENDED in descending-LSN order: if the process dies between
+        appends, the durable subset is missing the batch's first LSN, so the
+        gap rule discards the whole batch on replay — a multi-shard batch is
+        recovered all-or-nothing, never partially.
+        """
+        ext_ids = [int(e) for e in ext_ids]
+        per_shard: dict[int, list[int]] = {}
+        for pos, e in enumerate(ext_ids):
+            per_shard.setdefault(self.route(e), []).append(pos)
+        if kind == wal.KIND_INSERT:
+            idx_batch = self._pad(np.asarray(idx_batch, np.int32), -1)
+            val_batch = self._pad(np.asarray(val_batch, np.float32), 0)
+        records = []
+        lsn = self._next_lsn
+        for s in sorted(per_shard):
+            take = per_shard[s]
+            arrays = {"ext_ids": np.asarray([ext_ids[p] for p in take],
+                                            np.int64)}
+            if kind == wal.KIND_INSERT:
+                arrays["idx"] = idx_batch[take]
+                arrays["val"] = val_batch[take]
+            records.append((s, arrays, lsn))
+            lsn += 1
+        appended = []
+        try:
+            for s, arrays, rec_lsn in reversed(records):
+                self._writer(s).append(kind, arrays, lsn=rec_lsn)
+                appended.append(s)
+        except OSError:
+            # Keep the batch all-or-nothing ON DISK too: the already-durable
+            # higher-LSN records would otherwise pin LSNs that the next op
+            # (which reuses this batch's numbers) collides with.
+            for s in reversed(appended):
+                self._writers[s].unappend()
+            raise
+        self._next_lsn = lsn
+        self._last_lsn = lsn - 1
+
+    def grow(self, new_local_capacity: Optional[int] = None) -> None:
+        with self._lock:
+            new_c = new_local_capacity or self.spec.capacity * 2
+            if new_c <= self.spec.capacity or new_c % 32 != 0:
+                raise ValueError("new capacity must be a larger multiple of 32")
+            if self._logging:
+                self._append(0, wal.KIND_GROW, {
+                    "capacity": np.asarray(new_c, np.int64)})
+            super().grow(new_c)

@@ -1,0 +1,229 @@
+"""Full-state snapshots of the streaming index.
+
+Built on ``repro.checkpoint.ckpt``'s atomic-rename layout (a preempted save
+never corrupts the latest snapshot).  The SinnamonState pytree — including
+the ``Optional[l]`` leaf and the VecStore NamedTuple — flattens natively;
+the host-side reconstruction recipe (engine spec, id↔slot map, free lists,
+WAL position, shard count) rides in the manifest's ``extra`` blob.
+
+Arrays are always stored UNSHARDED (gathered global state), so a sharded
+index restores onto **any** shard count: same count → direct device placement
+(byte-identical state); different count → documents are re-routed and
+re-inserted from the raw VecStore rows (which implicitly compacts the
+sketch — rebuilt columns are exact).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.core import engine as eng
+from repro.serving.sharded import ShardedSinnamonIndex, shard_state
+
+FORMAT = "sinnamon-snapshot-v1"
+
+
+def _spec_dict(spec: eng.EngineSpec) -> dict:
+    return dataclasses.asdict(spec)
+
+
+def _spec_from(d: dict) -> eng.EngineSpec:
+    return eng.EngineSpec(**d)
+
+
+def save(snap_dir: str, index, wal_lsn: int, keep: int = 3) -> str:
+    """Snapshot a SinnamonIndex or ShardedSinnamonIndex (durable or not).
+
+    ``wal_lsn`` is the LSN of the last operation reflected in the state;
+    recovery replays the WAL strictly after it.  The ckpt step number is the
+    snapshot's WAL position + 1 so newer snapshots always sort later (and a
+    zero-op snapshot is still representable).
+    """
+    sharded = isinstance(index, ShardedSinnamonIndex)
+    state = jax.device_get(index.state)       # gathers the global arrays
+    extra = {
+        "format": FORMAT,
+        "kind": "sharded" if sharded else "single",
+        "spec": _spec_dict(index.spec),       # per-shard spec when sharded
+        "wal_lsn": int(wal_lsn),
+    }
+    if sharded:
+        extra["n_shards"] = index.n_shards
+        extra["update_block"] = index.update_block
+        extra["free"] = [list(map(int, f)) for f in index._free]
+        extra["id2slot"] = {str(k): [int(v[0]), int(v[1])]
+                            for k, v in index._id2slot.items()}
+    else:
+        extra["free"] = list(map(int, index._free))
+        extra["id2slot"] = {str(k): int(v)
+                            for k, v in index._id2slot.items()}
+    return ckpt.save(snap_dir, int(wal_lsn) + 1, state, keep=keep,
+                     extra=extra)
+
+
+def latest_manifest(snap_dir: str) -> Optional[Tuple[dict, int]]:
+    """(manifest, step) of the newest snapshot, or None if there is none.
+
+    Recovery paths should call this ONCE and thread the pair through
+    (``matches_layout`` on its extra, :func:`restore_parts`, ``step_path``)
+    instead of re-reading the manifest per question.
+    """
+    if ckpt.latest_step(snap_dir) is None:
+        return None
+    return ckpt.read_manifest(snap_dir)
+
+
+def latest_extra(snap_dir: str) -> Optional[dict]:
+    """The newest snapshot's ``extra`` blob (spec, maps, wal_lsn, shard
+    count), or None if no snapshot exists."""
+    ms = latest_manifest(snap_dir)
+    return None if ms is None else ms[0]["extra"]
+
+
+def latest_wal_lsn(snap_dir: str) -> Optional[int]:
+    """WAL position of the newest snapshot, or None if there is none."""
+    extra = latest_extra(snap_dir)
+    return None if extra is None else int(extra["wal_lsn"])
+
+
+def step_path(snap_dir: str, step: int) -> str:
+    """Directory of the snapshot published at ``step``."""
+    return os.path.join(snap_dir, f"step_{step:010d}")
+
+
+def adopt_strays(snap_dir: str) -> None:
+    """Writer-side crash repair of the snapshot dir (see ckpt.adopt_strays)."""
+    ckpt.adopt_strays(snap_dir)
+
+
+def matches_layout(extra: dict, index) -> bool:
+    """Does a snapshot recipe describe ``index``'s layout (kind + shards)?"""
+    sharded = isinstance(index, ShardedSinnamonIndex)
+    if extra.get("kind") != ("sharded" if sharded else "single"):
+        return False
+    return not sharded or int(extra["n_shards"]) == index.n_shards
+
+
+def restore_parts(snap_dir: str,
+                  manifest_step: Optional[Tuple[dict, int]] = None
+                  ) -> Tuple[eng.SinnamonState, dict]:
+    """Load (host state arrays, extra recipe) from the newest snapshot.
+
+    Pass a ``latest_manifest`` result as ``manifest_step`` to avoid
+    re-reading the manifest.  The restore template comes from
+    ``jax.eval_shape`` — no device state is allocated just to describe the
+    tree, so recovery materialises the index exactly once.
+    """
+    manifest, step = manifest_step or ckpt.read_manifest(snap_dir)
+    extra = manifest["extra"]
+    if extra.get("format") != FORMAT:
+        raise ValueError(f"{snap_dir}: not a {FORMAT} snapshot")
+    spec = _spec_from(extra["spec"])
+    if extra["kind"] == "sharded":
+        spec = dataclasses.replace(
+            spec, capacity=spec.capacity * int(extra["n_shards"]))
+    template = jax.eval_shape(lambda: eng.init(spec))
+    state, _, _ = ckpt.restore(snap_dir, template, step=step)
+    return state, extra
+
+
+def _live_rows(extra) -> dict:
+    """ext_id → global VecStore row of every live doc in a snapshot."""
+    if extra["kind"] == "sharded":
+        local_cap = int(extra["spec"]["capacity"])
+        return {int(k): int(v[0]) * local_cap + int(v[1])
+                for k, v in extra["id2slot"].items()}
+    return {int(k): int(v) for k, v in extra["id2slot"].items()}
+
+
+def _reinsert_live(index, state, extra) -> int:
+    """Elastic restore: re-insert every live doc from its raw VecStore row
+    (deterministic ascending-id order; sketch columns come out fresh).
+    Works across layouts — sharded↔sharded with a different shard count,
+    and sharded↔single.  Returns wal_lsn.
+    """
+    rows_of = _live_rows(extra)
+    indices = np.asarray(state.store.indices)
+    values = np.asarray(state.store.values, np.float32)
+    width = index.spec.max_nnz
+    if indices.shape[1] > width:
+        raise ValueError(f"snapshot max_nnz {indices.shape[1]} > target "
+                         f"index max_nnz {width}: would drop coordinates")
+    if indices.shape[1] < width:
+        pad_i = np.full((indices.shape[0], width), -1, indices.dtype)
+        pad_i[:, :indices.shape[1]] = indices
+        pad_v = np.zeros((values.shape[0], width), values.dtype)
+        pad_v[:, :values.shape[1]] = values
+        indices, values = pad_i, pad_v
+    ext_ids = sorted(rows_of)
+    for lo in range(0, len(ext_ids), 512):
+        chunk = ext_ids[lo:lo + 512]
+        rows = [rows_of[e] for e in chunk]
+        index.insert_many(chunk, indices[rows], values[rows])
+    return int(extra["wal_lsn"])
+
+
+def apply_single(index: eng.SinnamonIndex, state, extra) -> int:
+    """Fill an existing SinnamonIndex from restored parts.  Returns wal_lsn.
+
+    A single-kind snapshot restores byte-identically (arrays, slot map,
+    free-list order); a sharded-kind snapshot restores elastically by
+    re-inserting the live docs from the raw store.
+    """
+    if extra["kind"] != "single":
+        return _reinsert_live(index, state, extra)
+    index.spec = _spec_from(extra["spec"])
+    index.state = jax.tree.map(jnp.asarray, state)
+    index._id2slot = {int(k): int(v) for k, v in extra["id2slot"].items()}
+    index._free = [int(s) for s in extra["free"]]
+    return int(extra["wal_lsn"])
+
+
+def apply_sharded(index: ShardedSinnamonIndex, state, extra, mesh) -> int:
+    """Fill an existing ShardedSinnamonIndex from restored parts.
+
+    Sharded snapshot with the same shard count → direct placement
+    (byte-identical state + bookkeeping).  Different shard count or a
+    single-kind snapshot → elastic restore via :func:`_reinsert_live`.
+    Returns wal_lsn.
+    """
+    if (extra["kind"] != "sharded"
+            or index.n_shards != int(extra["n_shards"])):
+        return _reinsert_live(index, state, extra)
+    index.spec = _spec_from(extra["spec"])
+    index.state = shard_state(jax.tree.map(jnp.asarray, state), mesh)
+    index._free = [[int(s) for s in f] for f in extra["free"]]
+    index._id2slot = {int(k): (int(v[0]), int(v[1]))
+                      for k, v in extra["id2slot"].items()}
+    index._steps.clear()
+    return int(extra["wal_lsn"])
+
+
+def load_single(snap_dir: str) -> Tuple[eng.SinnamonIndex, int]:
+    """Rebuild a SinnamonIndex from the newest snapshot.  (index, wal_lsn)."""
+    state, extra = restore_parts(snap_dir)
+    index = eng.SinnamonIndex(_spec_from(extra["spec"]))
+    return index, apply_single(index, state, extra)
+
+
+def load_sharded(snap_dir: str, mesh) -> Tuple[ShardedSinnamonIndex, int]:
+    """Rebuild a ShardedSinnamonIndex from the newest snapshot onto ``mesh``.
+    (index, wal_lsn); see :func:`apply_sharded` for elastic semantics.
+
+    A single-kind snapshot (no ``update_block``/``n_shards`` in the recipe)
+    restores elastically; its spec describes the whole corpus, so it is used
+    as the per-shard local spec unchanged (capacity to spare on every shard).
+    """
+    state, extra = restore_parts(snap_dir)
+    spec = _spec_from(extra["spec"])
+    index = ShardedSinnamonIndex(spec, mesh,
+                                 update_block=int(extra.get("update_block",
+                                                            32)))
+    return index, apply_sharded(index, state, extra, mesh)

@@ -23,7 +23,13 @@ from repro.serving.sharded import ShardedSinnamonIndex
 
 class QueryServer:
     """Serves one index — single-device or mesh-sharded; both expose the same
-    ``search`` / ``search_many`` surface, so the server is layout-agnostic."""
+    ``search`` / ``search_many`` surface, so the server is layout-agnostic.
+
+    Durable indexes (repro.persist.durable) serve through the same surface,
+    and the server keeps answering during snapshots and background
+    compaction: searches read the immutable state ref without taking the
+    index's op lock, so maintenance never blocks the query path.
+    """
 
     def __init__(self, index: Union[SinnamonIndex, ShardedSinnamonIndex],
                  k: int = 10, kprime: int = 1000,

@@ -53,6 +53,7 @@ def state_pspecs(mesh: Mesh, positive_only: bool = False) -> eng.SinnamonState:
         store=vecstore.VecStore(indices=P(c), values=P(c)),
         active=P(c),
         ids=P(c),
+        dirty=P(c),
     )
 
 
@@ -174,6 +175,32 @@ def make_grow_step(mesh: Mesh, local_spec: eng.EngineSpec,
     return jax.jit(sharded), new_spec
 
 
+def make_compact_step(mesh: Mesh, local_spec: eng.EngineSpec):
+    """``step(state)`` → state with every shard's dirty sketch columns rebuilt
+    from its local VecStore slice (shard-local; no collectives)."""
+    sspec = state_pspecs(mesh, local_spec.positive_only)
+
+    def local_compact(state):
+        return eng.compact_state(state, local_spec)
+
+    sharded = shard_map(local_compact, mesh=mesh, in_specs=(sspec,),
+                        out_specs=sspec, check_rep=False)
+    return jax.jit(sharded)
+
+
+def make_drift_step(mesh: Mesh, local_spec: eng.EngineSpec):
+    """``step(state)`` → f32[C_global] per-slot sketch overestimate."""
+    c = _corpus_spec(mesh)
+    sspec = state_pspecs(mesh, local_spec.positive_only)
+
+    def local_drift(state):
+        return eng.slot_drift(state, local_spec)
+
+    sharded = shard_map(local_drift, mesh=mesh, in_specs=(sspec,),
+                        out_specs=P(c), check_rep=False)
+    return jax.jit(sharded)
+
+
 def shard_state(state: eng.SinnamonState, mesh: Mesh):
     """Place a host-built (global) state onto the mesh."""
     return jax.device_put(state, state_shardings(mesh, state.l is None))
@@ -278,7 +305,8 @@ class ShardedSinnamonIndex:
         self.delete_many([ext_id])
 
     def delete_many(self, ext_ids) -> None:
-        ext_ids = [int(e) for e in ext_ids]
+        # dedup: a repeated id is one deletion, not a KeyError mid-mutation
+        ext_ids = list(dict.fromkeys(int(e) for e in ext_ids))
         missing = [e for e in ext_ids if e not in self._id2slot]
         if missing:     # fail atomically, before any bookkeeping mutates
             raise KeyError(f"unknown document ids: {missing[:5]}")
@@ -351,10 +379,37 @@ class ShardedSinnamonIndex:
             self._free[s] = (list(range(new_c - 1, old_c - 1, -1))
                              + self._free[s])
 
+    # -- maintenance ---------------------------------------------------------
+    def compact(self) -> int:
+        """Rebuild every shard's dirty sketch columns (shard-local step).
+
+        Returns the number of columns rebuilt across all shards.
+        """
+        n_dirty = int(np.asarray(jnp.sum(self.state.dirty)))
+        if n_dirty:
+            step = self._step("compact", lambda: make_compact_step(
+                self.mesh, self.spec))
+            self.state = step(self.state)
+        return n_dirty
+
+    def slot_drift(self) -> np.ndarray:
+        """Per-slot sketch overestimate vs. a fresh sketch (f32[C_global])."""
+        step = self._step("drift", lambda: make_drift_step(self.mesh,
+                                                           self.spec))
+        return np.asarray(step(self.state))
+
     # -- misc ----------------------------------------------------------------
     @property
     def size(self) -> int:
         return len(self._id2slot)
+
+    def __contains__(self, ext_id) -> bool:
+        """True iff ``ext_id`` is currently live in the index."""
+        return int(ext_id) in self._id2slot
+
+    def doc_ids(self) -> list:
+        """Sorted external ids of every live document."""
+        return sorted(self._id2slot)
 
     def _pad(self, arr: np.ndarray, fill) -> np.ndarray:
         w = self.spec.max_nnz

@@ -43,6 +43,43 @@ def test_gc_keeps_latest(tmp_path):
     assert ckpt.all_steps(d) == [4, 5]
 
 
+def test_resave_same_step_and_stray_dirs(tmp_path):
+    """Re-saving an existing step must replace it without losing the copy;
+    in-flight .tmp dirs and superseded .old leftovers never count as
+    steps (the .old is cleaned up once its final dir exists)."""
+    cfg = _tiny_cfg()
+    state = loop.init_state(tr.init_params(jax.random.PRNGKey(0), cfg))
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 3, state, extra={"v": 1})
+    ckpt.save(d, 3, state, extra={"v": 2})
+    _, step, extra = ckpt.restore(d, state)
+    assert step == 3 and extra["v"] == 2
+    os.makedirs(os.path.join(d, "step_0000000003.old"))   # leftover
+    os.makedirs(os.path.join(d, "step_0000000008.tmp"))
+    assert ckpt.all_steps(d) == [3]
+    ckpt.adopt_strays(d)                   # writer-side crash repair
+    assert not os.path.exists(os.path.join(d, "step_0000000003.old"))
+    assert ckpt.all_steps(d) == [3]
+
+
+def test_adopts_stranded_old_after_crashed_resave(tmp_path):
+    """A crash between save()'s two swap renames leaves the previously
+    published copy at step_<N>.old with step_<N> gone; writer-side repair
+    (adopt_strays — run by save() and by durable recovery) must promote it
+    back so the step stays recoverable."""
+    cfg = _tiny_cfg()
+    state = loop.init_state(tr.init_params(jax.random.PRNGKey(0), cfg))
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 3, state, extra={"v": 1})
+    os.rename(os.path.join(d, "step_0000000003"),
+              os.path.join(d, "step_0000000003.old"))
+    assert ckpt.all_steps(d) == []             # listings stay pure reads
+    ckpt.adopt_strays(d)
+    assert ckpt.all_steps(d) == [3]            # adopted back
+    _, step, extra = ckpt.restore(d, state)
+    assert step == 3 and extra["v"] == 1
+
+
 def test_preemption_resume_loss_continuity(tmp_path):
     """Train 6 steps; kill at 3 + restart == uninterrupted run (bitwise)."""
     cfg = _tiny_cfg()

@@ -133,6 +133,25 @@ def test_update_overwrites():
     assert index.size == 32
 
 
+def test_insert_many_overwrites():
+    """Batch insert shares insert()'s overwrite semantics: a live id is
+    replaced (stale slot freed, never left active), and only the LAST
+    occurrence of an in-batch duplicate survives — same as the sharded
+    index, so a sharded WAL replays identically onto a single index."""
+    index, idx, val = _index(n_docs=32)
+    free_before = len(index._free)
+    index.insert_many([0, 1], idx[2:4], val[2:4])      # overwrite live 0, 1
+    assert index.size == 32
+    assert len(index._free) == free_before             # stale slots recycled
+    assert int(np.asarray(index.state.active).sum()) == 32
+    index.insert_many([40, 40], idx[4:6], val[4:6])    # in-batch duplicate
+    assert index.size == 33
+    assert int(np.asarray(index.state.active).sum()) == 33
+    slot = index._id2slot[40]
+    np.testing.assert_array_equal(
+        np.asarray(index.state.store.indices[slot]), idx[5])
+
+
 def test_memory_accounting(built):
     index, _, _ = built
     mem = index.memory_bytes()

@@ -1,0 +1,139 @@
+"""Churn drift regression: §4.3 delete-then-recycle leaves sketch columns
+carrying stale residue (merge-on-recycle), so upper bounds grow loose; the
+compaction pass must restore them to EXACTLY a freshly built index's sketch,
+on both the single-device and the 1-device-mesh sharded index."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine as eng
+from repro.core.engine import EngineSpec, SinnamonIndex
+from repro.data import synth
+from repro.distributed import mesh as meshlib
+from repro.persist import compact
+from repro.serving.sharded import ShardedSinnamonIndex
+
+# psi_query is deliberately dense: comparisons against a freshly BUILT index
+# place documents on different slots, so zero-score ties in the rerank tail
+# would be broken by layout, not by content — dense queries keep the top-k
+# strictly positive and distinct.
+DS = synth.SparseDatasetSpec("t", n=300, psi_doc=16, psi_query=24,
+                             value_dist="gaussian")
+
+
+def _spec(capacity=64):
+    return EngineSpec(n=DS.n, m=12, capacity=capacity, max_nnz=32, h=2,
+                      seed=3, value_dtype="float32")
+
+
+def _churn(index, idx, val, waves=3):
+    """Insert 64 docs, then repeatedly delete + re-insert over the same
+    slots.  Returns the per-wave max drift and the final live (ids→row) map.
+    """
+    index.insert_many(list(range(64)), idx[:64], val[:64])
+    next_id, row = 64, {e: e for e in range(64)}
+    drifts = []
+    for w in range(waves):
+        victims = sorted(row)[w * 7 % 31::5][:8]
+        for v in victims:
+            index.delete(v)
+            row.pop(v)
+        rows = [64 + (next_id + j) % 32 for j in range(len(victims))]
+        new_ids = list(range(next_id, next_id + len(victims)))
+        index.insert_many(new_ids, idx[rows], val[rows])
+        for e, r in zip(new_ids, rows):
+            row[e] = r
+        next_id += len(victims)
+        drifts.append(float(index.slot_drift().max()))
+    return drifts, row
+
+
+def _fresh_like(row, idx, val, capacity=64):
+    fresh = SinnamonIndex(_spec(capacity))
+    ids = sorted(row)
+    fresh.insert_many(ids, idx[[row[e] for e in ids]],
+                      val[[row[e] for e in ids]])
+    return fresh
+
+
+def test_churn_accumulates_drift_and_compaction_removes_it():
+    idx, val = synth.make_corpus(0, DS, 96, pad=32)
+    index = SinnamonIndex(_spec())
+    drifts, row = _churn(index, idx, val)
+
+    # drift is real, positive, and survives across waves
+    assert drifts[0] > 0
+    assert max(drifts) == max(index.slot_drift().max(), max(drifts))
+    m = compact.drift_metrics(index)
+    assert m["max_overestimate"] > 0 and m["dirty_active"] > 0
+
+    dirty_before = int(np.asarray(index.state.dirty).sum())
+    n = index.compact()
+    assert n == dirty_before > 0
+    assert not np.asarray(index.state.dirty).any()
+    after = compact.drift_metrics(index)
+    assert after["max_overestimate"] == 0.0
+    assert after["dirty_total"] == 0
+
+    # post-compaction sketch == a freshly built index's, per live document
+    fresh = _fresh_like(row, idx, val)
+    qi, qv = synth.make_queries(1, DS, 4, pad=32)
+    for q in range(4):
+        s_c = np.asarray(eng.score(index.state, index.spec,
+                                   jnp.asarray(qi[q]), jnp.asarray(qv[q])))
+        s_f = np.asarray(eng.score(fresh.state, fresh.spec,
+                                   jnp.asarray(qi[q]), jnp.asarray(qv[q])))
+        for e in row:
+            assert s_c[index._id2slot[e]] == s_f[fresh._id2slot[e]], e
+        # and the search results (ids + exact rerank scores) agree.
+        # kprime=capacity: the two indexes lay documents out on different
+        # slots, so sub-capacity candidate cuts tie-break the (many) zero
+        # upper bounds by slot order — a layout artifact, not drift.
+        ids_c, sc_c = index.search(qi[q], qv[q], k=10, kprime=64)
+        ids_f, sc_f = fresh.search(qi[q], qv[q], k=10, kprime=64)
+        np.testing.assert_array_equal(ids_c, ids_f)
+        np.testing.assert_array_equal(sc_c, sc_f)
+
+
+def test_upper_bound_stays_valid_under_churn():
+    """Theorem 5.1 must hold for the DIRTY sketch too (loose, never wrong)."""
+    idx, val = synth.make_corpus(2, DS, 96, pad=32)
+    index = SinnamonIndex(_spec())
+    _churn(index, idx, val)
+    qi, qv = synth.make_queries(3, DS, 6, pad=32)
+    from repro.storage import vecstore
+    for q in range(6):
+        s = np.asarray(eng.score(index.state, index.spec,
+                                 jnp.asarray(qi[q]), jnp.asarray(qv[q])))
+        qd = vecstore.densify_query(DS.n, jnp.asarray(qi[q]),
+                                    jnp.asarray(qv[q]))
+        exact = np.asarray(vecstore.exact_scores_all(index.state.store, qd))
+        active = np.asarray(index.state.active)
+        assert (s[active] - exact[active]).min() >= -1e-4
+
+
+def test_sharded_churn_compaction_matches_single_device():
+    idx, val = synth.make_corpus(4, DS, 96, pad=32)
+    mesh = meshlib.single_device_mesh(("data", "model"))
+    sharded = ShardedSinnamonIndex(_spec(), mesh)
+    single = SinnamonIndex(_spec())
+    for index in (sharded, single):
+        index.insert_many(list(range(64)), idx[:64], val[:64])
+        for v in (3, 11, 25, 40):
+            index.delete(v)
+        index.insert_many([100, 101, 102, 103], idx[64:68], val[64:68])
+
+    # both accumulate identical drift ...
+    np.testing.assert_allclose(sharded.slot_drift(), single.slot_drift(),
+                               atol=1e-6)
+    assert sharded.slot_drift().max() > 0
+    # ... and compaction brings them to the same exact state
+    assert sharded.compact() == single.compact() > 0
+    assert not np.asarray(sharded.state.dirty).any()
+    qi, qv = synth.make_queries(5, DS, 4, pad=32)
+    for q in range(4):
+        ids_s, sc_s = sharded.search(qi[q], qv[q], k=10, kprime=40)
+        ids_0, sc_0 = single.search(qi[q], qv[q], k=10, kprime=40)
+        np.testing.assert_array_equal(ids_s, ids_0)
+        np.testing.assert_array_equal(sc_s, sc_0)
+    assert sharded.slot_drift().max() == 0.0
