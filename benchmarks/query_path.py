@@ -1,0 +1,184 @@
+"""Query & update hot-path benchmarks (the ISSUE 4 perf tentpole).
+
+Two trajectories, both emitted as ``run.py`` rows (and BENCH_query_path.json
+via ``--json`` / ``python benchmarks/query_path.py --json PATH``):
+
+* ``query_path_backends`` — serving latency of each scoring backend
+  (``reference | grouped | pallas``) through the batched ``QueryServer``
+  path, swept over batch size and anytime budget, plus live device bytes
+  (``jax.live_arrays``) sampled after each backend's run.  Derived
+  ``speedup/...`` rows divide reference p50 by fused p50 — the acceptance
+  gate is >= 2x at batch >= 8.
+* ``query_path_inserts`` — write-side throughput of the vectorized
+  single-dispatch ``insert_batch`` vs the sequential ``lax.scan`` oracle at
+  batch 256 (same documents, same slots); gate is >= 5x.
+
+Engine config: m=64, h=2 sketch (two random mappings — the multi-mapping
+configuration the paper's §5 analysis favors for accuracy; it is also where
+one-sided decode matters most, since reference decode cost scales with
+2·h sides), n=4096, psi_doc=48, psi_query=24 gaussian-valued vectors.
+
+CPU timing note: the ``pallas`` backend times the fused tile program's XLA
+twin (identical math to the kernel, asserted bit-identical in tests);
+interpret-mode pallas_call timing would measure the Pallas *interpreter*,
+not the fused schedule.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+_DOCS = 8192
+_M, _H = 64, 2
+_K, _KPRIME = 10, 100
+_QUERIES = 32
+
+
+def _build(docs=_DOCS, capacity=None):
+    from repro.core.engine import EngineSpec, SinnamonIndex
+    from repro.data import synth
+
+    ds = synth.SparseDatasetSpec("query_path", n=4096, psi_doc=48,
+                                 psi_query=24, value_dist="gaussian")
+    idx, val = synth.make_corpus(0, ds, docs, pad=64)
+    qi, qv = synth.make_queries(1, ds, _QUERIES, pad=32)
+    spec = EngineSpec(n=ds.n, m=_M, capacity=capacity or docs, max_nnz=64,
+                      h=_H)
+    index = SinnamonIndex(spec)
+    for lo in range(0, docs, 1024):
+        index.insert_many(list(range(lo, min(lo + 1024, docs))),
+                          idx[lo:lo + 1024], val[lo:lo + 1024])
+    return index, idx, val, qi, qv
+
+
+def _live_mb():
+    import jax
+    return sum(a.nbytes for a in jax.live_arrays()) / 1e6
+
+
+def _bench_backends(docs, batches, budgets, reps):
+    from repro.serving.serve import QueryServer
+
+    index, _, _, qi, qv = _build(docs)
+    rows = []
+    p50 = {}
+    for backend in ("reference", "grouped", "pallas"):
+        server = QueryServer(index, k=_K, kprime=_KPRIME,
+                             score_backend=backend)
+        for budget in budgets:
+            server.budget = budget
+            tag = f"query_path/{backend}" + (
+                "" if budget is None else f"/budget{budget}")
+            for bs in batches:
+                server.query_many(qi[:bs], qv[:bs])       # compile warmup
+                server.stats["latency_ms"].clear()
+                for _ in range(reps):
+                    for lo in range(0, _QUERIES, bs):
+                        server.query_many(qi[lo:lo + bs], qv[lo:lo + bs])
+                lat = server.latency_percentiles()
+                p50[(backend, budget, bs)] = lat["p50"]
+                rows.append((f"{tag}/b{bs}/p50_ms", f"{lat['p50']:.3f}", ""))
+                rows.append((f"{tag}/b{bs}/p99_ms", f"{lat['p99']:.3f}", ""))
+        rows.append((f"query_path/{backend}/live_mb", f"{_live_mb():.1f}",
+                     "jax.live_arrays after serving"))
+    for budget in budgets:
+        btag = "" if budget is None else f"/budget{budget}"
+        for bs in batches:
+            if bs < 8:
+                continue
+            ratio = (p50[("reference", budget, bs)]
+                     / max(p50[("pallas", budget, bs)], 1e-9))
+            derived = "x (p50, gate >= 2)" if budget is None else "x (p50)"
+            rows.append((f"query_path/speedup{btag}/b{bs}"
+                         "_pallas_vs_reference",
+                         f"{ratio:.2f}", derived))
+    return rows
+
+
+def _bench_inserts(batch, reps):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import engine as eng
+
+    # Half-full index built through the functional API: docs 0..1023 occupy
+    # slots 0..1023, so the benchmarked batch lands on genuinely free slots
+    # (1024..1024+batch) exactly as the host allocator would hand them out.
+    from repro.data import synth
+
+    ds = synth.SparseDatasetSpec("query_path", n=4096, psi_doc=48,
+                                 psi_query=24, value_dist="gaussian")
+    idx, val = synth.make_corpus(0, ds, 1024 + batch, pad=64)
+    spec = eng.EngineSpec(n=ds.n, m=_M, capacity=2048, max_nnz=64, h=_H)
+    state = eng.insert_batch(
+        eng.init(spec), spec, jnp.arange(1024, dtype=jnp.int32),
+        jnp.asarray(eng.pack_ids64(np.arange(1024, dtype=np.int64))),
+        jnp.asarray(idx[:1024]), jnp.asarray(val[:1024]))
+    slots = jnp.arange(1024, 1024 + batch, dtype=jnp.int32)
+    rng = np.random.default_rng(3)
+    eids = jnp.asarray(eng.pack_ids64(
+        rng.integers(2**33, 2**40, batch).astype(np.int64)))
+    docs_i = jnp.asarray(np.asarray(idx[1024:1024 + batch]))
+    docs_v = jnp.asarray(np.asarray(val[1024:1024 + batch]))
+
+    vec = jax.jit(eng.insert_batch, static_argnums=(1,))
+    scan = jax.jit(eng.insert_batch_scan, static_argnums=(1,))
+    out = {}
+    for name, fn in (("vectorized", vec), ("scan", scan)):
+        jax.block_until_ready(fn(state, spec, slots, eids, docs_i, docs_v))
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(fn(state, spec, slots, eids, docs_i,
+                                     docs_v))
+        dt = (time.perf_counter() - t0) / reps
+        out[name] = batch / dt
+    rows = [(f"query_path/insert/b{batch}/{name}_tput", f"{tput:.0f}",
+             "docs/s") for name, tput in out.items()]
+    derived = "x (gate >= 5)" if batch >= 256 else "x"
+    rows.append((f"query_path/insert/b{batch}/speedup_vectorized_vs_scan",
+                 f"{out['vectorized'] / out['scan']:.2f}",
+                 derived))
+    return rows
+
+
+def query_path_backends():
+    """Backend x batch x budget latency sweep + live-bytes accounting."""
+    return _bench_backends(docs=_DOCS, batches=(1, 8, 32),
+                           budgets=(None, 8), reps=3)
+
+
+def query_path_inserts():
+    """Vectorized single-dispatch batch insert vs the lax.scan oracle."""
+    return _bench_inserts(batch=256, reps=5)
+
+
+def query_path_smoke():
+    """CI-sized subset: one budget, one batch size, small insert batch.
+
+    Rows are renamed under ``query_path_smoke/`` so a combined
+    ``run.py query_path --json`` run never overwrites the full-sweep rows
+    (run.py keys its JSON by row name).
+    """
+    rows = _bench_backends(docs=2048, batches=(8,), budgets=(None,), reps=2)
+    rows += _bench_inserts(batch=64, reps=2)
+    return [(name.replace("query_path/", "query_path_smoke/", 1), v, d)
+            for name, v, d in rows]
+
+
+ALL = [query_path_backends, query_path_inserts, query_path_smoke]
+
+
+if __name__ == "__main__":
+    # Standalone entry: `python benchmarks/query_path.py [--json PATH]`
+    # (same rows/JSON schema as benchmarks/run.py).
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks import run as _run
+
+    sys.argv = [sys.argv[0], "query_path"] + sys.argv[1:]
+    _run.main()

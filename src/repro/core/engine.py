@@ -9,7 +9,12 @@ State layout (one shard):
     bits     : uint32[n, C/32]    id-only inverted index (bit-packed)
     store    : VecStore[C, P]     raw vectors (exact rerank source)
     active   : bool[C]            slot occupancy
-    ids      : int64[C]           external document ids per slot
+    ids      : uint32[C, 2]       external int64 document ids per slot, packed
+                                  as (low, high) 32-bit words — jax runs with
+                                  x64 disabled, so a packed pair is how the
+                                  full 64-bit id range survives on device
+                                  (pack_ids64 / unpack_ids64 convert at the
+                                  host boundary; -1 = empty slot)
 
 Retrieval = Algorithm 6 (budgeted, coordinate-at-a-time upper-bound scoring)
           + Algorithm 7 (top-k' candidates → exact rerank → top-k).
@@ -85,8 +90,30 @@ class SinnamonState(NamedTuple):
     bits: Array
     store: vecstore.VecStore
     active: Array
-    ids: Array
+    ids: Array       # uint32[C, 2]: packed int64 external ids (lo, hi words)
     dirty: Array     # bool[C]: sketch column carries stale (deleted-doc) residue
+
+
+# -- 64-bit external ids on a 32-bit device -----------------------------------
+# jax_enable_x64 is off (flipping it would re-type every float in the repo),
+# so external ids — int64 on the host API — live on device as (lo, hi)
+# uint32 pairs.  Packing is lossless over the full int64 range; -1 (empty
+# slot) packs to (0xFFFFFFFF, 0xFFFFFFFF).
+
+def pack_ids64(ids) -> np.ndarray:
+    """int64[...] -> uint32[..., 2] (lo, hi) words."""
+    u = np.asarray(ids, np.int64).view(np.uint64)
+    return np.stack([u & np.uint64(0xFFFFFFFF), u >> np.uint64(32)],
+                    axis=-1).astype(np.uint32)
+
+
+def unpack_ids64(packed) -> np.ndarray:
+    """uint32[..., 2] (lo, hi) words -> int64[...]."""
+    p = np.asarray(packed, np.uint32).astype(np.uint64)
+    return (p[..., 0] | (p[..., 1] << np.uint64(32))).view(np.int64)
+
+
+_EMPTY_ID = np.uint32(0xFFFFFFFF)    # both words of a packed -1
 
 
 # ---------------------------------------------------------------------------
@@ -105,7 +132,7 @@ def init(spec: EngineSpec) -> SinnamonState:
         store=vecstore.empty(spec.capacity, spec.max_nnz,
                              dtype=jnp.dtype(spec.value_dtype)),
         active=jnp.zeros((spec.capacity,), jnp.bool_),
-        ids=jnp.full((spec.capacity,), -1, jnp.int32),
+        ids=jnp.full((spec.capacity, 2), _EMPTY_ID, jnp.uint32),
         dirty=jnp.zeros((spec.capacity,), jnp.bool_),
     )
 
@@ -113,6 +140,9 @@ def init(spec: EngineSpec) -> SinnamonState:
 def insert(state: SinnamonState, spec: EngineSpec, slot, ext_id,
            idx: Array, val: Array) -> SinnamonState:
     """Algorithm 5: index one document at ``slot``.
+
+    ``ext_id`` is the packed uint32[2] form of the external int64 id
+    (see :func:`pack_ids64`).
 
     A clean slot gets the document's exact sketch column.  A *dirty* slot
     (recycled after a §4.3 deletion) is MERGED into — max for u, min for l —
@@ -143,9 +173,135 @@ def insert(state: SinnamonState, spec: EngineSpec, slot, ext_id,
     )
 
 
+# -- vectorized batch mutations ----------------------------------------------
+# The host allocator guarantees every batch touches UNIQUE slots (free-list
+# pops for inserts; deduped id->slot lookups for deletes), which makes whole
+# batches expressible as single-dispatch scatters instead of a lax.scan of
+# per-document whole-state updates:
+#
+# * sketch columns: one encode_batch + one dirty-aware merged column scatter;
+# * membership bits: one scatter-ADD (insert) / scatter-SUBTRACT (delete) of
+#   per-coordinate word masks.  Distinct slots in one batch touch distinct
+#   bits even when they share a word, and within one document duplicate
+#   bitmap rows (index_buckets collisions) are routed out-of-bounds after the
+#   first occurrence, so every (row, word, bit) is touched at most once and
+#   add == bitwise-OR / subtract == bit-clear.  This leans on the engine
+#   invariant that a free slot's bit column is all-zero (delete clears
+#   exactly the rows its stored document set) — the same invariant the
+#   sequential path needs for its OR to mean "insert".
+# * VecStore / active / ids: one batched row scatter each.
+#
+# Masked-off entries are routed out-of-bounds and dropped, so the masked
+# variants stay exact no-ops per entry (the shard_map-body contract).  The
+# lax.scan forms survive as *_scan reference oracles (tests assert tree
+# equality between the two on randomized streams).
+
+
+def _dedup_first(rows: Array) -> Array:
+    """bool[..., P]: True at the FIRST occurrence of each row within a doc."""
+    eq = rows[..., :, None] == rows[..., None, :]          # [..., P, P]
+    earlier = jnp.tril(jnp.ones((rows.shape[-1],) * 2, jnp.bool_), -1)
+    return ~jnp.any(eq & earlier, axis=-1)
+
+
+def _bit_scatter_operands(state, spec, slots, idx, mask):
+    """(rows, words, bitmasks) for one batched membership-bit scatter.
+
+    Invalid coordinates, duplicate in-document rows and masked-off documents
+    are routed to the out-of-bounds row (dropped by the scatter).
+    """
+    rows = coord_rows(spec, idx)                           # [B, P]
+    keep = (idx >= 0) & mask[:, None] & _dedup_first(rows)
+    oob = jnp.int32(state.bits.shape[0])
+    safe_rows = jnp.where(keep, rows, oob)
+    words = jnp.broadcast_to((slots // bitindex.WORD)[:, None], rows.shape)
+    bitm = (jnp.uint32(1) << (slots % bitindex.WORD).astype(jnp.uint32))
+    bitm = jnp.broadcast_to(bitm[:, None], rows.shape)
+    return safe_rows, words, bitm
+
+
+def insert_batch_masked(state: SinnamonState, spec: EngineSpec, slots: Array,
+                        ext_ids: Array, idx: Array, val: Array,
+                        mask: Array) -> SinnamonState:
+    """Vectorized batch insert; ``mask=False`` entries are exact no-ops.
+
+    One device dispatch for the whole batch (see the module comment above for
+    the uniqueness/invariant preconditions).  ``ext_ids``: packed uint32[B, 2]
+    external ids.  This is also the shard_map-body form: each shard receives
+    a host-routed, padded slice of the update batch and applies only its own
+    entries, so a sharded insert needs no collectives
+    (see repro.serving.sharded).
+    """
+    u_cols, l_cols = sketch.encode_batch(state.mappings, spec.m, idx, val,
+                                         dtype=spec.dtype,
+                                         positive_only=spec.positive_only)
+    cap = state.active.shape[0]
+    safe_slots = jnp.where(mask, slots, cap)               # OOB -> dropped
+
+    was_dirty = state.dirty[slots]                         # [B]
+    u_new = u_cols.T.astype(state.u.dtype)                 # [m, B]
+    u_new = jnp.where(was_dirty[None, :],
+                      jnp.maximum(state.u[:, slots], u_new), u_new)
+    u = state.u.at[:, safe_slots].set(u_new, mode="drop")
+    if state.l is None:
+        l = None
+    else:
+        l_new = l_cols.T.astype(state.l.dtype)
+        l_new = jnp.where(was_dirty[None, :],
+                          jnp.minimum(state.l[:, slots], l_new), l_new)
+        l = state.l.at[:, safe_slots].set(l_new, mode="drop")
+
+    rows, words, bitm = _bit_scatter_operands(state, spec, slots, idx, mask)
+    bits = state.bits.at[rows, words].add(bitm, mode="drop")
+
+    store = vecstore.VecStore(
+        indices=state.store.indices.at[safe_slots].set(idx, mode="drop"),
+        values=state.store.values.at[safe_slots].set(
+            val.astype(state.store.values.dtype), mode="drop"))
+    return state._replace(
+        u=u, l=l, bits=bits, store=store,
+        active=state.active.at[safe_slots].set(True, mode="drop"),
+        ids=state.ids.at[safe_slots].set(ext_ids, mode="drop"),
+    )
+
+
 def insert_batch(state: SinnamonState, spec: EngineSpec, slots: Array,
                  ext_ids: Array, idx: Array, val: Array) -> SinnamonState:
-    """Sequential-semantics batch insert (scan; one jit dispatch per batch)."""
+    """Vectorized batch insert over unique slots (one jit dispatch)."""
+    return insert_batch_masked(state, spec, slots, ext_ids, idx, val,
+                               jnp.ones(slots.shape, jnp.bool_))
+
+
+def delete_batch_masked(state: SinnamonState, spec: EngineSpec, slots: Array,
+                        mask: Array) -> SinnamonState:
+    """Vectorized masked batch delete; the shard_map-body twin of delete.
+
+    Bit-clearing is a scatter-SUBTRACT of the same per-coordinate word masks
+    the insert scatter added: each targeted bit is guaranteed set (the slot's
+    stored document set exactly these rows), so subtraction borrows nothing.
+    """
+    idx = state.store.indices[slots]                       # [B, P]
+    rows, words, bitm = _bit_scatter_operands(state, spec, slots, idx, mask)
+    bits = state.bits.at[rows, words].add(jnp.uint32(0) - bitm, mode="drop")
+
+    cap = state.active.shape[0]
+    safe_slots = jnp.where(mask, slots, cap)
+    store = vecstore.VecStore(
+        indices=state.store.indices.at[safe_slots].set(-1, mode="drop"),
+        values=state.store.values.at[safe_slots].set(0, mode="drop"))
+    return state._replace(
+        bits=bits, store=store,
+        active=state.active.at[safe_slots].set(False, mode="drop"),
+        ids=state.ids.at[safe_slots].set(jnp.uint32(0xFFFFFFFF), mode="drop"),
+        dirty=state.dirty.at[safe_slots].set(True, mode="drop"),
+    )
+
+
+# -- sequential reference oracles (tests only) --------------------------------
+
+def insert_batch_scan(state: SinnamonState, spec: EngineSpec, slots: Array,
+                      ext_ids: Array, idx: Array, val: Array) -> SinnamonState:
+    """Sequential-semantics batch insert (scan); the vectorized oracle."""
 
     def body(st, args):
         slot, eid, i, v = args
@@ -155,15 +311,10 @@ def insert_batch(state: SinnamonState, spec: EngineSpec, slots: Array,
     return state
 
 
-def insert_batch_masked(state: SinnamonState, spec: EngineSpec, slots: Array,
-                        ext_ids: Array, idx: Array, val: Array,
-                        mask: Array) -> SinnamonState:
-    """:func:`insert_batch` where ``mask=False`` entries are exact no-ops.
-
-    This is the shard_map-body form: each shard receives a host-routed,
-    padded slice of the update batch and applies only its own entries, so a
-    sharded insert needs no collectives (see repro.serving.sharded).
-    """
+def insert_batch_masked_scan(state: SinnamonState, spec: EngineSpec,
+                             slots: Array, ext_ids: Array, idx: Array,
+                             val: Array, mask: Array) -> SinnamonState:
+    """Scan twin of :func:`insert_batch_masked` (reference oracle)."""
 
     def body(st, args):
         slot, eid, i, v, ok = args
@@ -175,9 +326,9 @@ def insert_batch_masked(state: SinnamonState, spec: EngineSpec, slots: Array,
     return state
 
 
-def delete_batch_masked(state: SinnamonState, spec: EngineSpec, slots: Array,
-                        mask: Array) -> SinnamonState:
-    """Masked batch delete (scan); the shard_map-body twin of delete."""
+def delete_batch_masked_scan(state: SinnamonState, spec: EngineSpec,
+                             slots: Array, mask: Array) -> SinnamonState:
+    """Scan twin of :func:`delete_batch_masked` (reference oracle)."""
 
     def body(st, args):
         slot, ok = args
@@ -202,7 +353,7 @@ def delete(state: SinnamonState, spec: EngineSpec, slot) -> SinnamonState:
     return state._replace(
         bits=bits, store=store,
         active=state.active.at[slot].set(False),
-        ids=state.ids.at[slot].set(-1),
+        ids=state.ids.at[slot].set(jnp.uint32(0xFFFFFFFF)),
         dirty=state.dirty.at[slot].set(True),
     )
 
@@ -351,24 +502,54 @@ def score_batch(state, spec, q_idx, q_val, budget=None, grouped=False
     return jax.vmap(lambda i, v: fn(state, spec, i, v, budget))(q_idx, q_val)
 
 
+def topk_candidates(state: SinnamonState, spec: EngineSpec, q_idx: Array,
+                    q_val: Array, kprime: int, budget: Optional[int] = None,
+                    filter_mask: Optional[Array] = None, score_fn=None,
+                    backend: Optional[str] = None):
+    """Batched candidate generation: the Algorithm 6 front half of search.
+
+    q_idx/q_val: [B, Lq].  Returns (upper_bounds f32[B, kprime],
+    slots int32[B, kprime]) ordered by (upper bound desc, slot asc) — every
+    backend produces this order bit-identically, which is what lets the
+    fused Pallas path be the drop-in production default.
+
+    backend: ``reference | grouped | pallas`` (None -> the process default,
+    see repro.kernels.ops.resolve_backend).  ``score_fn`` overrides the
+    backend with a custom per-query dense scorer (legacy hook).
+    """
+    from repro.kernels import ops as _ops   # deferred: kernels import engine
+
+    ok = state.active if filter_mask is None else (state.active & filter_mask)
+    backend = _ops.resolve_backend(backend)
+    if score_fn is None and backend == "pallas":
+        return _ops.sinnamon_topk_batch(state, spec, q_idx, q_val, kprime,
+                                        budget=budget, ok=ok)
+    fn = score_fn if score_fn is not None else (
+        score_grouped if backend == "grouped" else score)
+    s = jax.vmap(lambda i, v: fn(state, spec, i, v, budget))(q_idx, q_val)
+    s = jnp.where(ok[None, :], s, -jnp.inf)
+    vals, slots = jax.lax.top_k(s, kprime)
+    return vals, slots.astype(jnp.int32)
+
+
 def search(state: SinnamonState, spec: EngineSpec, q_idx: Array, q_val: Array,
            k: int, kprime: int, budget: Optional[int] = None,
            filter_mask: Optional[Array] = None,
-           score_fn=None):
-    """Algorithms 6+7: scoring → top-k' → exact rerank → top-k.
+           score_fn=None, backend: Optional[str] = None):
+    """Algorithms 6+7: candidate generation → sparse exact rerank → top-k.
 
     filter_mask: optional bool[C] for constrained search (paper §4.2.4, Eq. 3).
-    score_fn: override the scoring backend (e.g. the Pallas kernel wrapper).
-    Returns (ids int64[k], exact_scores f32[k], slots int32[k]).
+    score_fn: override the scoring backend with a custom dense scorer.
+    backend: ``reference | grouped | pallas`` candidate backend (see
+    :func:`topk_candidates`).  The rerank gathers only the k' candidate CSR
+    rows (no dense R^n query), identical across backends.
+    Returns (packed ids uint32[k, 2], exact_scores f32[k], slots int32[k]).
     """
-    sfn = score_fn if score_fn is not None else score
-    s = sfn(state, spec, q_idx, q_val, budget)
-    ok = state.active if filter_mask is None else (state.active & filter_mask)
-    s = jnp.where(ok, s, -jnp.inf)
-    cand_scores, cand_slots = jax.lax.top_k(s, kprime)
-
-    q_dense = vecstore.densify_query(spec.n, q_idx, q_val)
-    exact = vecstore.exact_scores(state.store, cand_slots, q_dense)
+    cand_scores, cand_slots = topk_candidates(
+        state, spec, q_idx[None], q_val[None], kprime, budget, filter_mask,
+        score_fn=score_fn, backend=backend)
+    cand_scores, cand_slots = cand_scores[0], cand_slots[0]
+    exact = vecstore.exact_scores_sparse(state.store, cand_slots, q_idx, q_val)
     exact = jnp.where(jnp.isneginf(cand_scores), -jnp.inf, exact)
     top_scores, pos = jax.lax.top_k(exact, k)
     slots = cand_slots[pos]
@@ -376,10 +557,23 @@ def search(state: SinnamonState, spec: EngineSpec, q_idx: Array, q_val: Array,
 
 
 def search_batch(state, spec, q_idx, q_val, k, kprime, budget=None,
-                 filter_mask=None, score_fn=None):
-    fn = lambda i, v: search(state, spec, i, v, k, kprime, budget,
-                             filter_mask, score_fn)
-    return jax.vmap(fn)(q_idx, q_val)
+                 filter_mask=None, score_fn=None,
+                 backend: Optional[str] = None):
+    """Batched search [B, Lq] -> ([B, k] ids/scores/slots), ONE dispatch.
+
+    Candidate generation is batch-native (the fused kernel's grid covers the
+    whole batch); only the k'-row sparse rerank is vmapped.
+    """
+    cand_scores, cand_slots = topk_candidates(
+        state, spec, q_idx, q_val, kprime, budget, filter_mask,
+        score_fn=score_fn, backend=backend)
+    exact = jax.vmap(
+        lambda s_, i, v: vecstore.exact_scores_sparse(state.store, s_, i, v)
+    )(cand_slots, q_idx, q_val)
+    exact = jnp.where(jnp.isneginf(cand_scores), -jnp.inf, exact)
+    top_scores, pos = jax.lax.top_k(exact, k)
+    slots = jnp.take_along_axis(cand_slots, pos, axis=-1)
+    return state.ids[slots], top_scores, slots
 
 
 # ---------------------------------------------------------------------------
@@ -399,22 +593,24 @@ class SinnamonIndex:
         self._delete = jax.jit(delete, static_argnums=(1,))
         self._search = jax.jit(
             search, static_argnums=(1, 4, 5, 6),
-            static_argnames=("score_fn",))
+            static_argnames=("score_fn", "backend"))
         self._search_many = jax.jit(
             search_batch, static_argnums=(1, 4, 5, 6),
-            static_argnames=("score_fn",))
+            static_argnames=("score_fn", "backend"))
         self._compact = jax.jit(compact_state, static_argnums=(1,))
         self._slot_drift = jax.jit(slot_drift, static_argnums=(1,))
 
     # -- streaming updates ---------------------------------------------------
     def insert(self, ext_id: int, idx, val) -> None:
+        ext_id = int(ext_id)
         if ext_id in self._id2slot:
             self.delete(ext_id)
         if not self._free:
             self.grow(self.spec.capacity * 2)
         slot = self._free.pop()
         idx, val = pad_sparse(idx, val, self.spec.max_nnz)
-        self.state = self._insert(self.state, self.spec, slot, ext_id, idx, val)
+        self.state = self._insert(self.state, self.spec, slot,
+                                  jnp.asarray(pack_ids64(ext_id)), idx, val)
         self._id2slot[ext_id] = slot
 
     def insert_many(self, ext_ids, idx_batch, val_batch) -> None:
@@ -436,7 +632,7 @@ class SinnamonIndex:
         slots = np.array([self._free.pop() for _ in range(bn)], np.int32)
         self.state = self._insert_batch(
             self.state, self.spec, jnp.asarray(slots),
-            jnp.asarray(np.asarray(ext_ids, np.int32)),
+            jnp.asarray(pack_ids64(ext_ids)),
             jnp.asarray(idx_batch), jnp.asarray(val_batch))
         for eid, slot in zip(ext_ids, slots):
             self._id2slot[int(eid)] = int(slot)
@@ -448,26 +644,36 @@ class SinnamonIndex:
 
     # -- retrieval -------------------------------------------------------------
     def search(self, q_idx, q_val, k: int, kprime: Optional[int] = None,
-               budget: Optional[int] = None, filter_mask=None, score_fn=None):
+               budget: Optional[int] = None, filter_mask=None, score_fn=None,
+               backend: Optional[str] = None):
         kprime = kprime if kprime is not None else max(5 * k, k)
         kprime = min(kprime, self.spec.capacity)
         k = min(k, kprime)
         ids, scores, _ = self._search(
             self.state, self.spec, jnp.asarray(q_idx), jnp.asarray(q_val),
-            k, kprime, budget, filter_mask, score_fn=score_fn)
-        return np.asarray(ids), np.asarray(scores)
+            k, kprime, budget, filter_mask, score_fn=score_fn,
+            backend=self._backend(backend))
+        return unpack_ids64(np.asarray(ids)), np.asarray(scores)
 
     def search_many(self, q_idx, q_val, k: int, kprime: Optional[int] = None,
                     budget: Optional[int] = None, filter_mask=None,
-                    score_fn=None):
+                    score_fn=None, backend: Optional[str] = None):
         """Batched search: q_idx/q_val are [B, Lq]; one jit dispatch total."""
         kprime = kprime if kprime is not None else max(5 * k, k)
         kprime = min(kprime, self.spec.capacity)
         k = min(k, kprime)
         ids, scores, _ = self._search_many(
             self.state, self.spec, jnp.asarray(q_idx), jnp.asarray(q_val),
-            k, kprime, budget, filter_mask, score_fn=score_fn)
-        return np.asarray(ids), np.asarray(scores)
+            k, kprime, budget, filter_mask, score_fn=score_fn,
+            backend=self._backend(backend))
+        return unpack_ids64(np.asarray(ids)), np.asarray(scores)
+
+    @staticmethod
+    def _backend(backend) -> str:
+        """Resolve the backend OUTSIDE jit so the env default binds at call
+        time (not at trace time) and jit caches key on the concrete choice."""
+        from repro.kernels import ops as _ops
+        return _ops.resolve_backend(backend)
 
     # -- capacity management ----------------------------------------------------
     def grow(self, new_capacity: int) -> None:

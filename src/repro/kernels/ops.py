@@ -1,14 +1,35 @@
-"""jit'd public wrappers around the Pallas kernels.
+"""jit'd public wrappers around the Pallas kernels + the scoring-backend
+dispatch point.
 
 Handles operand preparation (query sorting/budgeting, membership-row
-gathering, tile padding) and backend selection: compiled Pallas on TPU,
-interpret mode elsewhere (this container is CPU-only; interpret mode executes
-the kernel body in Python and is the mandated validation path).
+gathering, tile padding) and implementation selection: compiled Pallas on
+TPU; elsewhere the dense kernels run in interpret mode (the mandated
+validation path) while the fused serving path runs its XLA twin — the same
+tile program without the per-grid-step interpreter overhead (interpret-mode
+execution of the fused kernel remains available via ``use_kernel=True`` and
+is what the equivalence tests exercise).
+
+Scoring-backend dispatch
+------------------------
+Every query hot path (``engine.search``/``search_batch``, both serving
+layers, the launcher) routes candidate generation through ONE selector:
+
+* ``pallas``    — the fused tiled kernel (``sinnamon_score_topk`` + log-tree
+  merge): never materializes the ``[B, C]`` score matrix.  The production
+  default.
+* ``grouped``   — ``engine.score_grouped`` (one fused [L, C] pass) + dense
+  ``lax.top_k``.
+* ``reference`` — paper-faithful coordinate-at-a-time ``engine.score`` +
+  dense ``lax.top_k``; the correctness oracle.
+
+Select per call (``backend=...``), per server (``--score-backend``), or
+process-wide via the ``REPRO_SCORE_BACKEND`` environment variable.
 """
 
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional
 
 import jax
@@ -17,6 +38,20 @@ import jax.numpy as jnp
 from repro.kernels import csr_score as _csr
 from repro.kernels import embed_bag as _bag
 from repro.kernels import sinnamon_score as _sinn
+
+SCORE_BACKENDS = ("reference", "grouped", "pallas")
+SCORE_BACKEND_ENV = "REPRO_SCORE_BACKEND"
+DEFAULT_SCORE_BACKEND = "pallas"
+
+
+def resolve_backend(backend: Optional[str] = None) -> str:
+    """Validate an explicit backend choice or fall back to the env default."""
+    if backend is None:
+        backend = os.environ.get(SCORE_BACKEND_ENV, DEFAULT_SCORE_BACKEND)
+    if backend not in SCORE_BACKENDS:
+        raise ValueError(f"unknown score backend {backend!r}; "
+                         f"expected one of {SCORE_BACKENDS}")
+    return backend
 
 
 def on_tpu() -> bool:
@@ -74,6 +109,71 @@ def sinnamon_score_batch(state, qv, rows, qbits, *, tile_c=None,
     out = _sinn.sinnamon_score(qv, rows, qbits_p, u, l,
                                tile_c=tile_c, interpret=interpret)
     return out[:, :C]
+
+
+def prepare_fused_operands(state, q_idx, q_val, budget=None, spec=None):
+    """Query + state -> (qv, pos, rows, qbits, skmat, one_sided) for the
+    fused kernel / XLA twin.
+
+    On top of :func:`prepare_query_operands`: splits coordinate signs, stacks
+    ``[U; L]`` into one gather matrix and pre-offsets negative coordinates'
+    sketch rows by +m, so the fused path reads each sketch cell ONE-SIDED —
+    half the decode work of the reference scorer.
+    """
+    qv, rows, qbits = prepare_query_operands(state, q_idx, q_val, budget,
+                                             spec=spec)
+    pos = qv > 0
+    if state.l is None:
+        return qv, pos, rows, qbits, state.u, False
+    m = state.u.shape[0]
+    skmat = jnp.concatenate([state.u, state.l], axis=0)       # [2m, C]
+    rows = jnp.where(pos[..., None], rows, rows + m)
+    return qv, pos, rows, qbits, skmat, True
+
+
+def sinnamon_topk_batch(state, spec, q_idx, q_val, kprime, *, budget=None,
+                        ok=None, tile_c=None, query_block=2,
+                        use_kernel=None, interpret=None):
+    """Fused candidate generation: (vals f32[B, kprime], slots int32[B, kprime]).
+
+    The full search front half in one pipeline: prepare sign-split operands,
+    pad the slot axis to a tile multiple (padded slots are gated to -inf so
+    they can never become candidates — works at any post-``grow()``
+    capacity), run the fused score→top-kp tile program, log-tree merge.
+
+    Implementation selection: the Pallas kernel where it compiles (TPU), the
+    XLA twin of the same tile program elsewhere (CPU serving); pass
+    ``use_kernel=True`` to force the kernel (interpret-mode validation).
+
+    ``ok``: optional bool[C] keep-mask (active & filter); ordering of the
+    result is (upper-bound desc, slot asc) — lax.top_k order over the gated
+    fused scores.
+    """
+    C = state.u.shape[1]
+    if kprime > C:
+        raise ValueError(f"kprime={kprime} > capacity {C}")
+    use_kernel = on_tpu() if use_kernel is None else use_kernel
+    if tile_c is None:
+        full = _sinn.DEFAULT_TILE_C if use_kernel else _sinn.DEFAULT_TILE_C_XLA
+        tile_c = min(full, ((C + 255) // 256) * 256)   # whole (padded) C if small
+    qv, pos, rows, qbits, skmat, one_sided = prepare_fused_operands(
+        state, q_idx, q_val, budget, spec=spec)
+    skmat = pad_axis(skmat, 1, tile_c)
+    qbits_p = pad_axis(qbits, -1, tile_c // 32)
+    keep = jnp.ones((C,), jnp.bool_) if ok is None else ok
+    gate = jnp.where(keep, 0.0, -jnp.inf).astype(jnp.float32)[None]
+    gate = pad_axis(gate, -1, tile_c, fill=-jnp.inf)
+    kp = min(kprime, tile_c)
+    if use_kernel:
+        interpret = _interpret() if interpret is None else interpret
+        vals, slots = _sinn.sinnamon_score_topk(
+            qv, pos, rows, qbits_p, gate, skmat, kp=kp, tile_c=tile_c,
+            one_sided=one_sided, interpret=interpret)
+    else:
+        vals, slots = _sinn.fused_topk_xla(
+            qv, pos, rows, qbits_p, gate, skmat, kp=kp, tile_c=tile_c,
+            one_sided=one_sided, query_block=query_block)
+    return _sinn.merge_tile_topk(vals, slots, kprime)
 
 
 def make_engine_score_fn(tile_c=None, interpret=None):

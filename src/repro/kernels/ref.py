@@ -44,6 +44,43 @@ def sinnamon_score_ref(
     return jax.vmap(one_query)(qv, rows, qbits)
 
 
+def sinnamon_topk_ref(
+    qv: jax.Array,        # f32[B, L]
+    rows: jax.Array,      # int32[B, L, h]  (UN-offset: always indexes [0, m))
+    qbits: jax.Array,     # uint32[B, L, W]
+    gate: jax.Array,      # f32[1, C]: 0 keep / -inf excluded
+    u: jax.Array,         # [m, C]
+    l: Optional[jax.Array],
+    kprime: int,
+):
+    """Dense oracle for the fused path: score, gate, global lax.top_k.
+
+    Independent formulation: decodes BOTH sketch sides per coordinate and
+    where-selects by query sign (the fused path gathers one-sided — the two
+    are elementwise identical), sums all coordinate contributions in one
+    dense [B, L, C] pass, then takes a global top-k.  Returns
+    (vals f32[B, kprime], slots int32[B, kprime]) in lax.top_k order
+    (score desc, ties by slot asc) — the contract sinnamon_score_topk +
+    merge_tile_topk (and the XLA twin) must reproduce bit-for-bit.
+    """
+    B, Lq = qv.shape
+    C = u.shape[1]
+    uf = u.astype(jnp.float32)
+    ub = jnp.min(uf[rows], axis=-2)                         # [B, L, C]
+    if l is None:
+        lb = jnp.zeros_like(ub)
+    else:
+        lb = jnp.max(l.astype(jnp.float32)[rows], axis=-2)
+    contrib = jnp.where(qv[..., None] > 0, qv[..., None] * ub,
+                        qv[..., None] * lb)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    mask = ((qbits[..., :, None] >> shifts) & 1).reshape(B, Lq, C) != 0
+    s = jnp.sum(jnp.where(mask, contrib, 0.0), axis=1)      # [B, C]
+    s = jnp.where(gate == 0.0, s, -jnp.inf)
+    vals, slots = jax.lax.top_k(s, kprime)
+    return vals, slots.astype(jnp.int32)
+
+
 def csr_score_ref(
     q_dense: jax.Array,   # f32[n]
     indices: jax.Array,   # int32[C, P], pad = -1

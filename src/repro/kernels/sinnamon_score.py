@@ -17,6 +17,36 @@ Block shapes: sketches ``(m, TC)``, membership ``(1, L, TW)``, scores
 ``(1, TC)`` with ``TC`` a multiple of 128 lanes (f32 tile 8×128; the m axis is
 the sublane axis).  VMEM footprint ≈ 2·m·TC·2B + L·TC/8 + TC·4B — e.g.
 m=128, TC=2048, L=64: 1.1 MiB, comfortably inside the ~16 MiB VMEM budget.
+
+Two entry points share the schedule:
+
+* :func:`sinnamon_score` — the original dense variant, returns ``f32[B, C]``.
+* :func:`sinnamon_score_topk` — the FUSED serving variant: each grid tile
+  reduces its ``TC`` upper-bound scores to a ``kp``-candidate buffer
+  (scores + global slot ids) **in-kernel**, so the full ``[B, C]`` score
+  matrix never exists.  Tile buffers are then combined by
+  :func:`merge_tile_topk`, a log-tree merge that sorts on the explicit key
+  (score desc, slot asc) — the exact tie order of ``lax.top_k`` over a
+  dense score vector.
+
+The fused variant also changes the decode schedule (the perf tentpole):
+
+* ONE-SIDED gathers: Algorithm 6 needs ``u``-cells only where ``q[j] > 0``
+  and ``l``-cells only where ``q[j] < 0``, so the wrapper concatenates
+  ``[U; L]`` into one ``[2m, C]`` matrix and pre-offsets each coordinate's
+  sketch rows by the query sign — HALF the gather + reduce work of the
+  reference decode, which always reads both sides.
+* VECTORIZED coordinates: all budgeted coordinates form one ``[L, TC]``
+  contribution block reduced in a single pass, instead of ψ_q sequential
+  read-modify-write sweeps of the accumulator.  (Summation association
+  differs from the sequential reference in the last ulp; candidate slots —
+  and therefore the exact-reranked ids — are asserted identical in tests.)
+
+:func:`fused_topk_xla` is the same tile program expressed as a lax.scan for
+backends without a compiled Pallas lowering (CPU serving): identical math,
+identical tile shapes, no per-grid-step interpreter overhead.  Interpret-mode
+``pallas_call`` remains the kernel-validation path (tests assert kernel ==
+twin == dense oracle on the same operands).
 """
 
 from __future__ import annotations
@@ -29,10 +59,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 DEFAULT_TILE_C = 2048
+# CPU/XLA-twin tile: big tiles amortize per-tile top_k and scan overhead on
+# CPU (no VMEM ceiling); the TPU kernel keeps the VMEM-sized DEFAULT_TILE_C.
+DEFAULT_TILE_C_XLA = 8192
+_SLOT_SENTINEL = jnp.iinfo(jnp.int32).max
 
 
-def _kernel(qv_ref, rows_ref, qbits_ref, u_ref, l_ref, out_ref, *,
-            budget: int, h: int, tile_c: int):
+def _accumulate(qv_ref, rows_ref, qbits_ref, u_ref, l_ref, *,
+                budget: int, h: int, tile_c: int):
+    """Shared Algorithm 6 inner loop: upper-bound scores f32[TC] of one tile.
+
+    Accumulates coordinate contributions SEQUENTIALLY (fori_loop) in the
+    sorted-|q[j]| order, i.e. the exact same f32 add sequence per slot as the
+    reference ``engine.score`` loop — the scores (and therefore any top-k cut
+    over them) come out bit-identical to the reference backend.
+    """
     U = u_ref[...].astype(jnp.float32)                    # [m, TC]
     L = None if l_ref is None else l_ref[...].astype(jnp.float32)
     qv = qv_ref[0]                                        # [Lq]
@@ -59,9 +100,69 @@ def _kernel(qv_ref, rows_ref, qbits_ref, u_ref, l_ref, out_ref, *,
         mask = ((w[:, None] >> shifts) & 1).reshape(tile_c) != 0
         return acc + jnp.where(mask, contrib, 0.0)
 
-    acc = jax.lax.fori_loop(0, budget, body,
-                            jnp.zeros((tile_c,), jnp.float32))
-    out_ref[0, :] = acc
+    return jax.lax.fori_loop(0, budget, body,
+                             jnp.zeros((tile_c,), jnp.float32))
+
+
+def _kernel(qv_ref, rows_ref, qbits_ref, u_ref, l_ref, out_ref, *,
+            budget: int, h: int, tile_c: int):
+    out_ref[0, :] = _accumulate(qv_ref, rows_ref, qbits_ref, u_ref, l_ref,
+                                budget=budget, h=h, tile_c=tile_c)
+
+
+def _fused_tile_scores(qv, pos, rows, words, gate, skmat, *, h: int,
+                       one_sided: bool, tile_c: int):
+    """Gated upper-bound scores of one tile block — the SHARED fused math.
+
+    Both the Pallas kernel body and the XLA twin call exactly this function
+    on identically-shaped operands, so the two lower to the same per-slot
+    float program (tests assert bitwise equality).
+
+    qv/pos:  f32/bool[..., L]    query values and their signs
+    rows:    int32[..., L, h]    sketch rows, PRE-OFFSET by +m for negative
+                                 coordinates when one_sided (see the wrapper)
+    words:   uint32[..., L, TW]  membership words of this tile
+    gate:    f32[TC]             0 keep / -inf excluded
+    skmat:   f32-castable[R, TC] [U; L] rows of this tile (R = 2m, or m when
+                                 the engine runs positive-only)
+    """
+    sk = skmat.astype(jnp.float32)
+    x = sk[rows[..., 0]]                                   # [..., L, TC]
+    for o in range(1, h):
+        y = sk[rows[..., o]]
+        if one_sided:
+            # positive coords decode U (least upper bound -> min); negative
+            # coords decode L (greatest lower bound -> max).
+            x = jnp.where(pos[..., None], jnp.minimum(x, y),
+                          jnp.maximum(x, y))
+        else:
+            x = jnp.minimum(x, y)
+    if not one_sided:
+        # positive-only engine: l == 0 exactly, so q<0 contributes q*0.
+        x = jnp.where(pos[..., None], x, 0.0)
+    contrib = qv[..., None] * x
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    mask = ((words[..., :, None] >> shifts) & 1).reshape(
+        *words.shape[:-1], tile_c) != 0
+    s = jnp.sum(jnp.where(mask, contrib, 0.0), axis=-2)    # [..., TC]
+    return jnp.where(gate == 0.0, s, -jnp.inf)
+
+
+def _topk_kernel(qv_ref, pos_ref, rows_ref, qbits_ref, gate_ref, sk_ref,
+                 val_ref, slot_ref, *, h: int, tile_c: int, kp: int,
+                 one_sided: bool):
+    """Fused tile: score, gate (active/filter/pad -> -inf), reduce to top-kp.
+
+    In-tile selection is ``lax.top_k``, whose tie order (lower index first)
+    is (score desc, slot asc) — the same key the tree merge sorts on.
+    """
+    s = _fused_tile_scores(qv_ref[0], pos_ref[0], rows_ref[0], qbits_ref[0],
+                           gate_ref[0], sk_ref[...], h=h,
+                           one_sided=one_sided, tile_c=tile_c)
+    v, i = jax.lax.top_k(s, kp)
+    base = pl.program_id(1) * tile_c
+    val_ref[0, 0, :] = v
+    slot_ref[0, 0, :] = (base + i).astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("tile_c", "interpret"))
@@ -109,3 +210,163 @@ def sinnamon_score(
         out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
         interpret=interpret,
     )(*args)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kp", "tile_c", "one_sided", "interpret"))
+def sinnamon_score_topk(
+    qv: jax.Array,               # f32[B, L]
+    pos: jax.Array,              # bool[B, L]   q[j] > 0
+    rows: jax.Array,             # int32[B, L, h]  (pre-offset when one_sided)
+    qbits: jax.Array,            # uint32[B, L, W]  (W = C/32)
+    gate: jax.Array,             # f32[1, C]: 0 keep / -inf excluded (or pad)
+    skmat: jax.Array,            # [R, C]  [U; L] stacked (R = 2m, or m)
+    *,
+    kp: int,
+    tile_c: int = DEFAULT_TILE_C,
+    one_sided: bool = True,
+    interpret: bool = True,
+) -> tuple:
+    """Fused scoring + per-tile top-kp.  Returns (vals f32[B, T, kp],
+    slots int32[B, T, kp]) with T = C / tile_c; feed to merge_tile_topk.
+
+    Operand preparation (sign split, row offsetting, [U; L] stacking, tile
+    padding) lives in repro.kernels.ops.sinnamon_topk_batch.
+    """
+    B, Lq = qv.shape
+    h = rows.shape[-1]
+    R, C = skmat.shape
+    if C % tile_c != 0:
+        raise ValueError(f"C={C} must be a multiple of tile_c={tile_c}")
+    if kp > tile_c:
+        raise ValueError(f"kp={kp} cannot exceed tile_c={tile_c}")
+    tw = tile_c // 32
+    T = C // tile_c
+    grid = (B, T)
+
+    in_specs = [
+        pl.BlockSpec((1, Lq), lambda b, c: (b, 0)),            # qv
+        pl.BlockSpec((1, Lq), lambda b, c: (b, 0)),            # pos
+        pl.BlockSpec((1, Lq, h), lambda b, c: (b, 0, 0)),      # rows
+        pl.BlockSpec((1, Lq, tw), lambda b, c: (b, 0, c)),     # qbits
+        pl.BlockSpec((1, tile_c), lambda b, c: (0, c)),        # gate
+        pl.BlockSpec((R, tile_c), lambda b, c: (0, c)),        # [U; L]
+    ]
+    kern = functools.partial(_topk_kernel, h=h, tile_c=tile_c, kp=kp,
+                             one_sided=one_sided)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=(pl.BlockSpec((1, 1, kp), lambda b, c: (b, c, 0)),
+                   pl.BlockSpec((1, 1, kp), lambda b, c: (b, c, 0))),
+        out_shape=(jax.ShapeDtypeStruct((B, T, kp), jnp.float32),
+                   jax.ShapeDtypeStruct((B, T, kp), jnp.int32)),
+        interpret=interpret,
+    )(qv, pos, rows, qbits, gate, skmat)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kp", "tile_c", "one_sided",
+                                    "query_block"))
+def fused_topk_xla(
+    qv: jax.Array,               # f32[B, L]
+    pos: jax.Array,              # bool[B, L]
+    rows: jax.Array,             # int32[B, L, h]  (pre-offset when one_sided)
+    qbits: jax.Array,            # uint32[B, L, W]
+    gate: jax.Array,             # f32[1, C]
+    skmat: jax.Array,            # [R, C]
+    *,
+    kp: int,
+    tile_c: int = DEFAULT_TILE_C_XLA,
+    one_sided: bool = True,
+    query_block: int = 2,
+) -> tuple:
+    """XLA twin of :func:`sinnamon_score_topk`: same operands, same per-tile
+    math (:func:`_fused_tile_scores`), same (vals, slots)[B, T, kp] output.
+
+    The grid becomes lax.map over query blocks × lax.scan over slot tiles,
+    which is how the tile program runs fast on backends where Pallas only has
+    the (per-grid-step interpreted) validation lowering.  Query blocks bound
+    the [QB, L, TC] working set exactly like the kernel's VMEM block does.
+    """
+    B, Lq = qv.shape
+    h = rows.shape[-1]
+    R, C = skmat.shape
+    if C % tile_c != 0:
+        raise ValueError(f"C={C} must be a multiple of tile_c={tile_c}")
+    if kp > tile_c:
+        raise ValueError(f"kp={kp} cannot exceed tile_c={tile_c}")
+    tw = tile_c // 32
+    T = C // tile_c
+    qb = min(query_block, B)
+    nb = (B + qb - 1) // qb
+    pad_b = nb * qb - B
+
+    def pad(x):
+        return jnp.pad(x, [(0, pad_b)] + [(0, 0)] * (x.ndim - 1))
+
+    qv_b = pad(qv).reshape(nb, qb, Lq)
+    pos_b = pad(pos).reshape(nb, qb, Lq)
+    rows_b = pad(rows).reshape(nb, qb, Lq, h)
+    qbits_b = pad(qbits).reshape(nb, qb, Lq, T, tw)
+    sk_t = jnp.moveaxis(skmat.reshape(R, T, tile_c), 1, 0)   # [T, R, TC]
+    gate_t = gate.reshape(T, tile_c)
+
+    def one_block(args):
+        bqv, bpos, brows, bqbits = args                      # [qb, ...]
+
+        def tile_step(carry, xs):
+            sk_tile, g_tile, words, base = xs
+            s = _fused_tile_scores(bqv, bpos, brows, words, g_tile, sk_tile,
+                                   h=h, one_sided=one_sided, tile_c=tile_c)
+            v, i = jax.lax.top_k(s, kp)                      # [qb, kp]
+            return carry, (v, (base * tile_c + i).astype(jnp.int32))
+
+        xs = (sk_t, gate_t, jnp.moveaxis(bqbits, 2, 0), jnp.arange(T))
+        _, (vs, ss) = jax.lax.scan(tile_step, 0, xs)         # [T, qb, kp]
+        return jnp.moveaxis(vs, 0, 1), jnp.moveaxis(ss, 0, 1)
+
+    vals, slots = jax.lax.map(one_block, (qv_b, pos_b, rows_b, qbits_b))
+    vals = vals.reshape(nb * qb, T, kp)[:B]
+    slots = slots.reshape(nb * qb, T, kp)[:B]
+    return vals, slots
+
+
+def _sorted_merge(neg: jax.Array, slots: jax.Array, width: int) -> tuple:
+    """Sort candidate rows by (neg score asc, slot asc) and keep ``width``."""
+    neg, slots = jax.lax.sort((neg, slots), dimension=-1, num_keys=2)
+    return neg[..., :width], slots[..., :width]
+
+
+def merge_tile_topk(vals: jax.Array, slots: jax.Array, kprime: int) -> tuple:
+    """Log-tree merge of per-tile candidate buffers -> global top-kprime.
+
+    vals/slots: [B, T, kp] per-tile candidates, each tile already ordered by
+    (score desc, slot asc).  Adjacent tiles are merged pairwise with a
+    two-key sort on (-score, slot), so the final [B, kprime] list carries the
+    exact (score desc, slot asc) order of ``lax.top_k`` over the dense score
+    vector — including the all--inf tail when fewer than kprime slots
+    survive the gate.  Requires T * kp >= kprime (guaranteed by the wrapper:
+    kp = min(kprime, tile_c) and T * tile_c >= C >= kprime).
+    """
+    B, T, kp = vals.shape
+    neg = -vals
+    while T > 1:
+        if T % 2:
+            # Odd tile count: add a dummy tile that sorts after everything
+            # (score -inf AND the max slot key), so it can never displace a
+            # real candidate nor perturb the -inf tie order.
+            neg = jnp.concatenate(
+                [neg, jnp.full((B, 1, kp), jnp.inf, neg.dtype)], axis=1)
+            slots = jnp.concatenate(
+                [slots, jnp.full((B, 1, kp), _SLOT_SENTINEL, slots.dtype)],
+                axis=1)
+            T += 1
+        width = min(kprime, 2 * kp)
+        neg = neg.reshape(B, T // 2, 2 * kp)
+        slots = slots.reshape(B, T // 2, 2 * kp)
+        neg, slots = _sorted_merge(neg, slots, width)
+        T //= 2
+        kp = width
+    return -neg[:, 0, :kprime], slots[:, 0, :kprime]

@@ -261,7 +261,7 @@ def build_retrieval(mod, shape, mesh, rules=None) -> CellBundle:
             indices=_sds((C_total, spec.max_nnz), jnp.int32),
             values=_sds((C_total, spec.max_nnz), jnp.bfloat16)),
         active=_sds((C_total,), jnp.bool_),
-        ids=_sds((C_total,), jnp.int32),
+        ids=_sds((C_total, 2), jnp.uint32),
         dirty=_sds((C_total,), jnp.bool_))
     state_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
                             sharded.state_pspecs(mesh, False),

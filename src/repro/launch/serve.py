@@ -3,6 +3,7 @@ then serve batched queries with the anytime budget.
 
     PYTHONPATH=src python -m repro.launch.serve --docs 10000 --queries 64 \
         [--budget 16] [--kprime 800] [--index-buckets 2048] [--shards 4] \
+        [--score-backend pallas|grouped|reference] \
         [--wal runs/wal --snapshot-dir runs/snap --snapshot-every 5000 \
          --compact-threshold 0.5]
 
@@ -35,6 +36,11 @@ def parse_args(argv=None):
     ap.add_argument("--m", type=int, default=60)
     ap.add_argument("--h", type=int, default=1)
     ap.add_argument("--index-buckets", type=int, default=None)
+    ap.add_argument("--score-backend", default=None,
+                    choices=["reference", "grouped", "pallas"],
+                    help="scoring backend for the query hot path "
+                         "(default: REPRO_SCORE_BACKEND env or 'pallas', "
+                         "the fused tiled-top-k kernel)")
     ap.add_argument("--shards", type=int, default=1,
                     help=">1: sharded streaming index on a host-local mesh")
     ap.add_argument("--query-batch", type=int, default=16)
@@ -156,7 +162,8 @@ def main():
         print(f"snapshot written to {args.snapshot_dir}")
 
     server = QueryServer(index, k=args.k, kprime=args.kprime,
-                         budget=args.budget)
+                         budget=args.budget,
+                         score_backend=args.score_backend)
     recalls = []
     for lo in range(0, args.queries, args.query_batch):
         hi = min(lo + args.query_batch, args.queries)

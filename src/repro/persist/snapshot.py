@@ -27,7 +27,10 @@ from repro.checkpoint import ckpt
 from repro.core import engine as eng
 from repro.serving.sharded import ShardedSinnamonIndex, shard_state
 
-FORMAT = "sinnamon-snapshot-v1"
+# v2: SinnamonState.ids became packed uint32[C, 2] lo/hi words (int64
+# external ids with jax x64 off).  v1 snapshots have an int32[C] ids leaf
+# and cannot be materialised into the current state template.
+FORMAT = "sinnamon-snapshot-v2"
 
 
 def _spec_dict(spec: eng.EngineSpec) -> dict:
@@ -124,7 +127,10 @@ def restore_parts(snap_dir: str,
     manifest, step = manifest_step or ckpt.read_manifest(snap_dir)
     extra = manifest["extra"]
     if extra.get("format") != FORMAT:
-        raise ValueError(f"{snap_dir}: not a {FORMAT} snapshot")
+        raise ValueError(
+            f"{snap_dir}: snapshot format {extra.get('format')!r} is "
+            f"incompatible with {FORMAT} (the state layout changed); "
+            f"restore it with the version that wrote it, or re-index")
     spec = _spec_from(extra["spec"])
     if extra["kind"] == "sharded":
         spec = dataclasses.replace(

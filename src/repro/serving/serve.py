@@ -21,9 +21,59 @@ from repro.core.engine import SinnamonIndex
 from repro.serving.sharded import ShardedSinnamonIndex
 
 
+class LatencyRing:
+    """Fixed-size ring buffer of latency samples.
+
+    Under sustained traffic an unbounded list grows without limit; the ring
+    keeps the most recent ``maxlen`` samples in a preallocated f32 buffer
+    while exposing the same surface the old list did (append / extend /
+    clear / len / np.asarray), so percentile accounting is unchanged — it
+    just windows to recent traffic.
+    """
+
+    def __init__(self, maxlen: int = 8192):
+        self.maxlen = int(maxlen)
+        self._buf = np.zeros(self.maxlen, np.float32)
+        self._pos = 0          # next write index
+        self._count = 0        # total samples ever recorded
+
+    def append(self, value: float) -> None:
+        self._buf[self._pos] = value
+        self._pos = (self._pos + 1) % self.maxlen
+        self._count += 1
+
+    def extend(self, values) -> None:
+        for v in values:
+            self.append(v)
+
+    def clear(self) -> None:
+        self._pos = 0
+        self._count = 0
+
+    def __len__(self) -> int:
+        return min(self._count, self.maxlen)
+
+    def __getitem__(self, i):
+        """Index into the oldest-first window (list-compatible access)."""
+        return np.asarray(self)[i]
+
+    def __array__(self, dtype=None, copy=None):
+        n = len(self)
+        if self._count <= self.maxlen:
+            out = self._buf[:n]
+        else:                  # oldest-first view of the wrapped window
+            out = np.concatenate([self._buf[self._pos:], self._buf[:self._pos]])
+        out = np.array(out) if copy is None or copy else out
+        return out.astype(dtype) if dtype is not None else out
+
+
 class QueryServer:
     """Serves one index — single-device or mesh-sharded; both expose the same
     ``search`` / ``search_many`` surface, so the server is layout-agnostic.
+
+    ``score_backend`` picks the index's scoring backend per server
+    (``reference | grouped | pallas``; None -> process default, see
+    repro.kernels.ops.resolve_backend).
 
     Durable indexes (repro.persist.durable) serve through the same surface,
     and the server keeps answering during snapshots and background
@@ -33,17 +83,20 @@ class QueryServer:
 
     def __init__(self, index: Union[SinnamonIndex, ShardedSinnamonIndex],
                  k: int = 10, kprime: int = 1000,
-                 budget: Optional[int] = None, score_fn=None):
+                 budget: Optional[int] = None, score_fn=None,
+                 score_backend: Optional[str] = None,
+                 latency_window: int = 8192):
         self.index = index
         self.k, self.kprime, self.budget = k, kprime, budget
         self.score_fn = score_fn
-        self.stats = {"queries": 0, "latency_ms": []}
+        self.score_backend = score_backend
+        self.stats = {"queries": 0, "latency_ms": LatencyRing(latency_window)}
 
     def query(self, q_idx, q_val):
         t0 = time.perf_counter()
         ids, scores = self.index.search(
             q_idx, q_val, k=self.k, kprime=self.kprime, budget=self.budget,
-            score_fn=self.score_fn)
+            score_fn=self.score_fn, backend=self.score_backend)
         self.stats["queries"] += 1
         self.stats["latency_ms"].append((time.perf_counter() - t0) * 1e3)
         return ids, scores
@@ -59,7 +112,7 @@ class QueryServer:
         t0 = time.perf_counter()
         ids, scores = self.index.search_many(
             q_idx, q_val, k=self.k, kprime=self.kprime, budget=self.budget,
-            score_fn=self.score_fn)
+            score_fn=self.score_fn, backend=self.score_backend)
         dt_ms = (time.perf_counter() - t0) * 1e3
         self.stats["queries"] += bn
         self.stats["latency_ms"].extend([dt_ms / bn] * bn)

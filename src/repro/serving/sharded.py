@@ -22,7 +22,6 @@ This module now covers the full *streaming* lifecycle at sharded scale:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax
@@ -52,7 +51,7 @@ def state_pspecs(mesh: Mesh, positive_only: bool = False) -> eng.SinnamonState:
         bits=P(None, c),
         store=vecstore.VecStore(indices=P(c), values=P(c)),
         active=P(c),
-        ids=P(c),
+        ids=P(c, None),                    # uint32[C, 2] packed int64 ids
         dirty=P(c),
     )
 
@@ -66,43 +65,59 @@ def state_shardings(mesh: Mesh, positive_only: bool = False):
 def make_search_step(mesh: Mesh, local_spec: eng.EngineSpec, *,
                      k: int, kprime_local: int,
                      budget: Optional[int] = None,
-                     score_fn=None):
+                     score_fn=None, backend: Optional[str] = None):
     """Build the jittable SPMD search step.
 
     local_spec.capacity is the *per-shard* slot count.  Returns
     ``step(state, q_idx[B, Lq], q_val[B, Lq])
-        -> (scores[B, k], ids[B, k], locators[B, k])``
+        -> (scores[B, k], ids[B, k, 2], locators[B, k])``
     with the batch sharded over 'data' and outputs replicated over corpus
-    axes.  ``locators`` packs (shard, local slot) per hit
-    (see topk.pack_shard_slot) so follow-up work routes straight back to the
-    owning shard.
+    axes.  ``ids`` are packed uint32 (lo, hi) words of the external int64 id
+    (decode with engine.unpack_ids64); ``locators`` packs (shard, local slot)
+    per hit (see topk.pack_shard_slot) so follow-up work routes straight back
+    to the owning shard.
+
+    ``backend`` selects the shard-local candidate backend (reference |
+    grouped | pallas — the fused kernel runs per shard; only candidate
+    tuples cross shards through the existing hierarchical merge).  The exact
+    rerank gathers only the k' candidate CSR rows per shard — no [B, n]
+    dense query block on any path.
     """
+    from repro.kernels import ops as _ops
+
     corpus = meshlib.corpus_axes(mesh)
     qspec = P("data") if "data" in mesh.axis_names else P()
+    backend = _ops.resolve_backend(backend) if score_fn is None else None
 
     def local_search(state: eng.SinnamonState, q_idx, q_val):
-        scores = eng.score_batch(state, local_spec, q_idx, q_val, budget) \
-            if score_fn is None else score_fn(state, local_spec, q_idx, q_val,
-                                              budget)
-        scores = jnp.where(state.active[None, :], scores, -jnp.inf)
         kl = min(kprime_local, local_spec.capacity)
-        ub, slots = jax.lax.top_k(scores, kl)                  # [b, kl]
-
-        dens = functools.partial(vecstore.densify_query, local_spec.n)
-        q_dense = jax.vmap(dens)(q_idx, q_val)                 # [b, n]
-        exact = jax.vmap(lambda s, qd: vecstore.exact_scores(state.store, s, qd)
-                         )(slots, q_dense)                     # [b, kl]
+        if score_fn is not None:
+            # Custom scorers keep the original BATCHED sharded contract:
+            # score_fn(state, spec, q_idx[b, Lq], q_val[b, Lq], budget)
+            # -> [b, C].
+            scores = score_fn(state, local_spec, q_idx, q_val, budget)
+            scores = jnp.where(state.active[None, :], scores, -jnp.inf)
+            ub, slots = jax.lax.top_k(scores, kl)            # [b, kl]
+        else:
+            ub, slots = eng.topk_candidates(state, local_spec, q_idx, q_val,
+                                            kl, budget,
+                                            backend=backend)  # [b, kl]
+        exact = jax.vmap(
+            lambda s, i, v: vecstore.exact_scores_sparse(state.store, s, i, v)
+        )(slots, q_idx, q_val)                               # [b, kl]
         exact = jnp.where(jnp.isneginf(ub), -jnp.inf, exact)
-        gids = state.ids[slots]
+        gids = state.ids[slots]                              # [b, kl, 2]
         shard = meshlib.linear_index(mesh, corpus)
         loc = topk.pack_shard_slot(shard, slots)
+        payload = (gids[..., 0], gids[..., 1], loc)
         if corpus:
-            vals, (ids, loc) = topk.merge_over_axes(
-                exact, (gids, loc), corpus, k)
-            return vals, ids, loc
+            vals, (lo, hi, loc) = topk.merge_over_axes(
+                exact, payload, corpus, k)
+            return vals, jnp.stack([lo, hi], axis=-1), loc
         vals, pos = jax.lax.top_k(exact, k)
         take = lambda p: jnp.take_along_axis(p, pos, axis=-1)
-        return vals, take(gids), take(loc)
+        return (vals, jnp.stack([take(payload[0]), take(payload[1])],
+                                axis=-1), take(loc))
 
     sharded = shard_map(
         local_search, mesh=mesh,
@@ -123,8 +138,9 @@ def make_search_step(mesh: Mesh, local_spec: eng.EngineSpec, *,
 # entry (s, b) must actually belong to shard s.
 
 def make_insert_step(mesh: Mesh, local_spec: eng.EngineSpec):
-    """``step(state, slots[S,B], ids[S,B], idx[S,B,P], val[S,B,P], mask[S,B])``
-    → state, with every array's leading axis sharded over the corpus axes."""
+    """``step(state, slots[S,B], ids[S,B,2], idx[S,B,P], val[S,B,P],
+    mask[S,B])`` → state, with every array's leading axis sharded over the
+    corpus axes (``ids`` are packed uint32 lo/hi words, engine.pack_ids64)."""
     c = _corpus_spec(mesh)
     sspec = state_pspecs(mesh, local_spec.positive_only)
     uspec = P(c)
@@ -279,10 +295,11 @@ class ShardedSinnamonIndex:
         step = self._step("insert", lambda: make_insert_step(self.mesh,
                                                              self.spec))
         S, B, Pw = self.n_shards, self.update_block, self.spec.max_nnz
+        packed = eng.pack_ids64(np.asarray(ext_ids, np.int64))
         offsets = [0] * S
         while any(offsets[s] < len(per_shard[s]) for s in range(S)):
             slots = np.zeros((S, B), np.int32)
-            eids = np.full((S, B), -1, np.int32)
+            eids = np.full((S, B, 2), 0xFFFFFFFF, np.uint32)
             idxs = np.full((S, B, Pw), -1, np.int32)
             vals = np.zeros((S, B, Pw), np.float32)
             mask = np.zeros((S, B), bool)
@@ -292,7 +309,7 @@ class ShardedSinnamonIndex:
                 for b, pos in enumerate(take):
                     slot = self._free[s].pop()
                     slots[s, b] = slot
-                    eids[s, b] = ext_ids[pos]
+                    eids[s, b] = packed[pos]
                     idxs[s, b] = idx_batch[pos]
                     vals[s, b] = val_batch[pos]
                     mask[s, b] = True
@@ -333,36 +350,43 @@ class ShardedSinnamonIndex:
 
     # -- retrieval ----------------------------------------------------------
     def search(self, q_idx, q_val, k: int, kprime: Optional[int] = None,
-               budget: Optional[int] = None, score_fn=None):
+               budget: Optional[int] = None, score_fn=None,
+               backend: Optional[str] = None):
         q_idx = np.asarray(q_idx, np.int32)
         q_val = np.asarray(q_val, np.float32)
         ids, scores = self.search_many(q_idx[None], q_val[None], k,
                                        kprime=kprime, budget=budget,
-                                       score_fn=score_fn)
+                                       score_fn=score_fn, backend=backend)
         return ids[0], scores[0]
 
     def search_many(self, q_idx, q_val, k: int,
                     kprime: Optional[int] = None,
                     budget: Optional[int] = None, score_fn=None,
+                    backend: Optional[str] = None,
                     return_locators: bool = False):
         """Batched search over [B, Lq] queries (one SPMD dispatch).
 
-        ``kprime`` is the per-shard candidate count k'.  With
+        ``kprime`` is the per-shard candidate count k'.  ``backend`` picks
+        the shard-local scoring backend (None -> process default).  With
         ``return_locators`` the packed (shard, slot) payload of every hit is
         also returned (decode with topk.unpack_shard_slot).
         """
+        from repro.kernels import ops as _ops
+
         kprime = kprime if kprime is not None else max(5 * k, k)
         kl = min(kprime, self.spec.capacity)
         k = min(k, kl * self.n_shards)
-        key = ("search", k, kl, budget, score_fn)
+        backend = _ops.resolve_backend(backend) if score_fn is None else None
+        key = ("search", k, kl, budget, score_fn, backend)
         step = self._step(key, lambda: make_search_step(
             self.mesh, self.spec, k=k, kprime_local=kl, budget=budget,
-            score_fn=score_fn))
+            score_fn=score_fn, backend=backend))
         scores, ids, loc = step(self.state, jnp.asarray(q_idx),
                                 jnp.asarray(q_val))
+        ids = eng.unpack_ids64(np.asarray(ids))
         if return_locators:
-            return np.asarray(ids), np.asarray(scores), np.asarray(loc)
-        return np.asarray(ids), np.asarray(scores)
+            return ids, np.asarray(scores), np.asarray(loc)
+        return ids, np.asarray(scores)
 
     # -- capacity management ------------------------------------------------
     def grow(self, new_local_capacity: Optional[int] = None) -> None:

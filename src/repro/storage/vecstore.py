@@ -65,6 +65,32 @@ def densify_query(n: int, q_idx: Array, q_val: Array) -> Array:
     return jnp.zeros((n,), jnp.float32).at[safe].add(contrib, mode="drop")
 
 
+def exact_scores_sparse(store: VecStore, slots: Array, q_idx: Array,
+                        q_val: Array) -> Array:
+    """Exact ⟨q, x_s⟩ for the given slots WITHOUT densifying the query.
+
+    The Algorithm 7 rerank used by every scoring backend: gathers only the
+    k' candidate CSR rows and matches their coordinates against the sorted
+    sparse query via searchsorted — O(k'·P·log ψ_q) and no R^n scatter, so a
+    batched rerank never allocates a ``[B, n]`` dense query block.
+    Duplicate query coordinates are pre-combined by addition (the same
+    result densify_query's scatter-add produces).  f32[len(slots)].
+    """
+    idx = store.indices[slots]                       # [K, P]
+    val = store.values[slots].astype(jnp.float32)    # [K, P]
+    big = jnp.int32(jnp.iinfo(jnp.int32).max)
+    key = jnp.where(q_idx >= 0, q_idx, big)
+    order = jnp.argsort(key)
+    qs = key[order]                                  # sorted coords, pads last
+    qv = jnp.where(q_idx >= 0, q_val.astype(jnp.float32), 0.0)[order]
+    comb = jnp.sum(jnp.where(qs[None, :] == qs[:, None], qv[None, :], 0.0),
+                   axis=-1)                          # dup coords -> one sum
+    pos = jnp.clip(jnp.searchsorted(qs, idx), 0, qs.shape[0] - 1)
+    hit = (jnp.take(qs, pos) == idx) & (idx >= 0)
+    qd = jnp.where(hit, jnp.take(comb, pos), 0.0)    # [K, P]
+    return jnp.sum(qd * val, axis=-1)
+
+
 def exact_scores(store: VecStore, slots: Array, q_dense: Array) -> Array:
     """Exact ⟨q, x_s⟩ for the given slots (Algorithm 7 rerank). f32[len(slots)]."""
     idx = store.indices[slots]                       # [K, P]

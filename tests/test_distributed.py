@@ -74,18 +74,20 @@ SUBPROC = textwrap.dedent("""
     step = sharded.make_search_step(mesh, local, k=10, kprime_local=40)
     state = sharded.shard_state(index.state, mesh)
     scores, ids, loc = step(state, jnp.asarray(qi), jnp.asarray(qv))
+    from repro.core import engine as eng
+    ids = eng.unpack_ids64(np.asarray(ids))      # packed uint32 lo/hi words
     ok = True
     for b in range(4):
         ids0, sc0 = brute_force_topk(idx, val, qi[b], qv[b], 300, 10)
-        rec = len(set(np.asarray(ids)[b].tolist())
-                  & set(ids0.tolist())) / 10
+        rec = len(set(ids[b].tolist()) & set(ids0.tolist())) / 10
         ok &= rec >= 0.9
     # (shard, slot) locators must resolve back to the returned external ids:
     # global slot = shard * C_local + local slot under the contiguous layout.
     from repro.distributed import topk as topklib
     sh_ids, sl = topklib.unpack_shard_slot(jnp.asarray(loc))
     gslot = np.asarray(sh_ids) * 96 + np.asarray(sl)
-    ok &= bool(np.all(np.asarray(index.state.ids)[gslot] == np.asarray(ids)))
+    slot_ids = eng.unpack_ids64(np.asarray(index.state.ids))[gslot]
+    ok &= bool(np.all(slot_ids == ids))
     print("RECALL_OK" if ok else "RECALL_BAD")
 """)
 
