@@ -1,0 +1,219 @@
+"""Recall/memory/latency frontier benchmark (the ISSUE 5 accuracy tentpole).
+
+Sweeps the paper's accuracy levers — sketch half-size m, sketch_kind
+full|lite (§3.3), quantized cell dtype bf16|f8, rerank k' and the anytime
+query cutoff — over two synthetic corpora and emits one (memory, p99,
+recall@10) frontier point per configuration as ``run.py`` rows (and
+``BENCH_recall.json`` via ``--json``):
+
+* ``gauss`` — signed Gaussian values, uniform activation (the paper's G-style
+  collections).  Here the lite sketch genuinely *loses* recall (negative
+  query coordinates give up their lower bound), so the frontier shows the
+  real trade-off; the §5 theory check uses the Gaussian closed forms.
+* ``text`` — non-negative lognormal values with Zipf activation (the
+  SPLADE/BM25-shaped collections the paper targets).  Queries carry no
+  negative coordinates, so lite matches full's recall while halving sketch
+  bytes — the §3.3 claim, gated below.
+
+Two hard gates (a violation raises, which run.py turns into an ERROR row and
+a non-zero exit, failing CI):
+
+* ``lite`` halves sketch bytes and stays within 5 recall points of ``full``
+  on the text corpus;
+* every swept point's measured per-coordinate overestimate respects the
+  Eq. (13) tail bound from ``repro.core.theory`` (via repro.eval.bounds,
+  with the quantization margin for narrow cell dtypes).
+
+``recall_churn`` additionally reports the §4.3 drift trajectory
+(clean → churned → compacted) that ``eval.bounds.churn_overestimate``
+measures.
+"""
+
+from __future__ import annotations
+
+_DOCS, _QUERIES, _K = 4096, 32, 10
+
+
+def _dataset(name):
+    from repro.data import synth
+
+    if name == "gauss":
+        return synth.SparseDatasetSpec("recall_gauss", n=4096, psi_doc=48,
+                                       psi_query=24, value_dist="gaussian",
+                                       value_param=1.0)
+    return synth.SparseDatasetSpec("recall_text", n=8192, psi_doc=64,
+                                   psi_query=24, value_dist="lognormal",
+                                   value_param=0.6, nonneg=True,
+                                   activation="zipf")
+
+
+def _corpus(name, docs=_DOCS, queries=_QUERIES):
+    from repro.data import synth
+
+    ds = _dataset(name)
+    idx, val = synth.make_corpus(0, ds, docs, pad=96)
+    qi, qv = synth.make_queries(1, ds, queries, pad=32)
+    return ds, idx, val, qi, qv
+
+
+def _value_dist(name):
+    from repro.core import theory
+
+    if name == "gauss":
+        return theory.gaussian_dist(0.0, 1.0)
+    return theory.lognormal_dist(sigma=0.6)
+
+
+def _tag(corpus, pt):
+    tag = (f"recall/{corpus}/m{pt['m']}/{pt['sketch_kind']}"
+           f"/{pt['cell_dtype']}/kp{pt['kprime']}")
+    if pt["budget"] is not None:
+        tag += f"/budget{pt['budget']}"
+    return tag
+
+
+def _point_rows(corpus, pt):
+    tag = _tag(corpus, pt)
+    rows = [
+        (f"{tag}/recall_at_{pt['k']}", f"{pt['recall_at_k']:.3f}",
+         "vs exact oracle"),
+        (f"{tag}/mrr", f"{pt['mrr']:.3f}", ""),
+        (f"{tag}/p99_ms", f"{pt['p99_ms']:.3f}", "batched QueryServer path"),
+        (f"{tag}/sketch_kb", f"{pt['sketch_bytes'] / 1024:.1f}", ""),
+        (f"{tag}/index_kb", f"{pt['index_bytes'] / 1024:.1f}",
+         "sketch + inverted index"),
+    ]
+    b = pt.get("bounds")
+    if b is not None:
+        worst = max((c["empirical"] - c["bound"] for c in b["checks"]))
+        rows.append((f"{tag}/bound_ok", str(b["ok"]).lower(),
+                     f"worst tail excess {worst:+.3f} (gate <= slack)"))
+    return rows
+
+
+def _sweep(corpus, points, docs=_DOCS, queries=_QUERIES, reps=2):
+    from repro.eval import recall as harness
+
+    ds, idx, val, qi, qv = _corpus(corpus, docs, queries)
+    pts = harness.frontier(
+        idx, val, qi, qv, ds.n, points, k=_K, reps=reps,
+        bounds_params=dict(value_dist=_value_dist(corpus)))
+    for pt in pts:
+        pt["corpus"] = corpus
+    return pts
+
+
+def _gate_bounds(pts):
+    bad = [pt for pt in pts if not pt["bounds"]["ok"]]
+    if bad:
+        worst = bad[0]
+        raise ValueError(
+            f"measured overestimate exceeds the theory bound at "
+            f"{_tag(worst['corpus'], worst)}: {worst['bounds']['checks']}")
+
+
+def _gate_lite(pts, corpus, max_gap=0.05):
+    def find(kind):
+        for pt in pts:
+            if (pt["corpus"] == corpus and pt["sketch_kind"] == kind
+                    and pt["cell_dtype"] == "bf16" and pt["budget"] is None):
+                return pt
+        raise ValueError(f"no {kind} baseline point on {corpus}")
+
+    full, lite = find("full"), find("lite")
+    if lite["sketch_bytes"] * 2 != full["sketch_bytes"]:
+        raise ValueError(f"lite sketch bytes {lite['sketch_bytes']} are not "
+                         f"half of full's {full['sketch_bytes']}")
+    gap = full["recall_at_k"] - lite["recall_at_k"]
+    if gap > max_gap:
+        raise ValueError(f"lite recall gap {gap:.3f} on {corpus} exceeds "
+                         f"{max_gap} (full {full['recall_at_k']:.3f}, "
+                         f"lite {lite['recall_at_k']:.3f})")
+    return [
+        (f"recall/gate/{corpus}/lite_vs_full_gap", f"{gap:.3f}",
+         f"recall@{_K} points, gate <= {max_gap}"),
+        (f"recall/gate/{corpus}/lite_sketch_ratio",
+         f"{lite['sketch_bytes'] / full['sketch_bytes']:.2f}",
+         "gate == 0.50"),
+    ]
+
+
+def recall_frontier():
+    """Full lever sweep over both corpora + the two acceptance gates."""
+    gauss_points = [
+        dict(m=32, sketch_kind="full"), dict(m=32, sketch_kind="lite"),
+        dict(m=64, sketch_kind="full"), dict(m=64, sketch_kind="lite"),
+        dict(m=64, sketch_kind="full", cell_dtype="f8"),
+        dict(m=64, sketch_kind="full", budget=8),
+        dict(m=64, sketch_kind="full", kprime=40),
+    ]
+    text_points = [
+        dict(m=64, sketch_kind="full"), dict(m=64, sketch_kind="lite"),
+        dict(m=64, sketch_kind="full", cell_dtype="f8"),
+    ]
+    pts = _sweep("gauss", gauss_points) + _sweep("text", text_points)
+    rows = []
+    for pt in pts:
+        rows += _point_rows(pt["corpus"], pt)
+    _gate_bounds(pts)
+    rows += _gate_lite(pts, "text")
+    return rows
+
+
+def recall_churn():
+    """§4.3 churn drift trajectory: clean -> churned -> compacted."""
+    from repro.eval import bounds as blib
+    from repro.eval import recall as harness
+
+    ds, idx, val, _, _ = _corpus("gauss", docs=1024, queries=1)
+    spec = harness.lever_spec(ds.n, 1024, idx.shape[1], m=64)
+    out = blib.churn_overestimate(spec, idx, val, rounds=2, frac=0.25)
+    rows = []
+    for stage in ("clean", "churned", "compacted"):
+        rows.append((f"recall/churn/{stage}/err_mean",
+                     f"{out[stage]['err_mean']:.4f}",
+                     "per-coordinate overestimate"))
+        rows.append((f"recall/churn/{stage}/drift_max",
+                     f"{out[stage]['drift_max']:.4f}",
+                     "engine slot_drift"))
+    rows.append(("recall/churn/columns_rebuilt",
+                 str(out["columns_rebuilt"]), ""))
+    if out["compacted"]["drift_max"] != 0.0:
+        raise ValueError("compaction left residual sketch drift: "
+                         f"{out['compacted']['drift_max']}")
+    return rows
+
+
+def recall_smoke():
+    """CI-sized subset: one corpus, the lite/full pair, 1k docs.
+
+    Rows are renamed under ``recall_smoke/`` so a combined
+    ``run.py recall --json`` run never overwrites the full-sweep rows.
+    """
+    pts = _sweep("text", [dict(m=48, sketch_kind="full"),
+                          dict(m=48, sketch_kind="lite")],
+                 docs=1024, queries=16, reps=1)
+    rows = []
+    for pt in pts:
+        rows += _point_rows(pt["corpus"], pt)
+    _gate_bounds(pts)
+    rows += _gate_lite(pts, "text")
+    return [(name.replace("recall/", "recall_smoke/", 1), v, d)
+            for name, v, d in rows]
+
+
+ALL = [recall_frontier, recall_churn, recall_smoke]
+
+
+if __name__ == "__main__":
+    # Standalone entry: `python benchmarks/recall.py [--json PATH]`
+    # (same rows/JSON schema as benchmarks/run.py).
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks import run as _run
+
+    sys.argv = [sys.argv[0], "recall"] + sys.argv[1:]
+    _run.main()

@@ -24,11 +24,11 @@ def parse_args(argv=None):
 
 
 def main() -> None:
-    from benchmarks import paper, persist, query_path, streaming
+    from benchmarks import paper, persist, query_path, recall, streaming
 
     args = parse_args()
     fns = [fn for fn in paper.ALL + streaming.ALL + persist.ALL
-           + query_path.ALL
+           + query_path.ALL + recall.ALL
            if not args.only or args.only in fn.__name__]
     if not fns:
         print(f"no benchmark matches {args.only!r}", file=sys.stderr)

@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Build the API reference site with pdoc, treating pdoc warnings as errors.
+
+    pip install pdoc
+    python docs/build.py [-o docs/_build] [--if-available]
+
+Documents the retrieval system packages and excludes the dormant seed
+scaffolding (see configs/README.md) so the site never indexes dead surface.
+Target modules are imported *before* pdoc runs, so pre-existing import-time
+warnings from third-party libraries don't mask real documentation problems;
+during the pdoc pass, any warning raised from pdoc itself (unparseable
+docstring/annotation, unresolvable reference) fails the build — that is the
+CI "docs" job's warnings-as-errors gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import pathlib
+import pkgutil
+import sys
+import warnings
+
+# pdoc module specs: document `repro`, minus the dormant seed scaffolding.
+EXCLUDED = ("repro.configs", "repro.models", "repro.optim", "repro.train")
+MODULE_SPECS = ["repro"] + [f"!{mod}" for mod in EXCLUDED]
+
+
+def _preimport() -> None:
+    """Import every documented module once, before warnings are recorded."""
+    import repro
+
+    for info in pkgutil.walk_packages(repro.__path__, prefix="repro."):
+        if info.name.startswith(EXCLUDED):
+            continue
+        importlib.import_module(info.name)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("-o", "--output", default="docs/_build",
+                    help="output directory for the generated site")
+    ap.add_argument("--if-available", action="store_true",
+                    help="exit 0 (instead of 2) when pdoc is not installed "
+                         "— local convenience; CI installs pdoc")
+    args = ap.parse_args()
+
+    root = pathlib.Path(__file__).resolve().parent.parent
+    src = str(root / "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+
+    try:
+        import pdoc
+    except ImportError:
+        print("pdoc is not installed (`pip install pdoc`); API reference "
+              "not built", file=sys.stderr)
+        sys.exit(0 if args.if_available else 2)
+
+    _preimport()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        pdoc.pdoc(*MODULE_SPECS, output_directory=pathlib.Path(args.output))
+
+    failures = 0
+    for w in caught:
+        origin = f"{w.filename}:{w.lineno}"
+        if "pdoc" in pathlib.Path(w.filename).parts or "pdoc" in w.filename:
+            print(f"error (pdoc warning): {w.category.__name__}: "
+                  f"{w.message} [{origin}]", file=sys.stderr)
+            failures += 1
+        else:
+            print(f"note (third-party warning, ignored): "
+                  f"{w.category.__name__}: {w.message} [{origin}]",
+                  file=sys.stderr)
+    if failures:
+        sys.exit(f"{failures} pdoc warning(s) treated as errors")
+    print(f"API reference written to {args.output}")
+
+
+if __name__ == "__main__":
+    main()

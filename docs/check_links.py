@@ -1,0 +1,70 @@
+#!/usr/bin/env python
+"""Link-check the repo's markdown: every relative link must resolve.
+
+    python docs/check_links.py [files...]
+
+With no arguments, checks README.md, docs/*.md and configs/README.md.
+Skipped on purpose: absolute http(s)/mailto links (no network in CI gates)
+and links that escape the repository root (GitHub-web relative URLs like the
+README's ``../../actions/...`` badge target).  Exit code 1 lists every
+broken link with its file and line.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# Markdown inline links/images: [text](target) — target up to the first
+# unescaped closing paren, excluding whitespace (titles are not used here).
+_LINK = re.compile(r"\]\(([^)\s]+)\)")
+
+
+def iter_links(path: pathlib.Path):
+    text = path.read_text(encoding="utf-8")
+    for match in _LINK.finditer(text):
+        line = text.count("\n", 0, match.start()) + 1
+        yield line, match.group(1)
+
+
+def check(files, root: pathlib.Path) -> list:
+    broken = []
+    for path in files:
+        for line, target in iter_links(path):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = (path.parent / rel).resolve()
+            try:
+                resolved.relative_to(root)
+            except ValueError:
+                continue                    # escapes the repo: a web URL
+            if not resolved.exists():
+                broken.append((path, line, target))
+    return broken
+
+
+def main() -> None:
+    root = pathlib.Path(__file__).resolve().parent.parent
+    if len(sys.argv) > 1:
+        files = [pathlib.Path(a).resolve() for a in sys.argv[1:]]
+    else:
+        files = sorted((root / "docs").glob("*.md"))
+        files.append(root / "README.md")
+        files.append(root / "src" / "repro" / "configs" / "README.md")
+        files = [f for f in files if f.exists()]
+    broken = check(files, root)
+    checked = len(files)
+    if broken:
+        for path, line, target in broken:
+            print(f"{path.relative_to(root)}:{line}: broken link -> "
+                  f"{target}", file=sys.stderr)
+        sys.exit(f"{len(broken)} broken link(s) across {checked} file(s)")
+    print(f"{checked} file(s) checked, all relative links resolve")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,13 +3,21 @@
   "An Approximate Algorithm for Maximum Inner Product Search over Streaming
    Sparse Vectors" (Bruch, Nardini, Ingber, Liberty — 2023, cs.IR).
 
-Public surface:
-    repro.core      — Sinnamon sketch / bit-packed index / engines (Sinnamon, LinScan, WAND)
-    repro.kernels   — Pallas TPU kernels (+ pure-jnp oracles)
-    repro.models    — assigned architectures (LM / MoE / GNN / recsys)
-    repro.distributed, repro.train, repro.serving, repro.checkpoint
-    repro.configs   — one module per assigned architecture
-    repro.launch    — production mesh, multi-pod dry-run, train/serve drivers
+Public surface (see docs/architecture.md for the data-flow map):
+    repro.core        — Sinnamon sketch / bit-packed index / engines
+                        (Sinnamon, LinScan, WAND) + the §5 error theory
+    repro.kernels     — Pallas TPU kernels, XLA twins, scoring-backend dispatch
+    repro.storage     — raw padded-CSR vector store (exact rerank source)
+    repro.serving     — QueryServer + the mesh-sharded SPMD index
+    repro.distributed — mesh helpers, hierarchical top-k candidate merge
+    repro.persist     — WAL, snapshots, crash recovery, sketch compaction
+    repro.eval        — recall harness, empirical-vs-theory bounds, auto-tuner
+    repro.data        — synthetic sparse corpora (paper Table 3 shapes)
+    repro.launch      — serving/train launchers, mesh dry-run
+    repro.checkpoint  — atomic-rename checkpointing (snapshot substrate)
+
+Dormant seed scaffolding (excluded from the docs site; see
+configs/README.md): repro.configs, repro.models, repro.optim, repro.train.
 """
 
 __version__ = "1.0.0"

@@ -24,7 +24,10 @@ import numpy as np
 
 # numpy's npz cannot represent ml_dtypes (bfloat16, fp8): store such arrays
 # as raw uint views and record the true dtype in the manifest.
-_EXOTIC = {"bfloat16": (ml_dtypes.bfloat16, np.uint16)}
+_EXOTIC = {
+    "bfloat16": (ml_dtypes.bfloat16, np.uint16),
+    "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+}
 
 
 def _fsync(path: str) -> None:

@@ -45,7 +45,20 @@ Array = jax.Array
 
 @dataclasses.dataclass(frozen=True)
 class EngineSpec:
-    """Static engine configuration (hashable; safe as a jit static arg)."""
+    """Static engine configuration (hashable; safe as a jit static arg).
+
+    The *accuracy levers* (paper §5–§6, measured by ``repro.eval``):
+
+    * ``m`` — sketch half-size; more rows = tighter Theorem 5.1 bounds.
+    * ``sketch_kind`` — ``"full"`` stores both U and L; ``"lite"`` (§3.3)
+      stores only the upper-bound sketch, halving sketch memory.  On
+      non-negative collections lite loses nothing (L is redundant there —
+      same as ``positive_only``); on signed collections negative query
+      coordinates contribute 0 instead of ``q[j]·lb``, so the score is no
+      longer a strict upper bound and recall degrades gracefully instead.
+    * ``dtype`` — sketch cell storage: ``f32 | bf16 | f8`` (directed-rounded
+      quantization, decoded in the scoring tile loop; see repro.core.sketch).
+    """
 
     n: int                       # ambient dimensionality
     m: int                       # sketch half-size (2m total rows, paper's "2m")
@@ -59,17 +72,34 @@ class EngineSpec:
     # (a false positive only ever ADDS a non-negative overestimate) while
     # shrinking the index by n/index_buckets. None = exact bitmap.
     index_buckets: "int | None" = None
-    dtype: str = "bfloat16"      # sketch storage dtype
+    sketch_kind: str = "full"    # full | lite (§3.3 upper-bound-only sketch)
+    # NB two distinct storage dtypes: `dtype` is the SKETCH CELL width (the
+    # quantization lever; launcher flag --value-dtype, eval name
+    # "cell_dtype"), while `value_dtype` is the RAW VecStore width that the
+    # exact rerank reads — the launcher flag does NOT set value_dtype.
+    dtype: str = "bfloat16"      # sketch cell storage dtype (f32|bf16|f8)
     value_dtype: str = "bfloat16"  # raw-value storage dtype (paper uses bf16)
     seed: int = 0
 
     def __post_init__(self):
         if self.capacity % 32 != 0:
             raise ValueError("capacity must be a multiple of 32")
+        if self.sketch_kind not in ("full", "lite"):
+            raise ValueError(f"sketch_kind must be 'full' or 'lite', "
+                             f"got {self.sketch_kind!r}")
+        # Canonicalize lever aliases ("f8" -> "float8_e4m3fn") up front so
+        # jit caches and snapshot recipes key on one spelling.
+        object.__setattr__(self, "dtype",
+                           sketch.resolve_cell_dtype(self.dtype))
+
+    @property
+    def upper_only(self) -> bool:
+        """True when no lower sketch is stored (Sinnamon+ or lite)."""
+        return self.positive_only or self.sketch_kind == "lite"
 
     @property
     def sketch_spec(self) -> sketch.SketchSpec:
-        return sketch.SketchSpec(self.n, self.m, self.h, self.positive_only,
+        return sketch.SketchSpec(self.n, self.m, self.h, self.upper_only,
                                  self.dtype)
 
 
@@ -123,7 +153,7 @@ _EMPTY_ID = np.uint32(0xFFFFFFFF)    # both words of a packed -1
 def init(spec: EngineSpec) -> SinnamonState:
     mappings = jnp.asarray(sketch.make_mappings(spec.seed, spec.n, spec.m, spec.h))
     u = jnp.zeros((spec.m, spec.capacity), dtype=spec.sketch_spec.jdtype)
-    l = None if spec.positive_only else jnp.zeros_like(u)
+    l = None if spec.upper_only else jnp.zeros_like(u)
     return SinnamonState(
         mappings=mappings,
         u=u,
@@ -151,7 +181,7 @@ def insert(state: SinnamonState, spec: EngineSpec, slot, ext_id,
     """
     u_col, l_col = sketch.encode(state.mappings, spec.m, idx, val,
                                  dtype=spec.dtype,
-                                 positive_only=spec.positive_only)
+                                 positive_only=spec.upper_only)
     was_dirty = state.dirty[slot]
     u_col = u_col.astype(state.u.dtype)
     u_col = jnp.where(was_dirty, jnp.maximum(state.u[:, slot], u_col), u_col)
@@ -234,7 +264,7 @@ def insert_batch_masked(state: SinnamonState, spec: EngineSpec, slots: Array,
     """
     u_cols, l_cols = sketch.encode_batch(state.mappings, spec.m, idx, val,
                                          dtype=spec.dtype,
-                                         positive_only=spec.positive_only)
+                                         positive_only=spec.upper_only)
     cap = state.active.shape[0]
     safe_slots = jnp.where(mask, slots, cap)               # OOB -> dropped
 
@@ -397,7 +427,7 @@ def fresh_sketch(state: SinnamonState, spec: EngineSpec
     u, l = sketch.encode_batch(
         state.mappings, spec.m, state.store.indices,
         state.store.values.astype(jnp.float32),
-        dtype=spec.dtype, positive_only=spec.positive_only)
+        dtype=spec.dtype, positive_only=spec.upper_only)
     return u.T, None if l is None else l.T
 
 
@@ -581,7 +611,19 @@ def search_batch(state, spec, q_idx, q_val, k, kprime, budget=None,
 # ---------------------------------------------------------------------------
 
 class SinnamonIndex:
-    """Streaming host-facing index.  All heavy math stays jitted/functional."""
+    """Streaming host-facing index (paper §4's full system, single device).
+
+    Owns the host-side bookkeeping — slot free list, external-id ↔ slot map,
+    capacity growth — while every heavy operation stays a jitted pure
+    function of :class:`SinnamonState`.  Mutations: :meth:`insert` /
+    :meth:`insert_many` (Algorithm 5 sketching + bit-index update),
+    :meth:`delete` (§4.3 bit-clear with slot recycling).  Retrieval:
+    :meth:`search` / :meth:`search_many` (Algorithm 6 budgeted upper-bound
+    candidates + Algorithm 7 exact rerank, through the pluggable scoring
+    backend).  Maintenance: :meth:`compact` / :meth:`slot_drift` for churn
+    residue, :meth:`memory_bytes` for the §6.1.2 accounting that the
+    ``repro.eval`` harness and auto-tuner report.
+    """
 
     def __init__(self, spec: EngineSpec):
         self.spec = spec

@@ -20,11 +20,19 @@ TPU adaptation notes
 --------------------
 * Mappings are materialised as an ``int32[h, n]`` table (deterministic Philox),
   so that both encode and decode are dense gathers — no hashing in the kernel.
-* Sketches are stored in bfloat16 (as in the paper) but with **directed
-  rounding**: values are rounded *up* to the next representable bf16 in ``u``
-  and *down* in ``l``.  Plain round-to-nearest bf16 (the paper's choice) can
-  round an upper bound below the true value and silently void Theorem 5.1;
-  directed rounding restores the guarantee at zero extra cost.
+* Sketch cells are **quantized storage** (paper §6.1.2's memory lever): the
+  supported cell dtypes are ``f32 | bf16 | f8`` (see :func:`resolve_cell_dtype`
+  for the aliases; f8 is ``float8_e4m3fn``) and every narrow dtype uses
+  **directed rounding** — values are rounded *up* to the next representable
+  cell value in ``u`` and *down* in ``l``.  Plain round-to-nearest (the
+  paper's choice for bf16) can round an upper bound below the true value and
+  silently void Theorem 5.1; directed rounding restores the guarantee at zero
+  extra cost.  Quantized cells are decoded (cast back to f32) inside the
+  scoring tile loop, so the HBM-resident sketch stays at the narrow width.
+* f8 cells saturate at ±448 (e4m3fn has no inf): beyond that magnitude the
+  directed bound is voided.  Real sparse-retrieval values sit orders of
+  magnitude below the cliff; ``repro.eval.bounds`` measures the residual
+  quantization overestimate empirically.
 * Cells that receive no value are filled with 0 rather than ±inf.  They are
   never decoded for a *valid* (doc, coordinate) pair — the membership index
   guarantees at least the coordinate's own value landed in all h probed cells —
@@ -45,21 +53,68 @@ Array = jax.Array
 
 @dataclasses.dataclass(frozen=True)
 class SketchSpec:
-    """Static configuration of a Sinnamon sketch."""
+    """Static configuration of a Sinnamon sketch.
+
+    ``positive_only`` means "no lower sketch is stored": true Sinnamon+
+    collections (paper §4.1, non-negative values make L redundant) and the
+    §3.3 *lite* variant (L dropped deliberately to halve sketch memory; the
+    engine sets this flag from ``EngineSpec.upper_only``).
+    """
 
     n: int                      # ambient dimensionality of the sparse space
     m: int                      # rows in each of U and L (sketch size = 2m)
     h: int = 1                  # number of independent random mappings
-    positive_only: bool = False  # Sinnamon+ (paper §4.1): drop L entirely
-    dtype: str = "bfloat16"     # storage dtype of sketch cells
+    positive_only: bool = False  # drop L entirely (Sinnamon+ / lite)
+    dtype: str = "bfloat16"     # storage dtype of sketch cells (see aliases)
 
     @property
     def jdtype(self):
-        return jnp.dtype(self.dtype)
+        return jnp.dtype(resolve_cell_dtype(self.dtype))
 
     @property
     def sketch_rows(self) -> int:
         return self.m if self.positive_only else 2 * self.m
+
+
+# ---------------------------------------------------------------------------
+# Quantized sketch cells (the memory lever): f32 | bf16 | f8
+# ---------------------------------------------------------------------------
+
+_CELL_ALIASES = {
+    "f32": "float32", "float32": "float32",
+    "bf16": "bfloat16", "bfloat16": "bfloat16",
+    "f8": "float8_e4m3fn", "float8_e4m3fn": "float8_e4m3fn",
+}
+
+#: Lever names accepted by CLIs (``--value-dtype``) and the auto-tuner.
+CELL_DTYPES = ("f32", "bf16", "f8")
+
+# Narrow formats that support directed rounding: dtype -> bit-pattern dtype.
+_BITS_OF = {
+    jnp.dtype(jnp.bfloat16): jnp.uint16,
+    jnp.dtype("float8_e4m3fn"): jnp.uint8,
+}
+
+
+def resolve_cell_dtype(name) -> str:
+    """Canonical sketch-cell dtype name from a lever alias.
+
+    Accepts ``f32 | bf16 | f8`` (the CLI/tuner lever names) or the canonical
+    numpy names (``float32 | bfloat16 | float8_e4m3fn``).  NOTE: the aliases
+    are checked *before* numpy's dtype parser on purpose — to numpy, ``"f8"``
+    means float64, which is exactly the wrong 56 bits.
+    """
+    key = str(name)
+    if key not in _CELL_ALIASES:
+        try:
+            key = np.dtype(name).name
+        except TypeError:
+            pass
+    if key not in _CELL_ALIASES:
+        raise ValueError(f"unknown sketch cell dtype {name!r}; expected one "
+                         f"of {CELL_DTYPES} (or a canonical name: "
+                         f"{sorted(set(_CELL_ALIASES.values()))})")
+    return _CELL_ALIASES[key]
 
 
 def make_mappings(seed: int, n: int, m: int, h: int) -> np.ndarray:
@@ -73,46 +128,65 @@ def make_mappings(seed: int, n: int, m: int, h: int) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# Directed bfloat16 rounding (upper bounds round toward +inf, lower toward -inf)
+# Directed rounding (upper bounds round toward +inf, lower toward -inf) for
+# every narrow cell dtype in _BITS_OF.
 # ---------------------------------------------------------------------------
 
-def _bf16_next_toward_inf(b: Array, positive: bool) -> Array:
-    """Next representable bf16 strictly toward +inf (positive=True) or -inf."""
-    bits = jax.lax.bitcast_convert_type(b, jnp.uint16)
-    is_nonneg = ~jnp.signbit(b)
+def _next_toward_inf(b: Array, positive: bool) -> Array:
+    """Next representable cell value strictly toward +inf or -inf.
+
+    Works on the bit pattern of any IEEE-ish sign/exponent/mantissa format
+    (bf16, f8): incrementing the magnitude bits steps one ulp away from zero,
+    decrementing steps toward it.  jnp.signbit has no f8 lowering, so the
+    sign comes from the top bit directly.
+    """
+    bits_dtype = _BITS_OF[b.dtype]
+    nbits = jnp.dtype(bits_dtype).itemsize * 8
+    bits = jax.lax.bitcast_convert_type(b, bits_dtype)
+    one = jnp.asarray(1, bits_dtype)
+    sign_mask = jnp.asarray(1 << (nbits - 1), bits_dtype)
+    is_nonneg = (bits & sign_mask) == 0
     if positive:
         # toward +inf: magnitude grows for x>=0, shrinks for x<0.
-        nxt = jnp.where(is_nonneg, bits + 1, bits - 1)
-        # -0.0 (0x8000) - 1 would be garbage; map any zero to smallest +subnormal
-        nxt = jnp.where(b == 0, jnp.uint16(0x0001), nxt)
+        nxt = jnp.where(is_nonneg, bits + one, bits - one)
+        # -0.0 (sign_mask) - 1 would be garbage; map any zero to the
+        # smallest positive subnormal (bit pattern 0...01).
+        nxt = jnp.where(b == 0, one, nxt)
     else:
-        nxt = jnp.where(is_nonneg, bits - 1, bits + 1)
-        nxt = jnp.where(b == 0, jnp.uint16(0x8001), nxt)
-    return jax.lax.bitcast_convert_type(nxt, jnp.bfloat16)
+        nxt = jnp.where(is_nonneg, bits - one, bits + one)
+        nxt = jnp.where(b == 0, sign_mask | one, nxt)
+    return jax.lax.bitcast_convert_type(nxt, b.dtype)
 
 
 def quantize_directed(x: Array, dtype, toward_pos_inf: bool) -> Array:
-    """Cast f32 -> dtype rounding toward +inf (u) or -inf (l)."""
+    """Cast f32 -> cell dtype rounding toward +inf (u) or -inf (l).
+
+    Values beyond the format's largest finite magnitude saturate there
+    (e4m3fn has no inf to round to), which voids the directed bound only
+    for |x| > finfo(dtype).max — far outside real retrieval value ranges,
+    and measurable via repro.eval.bounds.
+    """
     x = x.astype(jnp.float32)
-    if jnp.dtype(dtype) == jnp.float32:
+    dt = jnp.dtype(resolve_cell_dtype(dtype))
+    if dt == jnp.float32:
         return x
-    if jnp.dtype(dtype) != jnp.dtype(jnp.bfloat16):
-        raise ValueError(f"unsupported sketch dtype {dtype}")
-    b = x.astype(jnp.bfloat16)
+    fin = jnp.finfo(dt)
+    xc = jnp.clip(x, float(-fin.max), float(fin.max))
+    b = xc.astype(dt)
     bf = b.astype(jnp.float32)
     if toward_pos_inf:
-        need = bf < x
+        need = bf < xc
     else:
-        need = bf > x
-    out = jnp.where(need, _bf16_next_toward_inf(b, toward_pos_inf), b)
-    # XLA CPU flushes bf16 subnormals to zero, which can void the bound for
-    # |x| below the smallest normal bf16 — fall back to ±smallest-normal.
-    tiny = jnp.bfloat16(1.1754944e-38)
+        need = bf > xc
+    out = jnp.where(need, _next_toward_inf(b, toward_pos_inf), b)
+    # XLA CPU flushes narrow-format subnormals to zero, which can void the
+    # bound for |x| below the smallest normal — fall back to ±smallest-normal.
+    tiny = jnp.asarray(float(fin.tiny), dt)
     of = out.astype(jnp.float32)
     if toward_pos_inf:
-        out = jnp.where(of < x, tiny, out)
+        out = jnp.where(of < xc, tiny, out)
     else:
-        out = jnp.where(of > x, -tiny, out)
+        out = jnp.where(of > xc, -tiny, out)
     return out
 
 

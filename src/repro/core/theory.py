@@ -43,6 +43,31 @@ def gaussian_dist(mu: float = 0.0, sigma: float = 1.0):
     return pdf, cdf, grid
 
 
+def lognormal_dist(sigma: float = 1.0, mu: float = 0.0):
+    """Log-normal non-negative values — the text-like collections' value law
+    (paper Table 3 / Fig. 6(a); what ``repro.data.synth``'s *_like datasets
+    draw).  Lets the generic Eq. (6)/(13) quadratures bound the sketch
+    overestimate on SPLADE/BM25-shaped corpora, not just the Table 1 rows.
+    """
+    s2 = sigma * math.sqrt(2)
+
+    def pdf(a):
+        a = np.asarray(a, np.float64)
+        safe = np.maximum(a, 1e-300)
+        return np.where(a > 0,
+                        np.exp(-0.5 * ((np.log(safe) - mu) / sigma) ** 2)
+                        / (safe * sigma * math.sqrt(2 * math.pi)), 0.0)
+
+    def cdf(a):
+        a = np.asarray(a, np.float64)
+        safe = np.maximum(a, 1e-300)
+        return np.where(a > 0, 0.5 * (1 + _erf((np.log(safe) - mu) / s2)),
+                        0.0)
+
+    grid = np.linspace(0.0, math.exp(mu + 8 * sigma), 8001)
+    return pdf, cdf, grid
+
+
 def zeta_dist(s: float, support_lo: float = -1.0, support_hi: float = 1.0,
               levels: int = 2 ** 10):
     """Paper Table 1: Zeta(s) over [-1, 1] quantised into 2^10 discrete values.

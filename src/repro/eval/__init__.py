@@ -1,0 +1,31 @@
+"""Quality-and-tuning harness for the streaming Sinnamon engine (paper §5–§6).
+
+The paper's headline contribution is a set of *levers* that trade memory,
+latency and accuracy against each other: sketch size ``m``, the rerank
+budget ``k'``, the anytime query cutoff, the §3.3 upper-bound-only "lite"
+sketch, and quantized sketch cells.  This package makes every lever
+measurable against the repo's own exact oracles:
+
+* :mod:`repro.eval.recall` — recall@k / MRR vs the exact LinScan/brute-force
+  oracle, per-configuration latency, and the (memory, p99, recall) frontier
+  sweep that `benchmarks/recall.py` emits as ``BENCH_recall.json``.
+* :mod:`repro.eval.bounds` — measured per-coordinate sketch overestimates
+  checked against the §5 theory in :mod:`repro.core.theory`, including the
+  drift that §4.3 delete-then-recycle churn accumulates.
+* :mod:`repro.eval.tune` — the auto-tuner: grid-search the levers on a
+  corpus sample and return a ready :class:`repro.core.engine.EngineSpec`
+  meeting a memory budget and recall floor (``repro.launch.serve
+  --auto-tune`` wires it into the serving launcher).
+"""
+
+# The submodules are the API (`repro.eval.tune.tune(...)`); only names that
+# cannot shadow a submodule are re-exported at package level.
+from repro.eval import bounds, recall, tune  # noqa: F401
+from repro.eval.recall import (  # noqa: F401
+    build_index, evaluate_index, exact_topk_ids, frontier, lever_spec,
+    recall_at_k, reciprocal_rank,
+)
+from repro.eval.bounds import (  # noqa: F401
+    check_upper_bounds, churn_overestimate, per_coordinate_overestimate,
+)
+from repro.eval.tune import TuneResult, spec_index_bytes  # noqa: F401

@@ -1,0 +1,175 @@
+"""Empirical-vs-theory: measured sketch overestimates against the §5 bounds.
+
+The upper-bound sketch promises (Theorem 5.1) that the decoded value of any
+active coordinate never undershoots the true value, and the §5 analysis
+(:mod:`repro.core.theory`) predicts *how far* it overshoots: Eq. (13) gives
+the CDF of the per-coordinate overestimation error Z̄ as a function of the
+value distribution, the active mass Σp and the sketch geometry (m, h).
+
+This module closes the loop on a *live index*: decode every active
+coordinate of (a sample of) the stored documents, subtract the stored truth,
+and compare the measured tail ``P[err > δ]`` against the theoretical tail —
+the check `benchmarks/recall.py` runs on every swept frontier point and
+``tests/test_eval_quality.py`` gates on.
+
+Two deliberate wrinkles:
+
+* **Quantized cells** (bf16/f8 sketch storage) sit up to one directed-
+  rounding ulp above the real-valued sketch the theory models, so the
+  empirical tail is measured at ``δ + margin`` with ``margin`` = one ulp at
+  the largest stored cell magnitude (conservative; see
+  :func:`quantization_margin`).
+* **Churn drift** (§4.3 delete-then-recycle leaves merged residue in dirty
+  columns) makes a live index *looser* than theory on purpose.  The clean
+  check assumes a freshly built or compacted index;
+  :func:`churn_overestimate` measures the drift trajectory explicitly —
+  clean → churned → compacted — which is the evidence that compaction
+  restores the theoretical regime.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sketch, theory
+from repro.core import engine as eng
+
+
+def per_coordinate_overestimate(index: eng.SinnamonIndex, *,
+                                max_docs: int = 4096,
+                                seed: int = 0) -> np.ndarray:
+    """Measured ``decode(j) - x[j]`` over active (doc, coordinate) pairs.
+
+    Decodes the upper bound of every active coordinate of up to ``max_docs``
+    live documents straight from the index's sketch matrix (the same
+    ``decode_vector`` path the §5 analysis models) and subtracts the stored
+    value.  Non-negative everywhere on a clean index with float32 raw
+    storage (Theorem 5.1); a narrower ``value_dtype`` can show ±1-ulp noise
+    of the *store*, and dirty columns show genuine churn residue.
+    """
+    state, spec = index.state, index.spec
+    active = np.flatnonzero(np.asarray(state.active))
+    if active.size == 0:
+        return np.zeros((0,), np.float32)
+    if active.size > max_docs:
+        gen = np.random.default_rng(seed)
+        active = gen.choice(active, size=max_docs, replace=False)
+    slots = jnp.asarray(np.sort(active).astype(np.int32))
+    idx = state.store.indices[slots]                       # [S, P]
+    val = state.store.values[slots].astype(jnp.float32)    # [S, P]
+    u_cols = state.u[:, slots].T                           # [S, m]
+    if state.l is None:
+        decode = jax.vmap(lambda u, i: sketch.decode_vector(
+            state.mappings, u, None, i)[0])
+        ub = decode(u_cols, idx)
+    else:
+        l_cols = state.l[:, slots].T
+        decode = jax.vmap(lambda u, l, i: sketch.decode_vector(
+            state.mappings, u, l, i)[0])
+        ub = decode(u_cols, l_cols, idx)
+    err = np.asarray(ub - val)
+    mask = np.asarray(idx) >= 0
+    return err[mask].astype(np.float32)
+
+
+def quantization_margin(index: eng.SinnamonIndex) -> float:
+    """One directed-rounding ulp at the largest stored cell magnitude.
+
+    The §5 theory models a real-valued sketch; quantized cells are rounded
+    *up* (u) by at most one ulp, so measured errors can exceed the
+    theoretical ones by up to ``eps(dtype) · max|cell|``.  Using the global
+    max cell is conservative — it only makes the empirical tail smaller
+    than an exact per-cell correction would.
+    """
+    dt = jnp.dtype(sketch.resolve_cell_dtype(index.spec.dtype))
+    if dt == jnp.float32:
+        return 0.0
+    state = index.state
+    top = float(jnp.max(jnp.abs(state.u.astype(jnp.float32))))
+    if state.l is not None:
+        top = max(top, float(jnp.max(jnp.abs(state.l.astype(jnp.float32)))))
+    return float(jnp.finfo(dt).eps) * top
+
+
+def check_upper_bounds(index: eng.SinnamonIndex, *, value_dist,
+                       sum_p: Optional[float] = None,
+                       deltas: Sequence[float] = (0.25, 0.5, 1.0),
+                       slack: float = 0.05, max_docs: int = 4096,
+                       seed: int = 0) -> dict:
+    """Measured overestimate tails vs the Eq. (13) theoretical tails.
+
+    value_dist: a ``(pdf, cdf, grid)`` triple from :mod:`repro.core.theory`
+    (``gaussian_dist`` / ``lognormal_dist`` / ``uniform_dist`` — match the
+    corpus's value law).  ``sum_p``: the active mass Σp (mean actives per
+    document); estimated from the stored documents when None.  ``slack``
+    absorbs Monte-Carlo noise — the *confidence* knob of the check: the
+    verdict per δ is ``P̂[err > δ + margin] <= P_theory[err > δ] + slack``.
+
+    Returns ``{"ok", "n_coords", "sum_p", "margin", "min_err", "checks"}``
+    with one ``{"delta", "empirical", "bound", "ok"}`` row per δ.
+    """
+    errs = per_coordinate_overestimate(index, max_docs=max_docs, seed=seed)
+    if errs.size == 0:
+        raise ValueError("index holds no active documents to measure")
+    if sum_p is None:
+        state = index.state
+        act = np.asarray(state.active)
+        nnz = (np.asarray(state.store.indices) >= 0).sum(axis=1)
+        sum_p = float(nnz[act].mean())
+    pdf, cdf, grid = value_dist
+    margin = quantization_margin(index)
+    spec = index.spec
+    checks = []
+    for delta in deltas:
+        emp = float((errs > delta + margin).mean())
+        bound = float(1.0 - theory.error_cdf(float(delta), pdf, cdf, grid,
+                                             sum_p, spec.m, spec.h))
+        checks.append({"delta": float(delta), "empirical": emp,
+                       "bound": bound, "ok": emp <= bound + slack})
+    return {"ok": all(c["ok"] for c in checks),
+            "n_coords": int(errs.size), "sum_p": float(sum_p),
+            "margin": float(margin), "min_err": float(errs.min()),
+            "checks": checks}
+
+
+def churn_overestimate(spec: eng.EngineSpec, doc_idx, doc_val, *,
+                       rounds: int = 2, frac: float = 0.25,
+                       seed: int = 0, max_docs: int = 2048) -> dict:
+    """The drift trajectory: clean -> churned -> compacted overestimates.
+
+    Builds an index, then runs ``rounds`` of §4.3 churn (delete a random
+    ``frac`` of the corpus, re-insert the same vectors — recycled slots get
+    max/min-merged sketch columns), measuring the maximum per-coordinate
+    overestimate and the engine's own ``slot_drift`` at each stage.
+    ``compact()`` must return both to the clean regime (asserted by
+    tests/test_eval_quality.py; reported as benchmark rows).
+    """
+    from repro.eval import recall as _recall
+
+    index = _recall.build_index(spec, doc_idx, doc_val)
+    gen = np.random.default_rng(seed)
+    docs = len(doc_idx)
+
+    def stage() -> dict:
+        errs = per_coordinate_overestimate(index, max_docs=max_docs,
+                                           seed=seed)
+        return {"err_max": float(errs.max()),
+                "err_mean": float(errs.mean()),
+                "drift_max": float(index.slot_drift().max())}
+
+    clean = stage()
+    for _ in range(rounds):
+        pick = gen.choice(docs, size=max(1, int(frac * docs)), replace=False)
+        for d in pick:
+            index.delete(int(d))
+        index.insert_many([int(d) for d in pick],
+                          np.asarray(doc_idx)[pick], np.asarray(doc_val)[pick])
+    churned = stage()
+    rebuilt = index.compact()
+    compacted = stage()
+    return {"clean": clean, "churned": churned, "compacted": compacted,
+            "columns_rebuilt": int(rebuilt)}

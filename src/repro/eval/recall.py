@@ -1,0 +1,187 @@
+"""Recall harness: quality of the approximate engine vs its exact oracles.
+
+Implements the paper's §6.2/§6.5 evaluation protocol offline: build an index
+at a given lever configuration, serve the query set through the production
+``QueryServer`` path, and score the returned ids against the exact top-k from
+:func:`repro.core.linscan.brute_force_topk` (the dense oracle; identical
+result set to ``LinScanIndex`` without the postings machinery).  The sweep
+driver :func:`frontier` emits one (memory, latency, recall) point per lever
+configuration — the shape of the paper's Figure 8/9 trade-off curves.
+
+Harness conventions (deliberate, see ``lever_spec``):
+
+* documents are inserted with ``ext_id = corpus row``, so oracle ids and
+  returned ids share a namespace;
+* the raw VecStore keeps float32 values so the Algorithm 7 rerank is exact
+  against the oracle — the *sketch* quantization under test is isolated from
+  incidental storage rounding;
+* ``positive_only`` stays False so ``sketch_kind="full"`` always stores both
+  U and L — the paper's full-vs-lite memory comparison (§3.3) is 2m rows vs
+  m rows even on non-negative collections.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import engine as eng
+from repro.serving.serve import QueryServer
+
+
+def recall_at_k(pred_ids, true_ids) -> float:
+    """|pred ∩ truth| / |truth| for one query (order-insensitive)."""
+    truth = [int(t) for t in np.asarray(true_ids).ravel()]
+    hit = set(int(p) for p in np.asarray(pred_ids).ravel())
+    return sum(t in hit for t in truth) / max(len(truth), 1)
+
+
+def reciprocal_rank(pred_ids, top1: int) -> float:
+    """1/rank of the exact best document in the returned list (0 if absent)."""
+    for rank, p in enumerate(np.asarray(pred_ids).ravel(), start=1):
+        if int(p) == int(top1):
+            return 1.0 / rank
+    return 0.0
+
+
+def exact_topk_ids(doc_idx, doc_val, q_idx, q_val, n: int, k: int,
+                   chunk: int = 1024) -> np.ndarray:
+    """Exact oracle ids int64[B, k] (corpus-row ids, score-descending).
+
+    Same result set as :func:`repro.core.linscan.brute_force_topk`, computed
+    as a chunked dense gather over the whole query batch at once (the
+    per-doc Python loop of the single-query oracle would dominate a sweep).
+    Exact-score ties break toward the lower row id *deterministically* (full
+    stable descending sort — unlike argpartition-based selection, whose
+    boundary membership is arbitrary under ties).
+    """
+    doc_idx = np.asarray(doc_idx)
+    doc_val = np.asarray(doc_val, np.float32)
+    q_idx = np.asarray(q_idx)
+    q_val = np.asarray(q_val, np.float32)
+    B, D = len(q_idx), len(doc_idx)
+    qd = np.zeros((B, n), np.float32)
+    for b in range(B):
+        keep = q_idx[b] >= 0
+        np.add.at(qd[b], q_idx[b][keep], q_val[b][keep])
+    scores = np.zeros((B, D), np.float32)
+    for lo in range(0, D, chunk):
+        hi = min(lo + chunk, D)
+        idx = doc_idx[lo:hi]
+        valid = idx >= 0
+        gathered = qd[:, np.where(valid, idx, 0)] * valid[None]   # [B, C, P]
+        scores[:, lo:hi] = np.einsum("bcp,cp->bc", gathered, doc_val[lo:hi])
+    return np.argsort(-scores, axis=1, kind="stable")[:, :k].astype(np.int64)
+
+
+def pad_capacity(docs: int) -> int:
+    """Smallest valid engine capacity (multiple of 32) holding ``docs``."""
+    return ((docs + 31) // 32) * 32
+
+
+def lever_spec(n: int, docs: int, max_nnz: int, *, m: int = 64, h: int = 1,
+               sketch_kind: str = "full", cell_dtype: str = "bf16",
+               index_buckets: Optional[int] = None,
+               seed: int = 0) -> eng.EngineSpec:
+    """An :class:`~repro.core.engine.EngineSpec` at one lever configuration.
+
+    ``cell_dtype`` takes the lever aliases ``f32 | bf16 | f8``
+    (:func:`repro.core.sketch.resolve_cell_dtype`).
+    """
+    return eng.EngineSpec(
+        n=n, m=m, capacity=pad_capacity(docs), max_nnz=max_nnz, h=h,
+        positive_only=False, index_buckets=index_buckets,
+        sketch_kind=sketch_kind, dtype=cell_dtype, value_dtype="float32",
+        seed=seed)
+
+
+def build_index(spec: eng.EngineSpec, doc_idx, doc_val,
+                batch: int = 2048) -> eng.SinnamonIndex:
+    """Index a padded (idx, val) corpus with ``ext_id = row`` in batches."""
+    index = eng.SinnamonIndex(spec)
+    for lo in range(0, len(doc_idx), batch):
+        hi = min(lo + batch, len(doc_idx))
+        index.insert_many(list(range(lo, hi)), doc_idx[lo:hi],
+                          doc_val[lo:hi])
+    return index
+
+
+def evaluate_index(index: eng.SinnamonIndex, q_idx, q_val,
+                   truth: np.ndarray, *, k: int = 10,
+                   kprime: Optional[int] = None,
+                   budget: Optional[int] = None,
+                   backend: Optional[str] = None, reps: int = 2) -> dict:
+    """Serve the query batch and score it against the exact oracle ids.
+
+    Returns ``{"recall_at_k", "mrr", "p50_ms", "p99_ms"}``.  Queries go
+    through the batched ``QueryServer.query_many`` production path; the
+    first call is compile warm-up and excluded from the latency window.
+    """
+    server = QueryServer(index, k=k, kprime=kprime or 10 * k, budget=budget,
+                         score_backend=backend)
+    ids, _ = server.query_many(q_idx, q_val)      # warm-up + answers
+    server.stats["latency_ms"].clear()
+    for _ in range(reps):
+        ids, _ = server.query_many(q_idx, q_val)
+    recalls = [recall_at_k(ids[b], truth[b]) for b in range(len(q_idx))]
+    mrrs = [reciprocal_rank(ids[b], truth[b][0]) for b in range(len(q_idx))]
+    lat = server.latency_percentiles()
+    return {"recall_at_k": float(np.mean(recalls)),
+            "mrr": float(np.mean(mrrs)),
+            "p50_ms": lat["p50"], "p99_ms": lat["p99"]}
+
+
+_POINT_DEFAULTS = {"m": 64, "sketch_kind": "full", "cell_dtype": "bf16",
+                   "kprime": None, "budget": None}
+
+
+def frontier(doc_idx, doc_val, q_idx, q_val, n: int,
+             points: Sequence[dict], *, k: int = 10, h: int = 1,
+             index_buckets: Optional[int] = None, seed: int = 0,
+             backend: Optional[str] = None, reps: int = 2,
+             bounds_params: Optional[dict] = None) -> list[dict]:
+    """Sweep lever configurations -> (memory, latency, recall) points.
+
+    ``points``: dicts with any of ``m / sketch_kind / cell_dtype / kprime /
+    budget`` (missing keys take ``_POINT_DEFAULTS``).  The exact oracle is
+    computed once — it does not depend on the levers.  Each output point
+    carries the resolved configuration, the quality/latency metrics, and the
+    index memory split (``sketch_bytes`` / ``index_bytes`` — sketch plus
+    bit-packed inverted index; the raw VecStore is rerank storage, not index
+    memory, per the paper's §6.1.2 accounting).
+
+    ``bounds_params``: optional kwargs for
+    :func:`repro.eval.bounds.check_upper_bounds` (value distribution etc.);
+    when given, every point also carries its empirical-vs-theory verdict
+    under ``"bounds"``.
+    """
+    truth = exact_topk_ids(doc_idx, doc_val, q_idx, q_val, n, k)
+    max_nnz = np.asarray(doc_idx).shape[1]
+    out = []
+    for raw in points:
+        unknown = set(raw) - set(_POINT_DEFAULTS)
+        if unknown:
+            raise ValueError(f"unknown lever(s) {sorted(unknown)}; "
+                             f"expected {sorted(_POINT_DEFAULTS)}")
+        pt = {**_POINT_DEFAULTS, **raw}
+        spec = lever_spec(n, len(doc_idx), max_nnz, m=pt["m"], h=h,
+                          sketch_kind=pt["sketch_kind"],
+                          cell_dtype=pt["cell_dtype"],
+                          index_buckets=index_buckets, seed=seed)
+        index = build_index(spec, doc_idx, doc_val)
+        kprime = pt["kprime"] or min(10 * k, spec.capacity)
+        metrics = evaluate_index(index, q_idx, q_val, truth, k=k,
+                                 kprime=kprime, budget=pt["budget"],
+                                 backend=backend, reps=reps)
+        mem = index.memory_bytes()
+        point = {**pt, "kprime": kprime, "k": k,
+                 **metrics,
+                 "sketch_bytes": mem["sketch"],
+                 "index_bytes": mem["index_total"]}
+        if bounds_params is not None:
+            from repro.eval import bounds
+            point["bounds"] = bounds.check_upper_bounds(index,
+                                                        **bounds_params)
+        out.append(point)
+    return out

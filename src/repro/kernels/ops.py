@@ -24,6 +24,14 @@ layers, the launcher) routes candidate generation through ONE selector:
 
 Select per call (``backend=...``), per server (``--score-backend``), or
 process-wide via the ``REPRO_SCORE_BACKEND`` environment variable.
+
+The §3.3 *lite* sketch variant (``EngineSpec.sketch_kind="lite"``) rides the
+existing one-sided machinery for free: with no ``l`` leaf the fused path
+gathers only ``U`` rows and zeroes negative-coordinate contributions —
+exactly the Sinnamon+ code path, now reachable on signed collections as a
+memory/recall lever.  Quantized cells (bf16/f8) flow through every gather
+unchanged and are upcast to f32 inside the tile (see
+repro.kernels.sinnamon_score).
 """
 
 from __future__ import annotations

@@ -42,6 +42,12 @@ The fused variant also changes the decode schedule (the perf tentpole):
   differs from the sequential reference in the last ulp; candidate slots —
   and therefore the exact-reranked ids — are asserted identical in tests.)
 
+Quantized sketch cells (``EngineSpec.dtype`` = f32 | bf16 | f8) are decoded
+*inside* the tile loop: every entry point gathers the narrow cells and
+upcasts with ``.astype(f32)`` after the gather, so the HBM-resident sketch —
+and the VMEM block the grid streams — stays at the narrow storage width and
+the f32 math is confined to the tile registers.
+
 :func:`fused_topk_xla` is the same tile program expressed as a lax.scan for
 backends without a compiled Pallas lowering (CPU serving): identical math,
 identical tile shapes, no per-grid-step interpreter overhead.  Interpret-mode

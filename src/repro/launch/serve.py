@@ -3,6 +3,8 @@ then serve batched queries with the anytime budget.
 
     PYTHONPATH=src python -m repro.launch.serve --docs 10000 --queries 64 \
         [--budget 16] [--kprime 800] [--index-buckets 2048] [--shards 4] \
+        [--sketch-kind full|lite] [--value-dtype f32|bf16|f8] \
+        [--auto-tune --tune-memory-mb 8 --recall-floor 0.9] \
         [--score-backend pallas|grouped|reference] \
         [--wal runs/wal --snapshot-dir runs/snap --snapshot-every 5000 \
          --compact-threshold 0.5]
@@ -10,6 +12,14 @@ then serve batched queries with the anytime budget.
 ``--shards N`` (N > 1) serves through the mesh-sharded streaming index on a
 host-local mesh (N forced host devices, corpus sharded over 'model'), using
 the batched `query_many` path; the default is the single-device index.
+
+``--sketch-kind lite`` serves the §3.3 upper-bound-only half sketch and
+``--value-dtype`` picks the quantized sketch-cell storage — the paper's
+memory/accuracy levers (see docs/levers.md and ``repro.eval``).
+``--auto-tune`` ignores ``--m/--sketch-kind/--value-dtype`` and instead
+grid-searches those levers on a corpus sample (``repro.eval.tune``) for the
+cheapest configuration that fits ``--tune-memory-mb`` of index memory at
+``--docs`` scale while holding ``--recall-floor`` on the sample.
 
 ``--wal DIR`` makes the index durable: every insert/delete is logged to the
 write-ahead log before it is applied, and on startup the launcher *recovers*
@@ -36,6 +46,23 @@ def parse_args(argv=None):
     ap.add_argument("--m", type=int, default=60)
     ap.add_argument("--h", type=int, default=1)
     ap.add_argument("--index-buckets", type=int, default=None)
+    ap.add_argument("--sketch-kind", default="full",
+                    choices=["full", "lite"],
+                    help="lite = upper-bound-only half sketch (§3.3): "
+                         "halves sketch memory; on signed collections "
+                         "recall degrades (measure with repro.eval)")
+    ap.add_argument("--value-dtype", default="bf16",
+                    choices=["f32", "bf16", "f8"],
+                    help="sketch cell storage dtype (quantized cells are "
+                         "directed-rounded and dequantized in-kernel)")
+    ap.add_argument("--auto-tune", action="store_true",
+                    help="pick m/sketch-kind/value-dtype with the "
+                         "repro.eval.tune grid search instead of the flags")
+    ap.add_argument("--tune-memory-mb", type=float, default=8.0, metavar="MB",
+                    help="auto-tune: index memory budget (sketch + inverted "
+                         "index) at --docs scale")
+    ap.add_argument("--recall-floor", type=float, default=0.9, metavar="R",
+                    help="auto-tune: minimum recall@k on the tuning sample")
     ap.add_argument("--score-backend", default=None,
                     choices=["reference", "grouped", "pallas"],
                     help="scoring backend for the query hot path "
@@ -62,6 +89,10 @@ def parse_args(argv=None):
     if args.snapshot_every is not None and args.snapshot_dir is None:
         ap.error("--snapshot-every requires --snapshot-dir "
                  "(periodic snapshots need somewhere to go)")
+    if args.auto_tune and args.wal is not None:
+        ap.error("--auto-tune is incompatible with --wal: durable runs pin "
+                 "their spec to the WAL dir; tune first, then launch with "
+                 "the chosen flags")
     return args
 
 
@@ -72,6 +103,8 @@ def _check_launch_params(args) -> None:
 
     params = {"dataset": args.dataset, "docs": args.docs, "m": args.m,
               "h": args.h, "index_buckets": args.index_buckets,
+              "sketch_kind": args.sketch_kind,
+              "value_dtype": args.value_dtype,
               "shards": args.shards}
     os.makedirs(args.wal, exist_ok=True)
     pfile = os.path.join(args.wal, "launch_params.json")
@@ -117,6 +150,27 @@ def main():
     idx, val = synth.make_corpus(0, ds, args.docs, pad=256)
     qi, qv = synth.make_queries(1, ds, args.queries, pad=96)
     cap = ((args.docs + 31) // 32) * 32
+    sketch_kind, cell_dtype = args.sketch_kind, args.value_dtype
+    if args.auto_tune:
+        from repro.eval import tune as tunelib
+        result = tunelib.tune(
+            idx, val, qi, qv, ds.n,
+            memory_budget_bytes=args.tune_memory_mb * 2 ** 20,
+            recall_floor=args.recall_floor, k=args.k,
+            target_docs=args.docs, sample_docs=min(args.docs, 2048),
+            sample_queries=min(args.queries, 32),
+            ms=tuple(sorted({32, args.m, 96})),
+            cell_dtypes=("bf16", "f8"),
+            kprimes=(args.kprime,), budgets=(args.budget,),
+            h=args.h, index_buckets=args.index_buckets)
+        pt = result.point
+        sketch_kind, cell_dtype, args.m = (pt["sketch_kind"],
+                                           pt["cell_dtype"], pt["m"])
+        print(f"auto-tune: m={pt['m']} sketch_kind={sketch_kind} "
+              f"value_dtype={cell_dtype} -> predicted index "
+              f"{pt['predicted_index_bytes'] / 2**20:.2f} MiB @ {args.docs} "
+              f"docs, sample recall@{args.k}={pt['recall_at_k']:.3f} "
+              f"({'meets constraints' if result.feasible else 'NO feasible point — best-recall fallback'})")
     durable = dict(wal_dir=args.wal, snapshot_dir=args.snapshot_dir,
                    snapshot_every=args.snapshot_every,
                    compact_threshold=args.compact_threshold)
@@ -131,7 +185,8 @@ def main():
         cap_local = ((cap // args.shards + 31) // 32) * 32
         spec = EngineSpec(n=ds.n, m=args.m, h=args.h, capacity=cap_local,
                           max_nnz=256, positive_only=ds.nonneg,
-                          index_buckets=args.index_buckets)
+                          index_buckets=args.index_buckets,
+                          sketch_kind=sketch_kind, dtype=cell_dtype)
         mesh = meshlib.make_mesh((1, args.shards), ("data", "model"))
         if args.wal:
             from repro.persist import DurableShardedSinnamonIndex
@@ -141,7 +196,8 @@ def main():
     else:
         spec = EngineSpec(n=ds.n, m=args.m, h=args.h, capacity=cap,
                           max_nnz=256, positive_only=ds.nonneg,
-                          index_buckets=args.index_buckets)
+                          index_buckets=args.index_buckets,
+                          sketch_kind=sketch_kind, dtype=cell_dtype)
         if args.wal:
             from repro.persist import DurableSinnamonIndex
             index = DurableSinnamonIndex.open(spec, **durable)

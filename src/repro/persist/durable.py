@@ -259,7 +259,13 @@ class _DurableOps:
 
 
 class DurableSinnamonIndex(_DurableOps, eng.SinnamonIndex):
-    """Single-device streaming index with WAL + snapshot durability."""
+    """Single-device streaming index with WAL + snapshot durability.
+
+    Same surface as :class:`repro.core.engine.SinnamonIndex`; every mutation
+    is validated, logged (fsync'd) and only then applied, so
+    :meth:`open`-after-crash reproduces the pre-crash state byte-for-byte.
+    See docs/operations.md for the runbook and the on-disk layout.
+    """
 
     def __init__(self, spec: eng.EngineSpec, *, wal_dir: str,
                  snapshot_dir: Optional[str] = None, fsync: bool = True,

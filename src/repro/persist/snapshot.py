@@ -27,10 +27,19 @@ from repro.checkpoint import ckpt
 from repro.core import engine as eng
 from repro.serving.sharded import ShardedSinnamonIndex, shard_state
 
-# v2: SinnamonState.ids became packed uint32[C, 2] lo/hi words (int64
-# external ids with jax x64 off).  v1 snapshots have an int32[C] ids leaf
-# and cannot be materialised into the current state template.
-FORMAT = "sinnamon-snapshot-v2"
+# Format history (older formats are refused with an explicit error in
+# restore_parts — restore them with the version that wrote them, or re-index):
+#   v1: int32[C] ids leaf (pre packed-int64 ids).
+#   v2: ids became packed uint32[C, 2] lo/hi words.
+#   v3: spec grew the accuracy levers `sketch_kind` (lite = no `l` leaf on
+#       signed collections) and quantized cell dtypes (f8 sketch cells are
+#       stored as raw uint8 views).  A v2 recipe never recorded those
+#       fields, so restoring one means *assuming* defaults for levers that
+#       shape the state template; the policy here (as everywhere in
+#       recovery) is an explicit refusal over a silent assumption — v2
+#       writers only ever produced default-lever states, but the reader
+#       cannot verify that from the recipe alone.
+FORMAT = "sinnamon-snapshot-v3"
 
 
 def _spec_dict(spec: eng.EngineSpec) -> dict:

@@ -42,7 +42,11 @@ def _corpus_spec(mesh: Mesh):
 
 
 def state_pspecs(mesh: Mesh, positive_only: bool = False) -> eng.SinnamonState:
-    """PartitionSpecs for every SinnamonState leaf (corpus over pod+model)."""
+    """PartitionSpecs for every SinnamonState leaf (corpus over pod+model).
+
+    ``positive_only`` here means "the state has no ``l`` leaf" — pass
+    ``spec.upper_only``, which also covers the §3.3 lite sketch variant.
+    """
     c = _corpus_spec(mesh)
     return eng.SinnamonState(
         mappings=P(),                      # replicated
@@ -121,7 +125,7 @@ def make_search_step(mesh: Mesh, local_spec: eng.EngineSpec, *,
 
     sharded = shard_map(
         local_search, mesh=mesh,
-        in_specs=(state_pspecs(mesh, local_spec.positive_only), qspec, qspec),
+        in_specs=(state_pspecs(mesh, local_spec.upper_only), qspec, qspec),
         out_specs=(qspec, qspec, qspec),
         check_rep=False,
     )
@@ -142,7 +146,7 @@ def make_insert_step(mesh: Mesh, local_spec: eng.EngineSpec):
     mask[S,B])`` → state, with every array's leading axis sharded over the
     corpus axes (``ids`` are packed uint32 lo/hi words, engine.pack_ids64)."""
     c = _corpus_spec(mesh)
-    sspec = state_pspecs(mesh, local_spec.positive_only)
+    sspec = state_pspecs(mesh, local_spec.upper_only)
     uspec = P(c)
 
     def local_insert(state, slots, eids, idx, val, mask):
@@ -159,7 +163,7 @@ def make_insert_step(mesh: Mesh, local_spec: eng.EngineSpec):
 def make_delete_step(mesh: Mesh, local_spec: eng.EngineSpec):
     """``step(state, slots[S,B], mask[S,B])`` → state (shard-local deletes)."""
     c = _corpus_spec(mesh)
-    sspec = state_pspecs(mesh, local_spec.positive_only)
+    sspec = state_pspecs(mesh, local_spec.upper_only)
     uspec = P(c)
 
     def local_delete(state, slots, mask):
@@ -181,7 +185,7 @@ def make_grow_step(mesh: Mesh, local_spec: eng.EngineSpec,
     numbering *within a shard* is preserved and no collective is emitted.
     """
     new_spec = dataclasses.replace(local_spec, capacity=new_local_capacity)
-    sspec_in = state_pspecs(mesh, local_spec.positive_only)
+    sspec_in = state_pspecs(mesh, local_spec.upper_only)
 
     def local_grow(state):
         return eng.grow_state(state, local_spec, new_spec)
@@ -194,7 +198,7 @@ def make_grow_step(mesh: Mesh, local_spec: eng.EngineSpec,
 def make_compact_step(mesh: Mesh, local_spec: eng.EngineSpec):
     """``step(state)`` → state with every shard's dirty sketch columns rebuilt
     from its local VecStore slice (shard-local; no collectives)."""
-    sspec = state_pspecs(mesh, local_spec.positive_only)
+    sspec = state_pspecs(mesh, local_spec.upper_only)
 
     def local_compact(state):
         return eng.compact_state(state, local_spec)
@@ -207,7 +211,7 @@ def make_compact_step(mesh: Mesh, local_spec: eng.EngineSpec):
 def make_drift_step(mesh: Mesh, local_spec: eng.EngineSpec):
     """``step(state)`` → f32[C_global] per-slot sketch overestimate."""
     c = _corpus_spec(mesh)
-    sspec = state_pspecs(mesh, local_spec.positive_only)
+    sspec = state_pspecs(mesh, local_spec.upper_only)
 
     def local_drift(state):
         return eng.slot_drift(state, local_spec)

@@ -1,0 +1,253 @@
+"""Quality gates for the accuracy-lever subsystem (repro.eval + variants).
+
+Covers the ISSUE 5 acceptance surface: the lite / quantized sketch variants
+hold a recall floor on seeded corpora, the snapshot v2→v3 incompatibility is
+an explicit error, the auto-tuner's answer actually meets its constraints,
+and the measured per-coordinate overestimate respects the §5 theory bound at
+the configured confidence (slack).
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import theory
+from repro.core.engine import EngineSpec, SinnamonIndex
+from repro.data import synth
+from repro.eval import bounds as boundslib
+from repro.eval import recall as harness
+from repro.eval import tune as tunelib
+
+_DOCS, _QUERIES, _K = 1024, 16, 10
+
+
+def _corpus(kind):
+    if kind == "gauss":
+        ds = synth.SparseDatasetSpec("eval_gauss", n=2048, psi_doc=32,
+                                     psi_query=16, value_dist="gaussian")
+    else:
+        ds = synth.SparseDatasetSpec("eval_text", n=4096, psi_doc=48,
+                                     psi_query=16, value_dist="lognormal",
+                                     value_param=0.6, nonneg=True,
+                                     activation="zipf")
+    idx, val = synth.make_corpus(0, ds, _DOCS, pad=64)
+    qi, qv = synth.make_queries(1, ds, _QUERIES, pad=24)
+    return ds, idx, val, qi, qv
+
+
+@pytest.fixture(scope="module")
+def gauss():
+    return _corpus("gauss")
+
+
+@pytest.fixture(scope="module")
+def text():
+    return _corpus("text")
+
+
+def test_lite_halves_sketch_and_holds_recall_floor(text):
+    ds, idx, val, qi, qv = text
+    pts = harness.frontier(idx, val, qi, qv, ds.n,
+                           [dict(m=48, sketch_kind="full"),
+                            dict(m=48, sketch_kind="lite")], k=_K, reps=1)
+    full, lite = pts
+    assert lite["sketch_bytes"] * 2 == full["sketch_bytes"]
+    assert lite["recall_at_k"] >= 0.9
+    assert full["recall_at_k"] - lite["recall_at_k"] <= 0.05
+
+
+def test_quantized_cells_hold_recall_floor(gauss):
+    ds, idx, val, qi, qv = gauss
+    pts = harness.frontier(idx, val, qi, qv, ds.n,
+                           [dict(m=48, cell_dtype="bf16"),
+                            dict(m=48, cell_dtype="f8")], k=_K, reps=1)
+    bf16, f8 = pts
+    assert f8["sketch_bytes"] * 2 == bf16["sketch_bytes"]
+    assert f8["recall_at_k"] >= 0.9
+    # Directed rounding keeps Theorem 5.1: a quantized upper bound never
+    # undershoots the (float32-stored) truth.
+    spec = harness.lever_spec(ds.n, _DOCS, idx.shape[1], m=48,
+                              cell_dtype="f8")
+    index = harness.build_index(spec, idx, val)
+    errs = boundslib.per_coordinate_overestimate(index)
+    assert errs.min() >= 0.0
+
+
+def test_lite_on_signed_data_degrades_not_breaks(gauss):
+    """On signed values lite loses the lower bound (recall drops) but the
+    engine stays functional and the upper-bound property is intact."""
+    ds, idx, val, qi, qv = gauss
+    pts = harness.frontier(idx, val, qi, qv, ds.n,
+                           [dict(m=48, sketch_kind="lite")], k=_K, reps=1)
+    assert 0.2 <= pts[0]["recall_at_k"] <= 1.0
+    spec = harness.lever_spec(ds.n, _DOCS, idx.shape[1], m=48,
+                              sketch_kind="lite")
+    index = harness.build_index(spec, idx, val)
+    assert boundslib.per_coordinate_overestimate(index).min() >= 0.0
+
+
+def test_backend_agreement_on_variants(gauss):
+    """pallas (fused) and reference backends return identical ids for the
+    lite and f8 variants too — switching backends stays a latency decision."""
+    ds, idx, val, qi, qv = gauss
+    for kind, dt in (("lite", "bf16"), ("full", "f8"), ("lite", "f8")):
+        spec = harness.lever_spec(ds.n, 256, idx.shape[1], m=32,
+                                  sketch_kind=kind, cell_dtype=dt)
+        index = harness.build_index(spec, idx[:256], val[:256])
+        for b in range(4):
+            ref, _ = index.search(qi[b], qv[b], k=_K, kprime=50,
+                                  backend="reference")
+            fused, _ = index.search(qi[b], qv[b], k=_K, kprime=50,
+                                    backend="pallas")
+            assert ref.tolist() == fused.tolist(), (kind, dt, b)
+
+
+def test_empirical_overestimate_respects_theory(gauss):
+    ds, idx, val, qi, qv = gauss
+    for dt in ("bf16", "f8"):
+        spec = harness.lever_spec(ds.n, _DOCS, idx.shape[1], m=64,
+                                  cell_dtype=dt)
+        index = harness.build_index(spec, idx, val)
+        out = boundslib.check_upper_bounds(
+            index, value_dist=theory.gaussian_dist(0.0, 1.0),
+            deltas=(0.25, 0.5, 1.0), slack=0.05)
+        assert out["ok"], (dt, out["checks"])
+        assert out["min_err"] >= 0.0
+
+
+def test_churn_drift_measured_and_compacted_away(gauss):
+    ds, idx, val, _, _ = gauss
+    spec = harness.lever_spec(ds.n, 512, idx.shape[1], m=48)
+    out = boundslib.churn_overestimate(spec, idx[:512], val[:512],
+                                       rounds=1, frac=0.25)
+    assert out["churned"]["drift_max"] > 0.0
+    assert out["churned"]["err_mean"] >= out["clean"]["err_mean"]
+    assert out["compacted"]["drift_max"] == 0.0
+    assert out["compacted"]["err_mean"] == pytest.approx(
+        out["clean"]["err_mean"], abs=1e-6)
+    assert out["columns_rebuilt"] > 0
+
+
+def test_tuner_meets_constraints(gauss):
+    ds, idx, val, qi, qv = gauss
+    budget = 1.5e6
+    floor = 0.8
+    res = tunelib.tune(idx, val, qi, qv, ds.n,
+                       memory_budget_bytes=budget, recall_floor=floor,
+                       k=_K, ms=(32, 64), cell_dtypes=("bf16", "f8"),
+                       sample_docs=768, sample_queries=12)
+    assert res.feasible
+    assert res.point["recall_at_k"] >= floor
+    assert res.point["predicted_index_bytes"] <= budget
+    assert tunelib.spec_index_bytes(res.spec) <= budget
+    # The returned spec is ready to serve at target scale.
+    assert res.spec.capacity >= _DOCS
+    index = SinnamonIndex(res.spec)
+    index.insert_many(list(range(64)), idx[:64], val[:64])
+    ids, _ = index.search(qi[0], qv[0], k=5, kprime=res.kprime)
+    assert len(ids) == 5
+
+
+def test_tuner_reports_infeasible_budget(gauss):
+    ds, idx, val, qi, qv = gauss
+    res = tunelib.tune(idx, val, qi, qv, ds.n,
+                       memory_budget_bytes=1024,   # nothing fits 1 KiB
+                       recall_floor=0.5, k=_K, ms=(32,),
+                       sample_docs=256, sample_queries=8)
+    assert not res.feasible
+
+
+def test_snapshot_v2_refused_explicitly(tmp_path, gauss):
+    from repro.persist import snapshot
+
+    ds, idx, val, _, _ = gauss
+    spec = harness.lever_spec(ds.n, 64, idx.shape[1], m=16)
+    index = harness.build_index(spec, idx[:64], val[:64])
+    snap_dir = str(tmp_path / "snap")
+    snapshot.save(snap_dir, index, wal_lsn=0)
+    manifest_path = os.path.join(snapshot.step_path(snap_dir, 1),
+                                 "manifest.json")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    manifest["extra"]["format"] = "sinnamon-snapshot-v2"
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(ValueError) as exc:
+        snapshot.load_single(snap_dir)
+    msg = str(exc.value)
+    assert "sinnamon-snapshot-v2" in msg
+    assert "sinnamon-snapshot-v3" in msg
+    assert "incompatible" in msg
+
+
+def test_snapshot_v3_roundtrips_variant_state(tmp_path, gauss):
+    """lite + f8 state (no l leaf, uint8-viewed cells) snapshot-restores
+    byte-identically through the v3 format."""
+    import jax.numpy as jnp
+
+    from repro.persist import snapshot
+
+    ds, idx, val, qi, qv = gauss
+    spec = harness.lever_spec(ds.n, 64, idx.shape[1], m=16,
+                              sketch_kind="lite", cell_dtype="f8")
+    index = harness.build_index(spec, idx[:64], val[:64])
+    snap_dir = str(tmp_path / "snap")
+    snapshot.save(snap_dir, index, wal_lsn=0)
+    restored, lsn = snapshot.load_single(snap_dir)
+    assert lsn == 0
+    assert restored.spec == index.spec
+    assert restored.state.l is None
+    assert restored.state.u.dtype == jnp.dtype("float8_e4m3fn")
+    assert bool(jnp.all(restored.state.u == index.state.u))
+    ids_a, _ = index.search(qi[0], qv[0], k=5)
+    ids_b, _ = restored.search(qi[0], qv[0], k=5)
+    assert ids_a.tolist() == ids_b.tolist()
+
+
+def test_spec_rejects_bad_levers():
+    with pytest.raises(ValueError, match="sketch_kind"):
+        EngineSpec(n=64, m=8, capacity=32, max_nnz=8, sketch_kind="half")
+    with pytest.raises(ValueError, match="cell dtype"):
+        EngineSpec(n=64, m=8, capacity=32, max_nnz=8, dtype="int8")
+    # Lever aliases canonicalize ("f8" must NOT parse as numpy float64).
+    spec = EngineSpec(n=64, m=8, capacity=32, max_nnz=8, dtype="f8")
+    assert spec.dtype == "float8_e4m3fn"
+
+
+def test_exact_topk_matches_bruteforce_oracle(gauss):
+    from repro.core.linscan import brute_force_topk
+
+    ds, idx, val, qi, qv = gauss
+    fast = harness.exact_topk_ids(idx[:256], val[:256], qi[:4], qv[:4],
+                                  ds.n, _K)
+    for b in range(4):
+        ref, _ = brute_force_topk(idx[:256], val[:256], qi[b], qv[b],
+                                  ds.n, _K)
+        assert set(fast[b].tolist()) == set(ref.tolist())
+
+
+def test_frontier_rejects_unknown_lever(gauss):
+    ds, idx, val, qi, qv = gauss
+    with pytest.raises(ValueError, match="unknown lever"):
+        harness.frontier(idx[:64], val[:64], qi[:2], qv[:2], ds.n,
+                         [dict(m=16, sketchkind="lite")])
+
+
+def test_quantize_directed_f8_bounds():
+    """Directed f8 rounding brackets every finite value (u above, l below)."""
+    import jax.numpy as jnp
+
+    from repro.core import sketch
+
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 5, 512),
+                    jnp.float32)
+    up = sketch.quantize_directed(x, "f8", toward_pos_inf=True)
+    dn = sketch.quantize_directed(x, "f8", toward_pos_inf=False)
+    assert bool(jnp.all(up.astype(jnp.float32) >= x))
+    assert bool(jnp.all(dn.astype(jnp.float32) <= x))
+    # saturation: beyond the format's range the bound clamps at max finite
+    big = jnp.asarray([1e4, -1e4], jnp.float32)
+    assert float(sketch.quantize_directed(big, "f8", True)[0]) == 448.0
+    assert float(sketch.quantize_directed(big, "f8", False)[1]) == -448.0
