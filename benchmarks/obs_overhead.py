@@ -1,0 +1,107 @@
+"""Observability overhead benchmark (the ISSUE 6 acceptance gate).
+
+Measures the serving-path cost of the metrics registry by timing the SAME
+query stream through three QueryServer configurations over one shared index:
+
+* ``off``    — ``NULL_REGISTRY`` injected: every metric call is a no-op
+  attribute chain, the zero-instrumentation baseline.
+* ``on``     — a real ``MetricsRegistry``: per-query latency histograms,
+  batch-size histogram, per-backend counters (the always-on production
+  path; ``trace_every=0`` so no staged dispatches).
+* ``traced`` — metrics plus ``trace_every=8``: every 8th batch runs the
+  staged per-stage path with device syncs between spans (reported for
+  context; sampling keeps it off the common case so it is NOT gated).
+
+Rounds alternate off/on/traced so drift (thermal, allocator state) hits all
+three equally, and p50s come from external ``perf_counter`` timing around
+``query_many`` — the registry never times itself.
+
+Gate: ``on`` p50 at batch 8 must be within 5% of ``off`` p50
+(``obs_overhead/gate``); the row errors the run (and CI) when exceeded.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+_BATCH = 8
+_ROUNDS = 40
+_GATE_PCT = 5.0
+
+
+def _bench(docs=2048, batch=_BATCH, rounds=_ROUNDS):
+    from benchmarks.query_path import _QUERIES, _build
+    from repro.obs import NULL_REGISTRY, MetricsRegistry
+    from repro.serving.serve import QueryServer
+
+    index, _, _, qi, qv = _build(docs)
+    servers = {
+        "off": QueryServer(index, k=10, kprime=100, registry=NULL_REGISTRY),
+        "on": QueryServer(index, k=10, kprime=100,
+                          registry=MetricsRegistry()),
+        "traced": QueryServer(index, k=10, kprime=100,
+                              registry=MetricsRegistry(), trace_every=8),
+    }
+    for srv in servers.values():                     # compile warmup
+        for _ in range(8):                           # incl. staged path jits
+            srv.query_many(qi[:batch], qv[:batch])
+
+    samples = {name: [] for name in servers}
+    for _ in range(rounds):
+        # interleave so machine drift is shared, not attributed to one mode
+        for name, srv in servers.items():
+            t0 = time.perf_counter()
+            for lo in range(0, _QUERIES, batch):
+                srv.query_many(qi[lo:lo + batch], qv[lo:lo + batch])
+            samples[name].append((time.perf_counter() - t0) * 1e3
+                                 / _QUERIES)
+    return ({name: float(np.median(v)) for name, v in samples.items()},
+            {name: float(np.percentile(v, 99)) for name, v in samples.items()})
+
+
+def obs_overhead():
+    """Registry on/off/traced p50/p99 per-query latency + the <=5% gate."""
+    p50, p99 = _bench()
+    overhead_pct = (p50["on"] / max(p50["off"], 1e-9) - 1.0) * 100.0
+    traced_pct = (p50["traced"] / max(p50["off"], 1e-9) - 1.0) * 100.0
+    rows = [
+        (f"obs_overhead/b{_BATCH}/off_p50_ms", f"{p50['off']:.4f}",
+         "NULL_REGISTRY baseline"),
+        (f"obs_overhead/b{_BATCH}/on_p50_ms", f"{p50['on']:.4f}",
+         "metrics registry on"),
+        (f"obs_overhead/b{_BATCH}/traced_p50_ms", f"{p50['traced']:.4f}",
+         "metrics + trace_every=8 (not gated)"),
+        (f"obs_overhead/b{_BATCH}/off_p99_ms", f"{p99['off']:.4f}", ""),
+        (f"obs_overhead/b{_BATCH}/on_p99_ms", f"{p99['on']:.4f}", ""),
+        (f"obs_overhead/b{_BATCH}/traced_p99_ms", f"{p99['traced']:.4f}",
+         ""),
+        (f"obs_overhead/b{_BATCH}/overhead_pct", f"{overhead_pct:.2f}",
+         f"% (gate <= {_GATE_PCT})"),
+        (f"obs_overhead/b{_BATCH}/traced_overhead_pct",
+         f"{traced_pct:.2f}", "%"),
+    ]
+    if overhead_pct > _GATE_PCT:
+        raise RuntimeError(
+            f"metrics overhead {overhead_pct:.2f}% > {_GATE_PCT}% gate "
+            f"(off p50 {p50['off']:.4f}ms vs on p50 {p50['on']:.4f}ms)")
+    rows.append((f"obs_overhead/b{_BATCH}/gate", "PASS",
+                 f"on within {_GATE_PCT}% of off"))
+    return rows
+
+
+ALL = [obs_overhead]
+
+
+if __name__ == "__main__":
+    # Standalone entry: `python benchmarks/obs_overhead.py [--json PATH]`.
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks import run as _run
+
+    sys.argv = [sys.argv[0], "obs_overhead"] + sys.argv[1:]
+    _run.main()

@@ -73,7 +73,7 @@ def _bench_backends(docs, batches, budgets, reps):
                 "" if budget is None else f"/budget{budget}")
             for bs in batches:
                 server.query_many(qi[:bs], qv[:bs])       # compile warmup
-                server.stats["latency_ms"].clear()
+                server.reset_stats()
                 for _ in range(reps):
                     for lo in range(0, _QUERIES, bs):
                         server.query_many(qi[lo:lo + bs], qv[lo:lo + bs])

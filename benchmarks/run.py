@@ -3,8 +3,10 @@
 # map so CI can archive the perf trajectory as BENCH_<n>.json artifacts.
 # Exits non-zero if any table function errors, so CI smoke jobs fail loudly.
 import argparse
+import datetime
 import json
 import os
+import subprocess
 import sys
 import time
 
@@ -23,12 +25,22 @@ def parse_args(argv=None):
     return ap.parse_args(argv)
 
 
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "-C", _ROOT, "rev-parse", "HEAD"], capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+    except Exception:                               # noqa: BLE001
+        return "unknown"
+
+
 def main() -> None:
-    from benchmarks import paper, persist, query_path, recall, streaming
+    from benchmarks import (obs_overhead, paper, persist, query_path,
+                            recall, streaming)
 
     args = parse_args()
     fns = [fn for fn in paper.ALL + streaming.ALL + persist.ALL
-           + query_path.ALL + recall.ALL
+           + query_path.ALL + recall.ALL + obs_overhead.ALL
            if not args.only or args.only in fn.__name__]
     if not fns:
         print(f"no benchmark matches {args.only!r}", file=sys.stderr)
@@ -53,7 +65,11 @@ def main() -> None:
               file=sys.stderr)
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"rows": results, "failed": failed}, f, indent=1)
+            json.dump({"bench_schema_version": 2, "git_sha": _git_sha(),
+                       "generated_utc": datetime.datetime.now(
+                           datetime.timezone.utc).isoformat(
+                               timespec="seconds"),
+                       "rows": results, "failed": failed}, f, indent=1)
         print(f"# wrote {args.json}", file=sys.stderr)
     if failed:
         sys.exit(1)

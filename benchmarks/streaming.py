@@ -45,7 +45,7 @@ for shards in {shard_counts}:
     tput = docs / (time.perf_counter() - t0)
     server = QueryServer(index, k=10, kprime=50)
     server.query_many(qi[:batch], qv[:batch])        # compile warmup
-    server.stats["latency_ms"].clear()
+    server.reset_stats()
     for lo in range(0, queries, batch):
         server.query_many(qi[lo:lo + batch], qv[lo:lo + batch])
     lat = server.latency_percentiles()

@@ -13,6 +13,7 @@ import numpy as np
 from repro.core.engine import EngineSpec, SinnamonIndex
 from repro.core.linscan import brute_force_topk
 from repro.data import synth
+from repro.obs import MetricsRegistry
 from repro.serving.serve import HedgedServer, QueryServer
 
 
@@ -41,7 +42,8 @@ def main():
              for b in range(args.queries)]
 
     for budget in (None, 16, 8):
-        server = QueryServer(index, k=args.k, kprime=800, budget=budget)
+        server = QueryServer(index, k=args.k, kprime=800, budget=budget,
+                             registry=MetricsRegistry())
         recalls = []
         for b in range(args.queries):
             ids, _ = server.query(qi[b], qv[b])
@@ -53,13 +55,14 @@ def main():
               f"p99={lat['p99']:.1f}ms")
 
     # straggler mitigation: 3 replicas, hedged
-    replicas = [QueryServer(index, k=args.k, kprime=800) for _ in range(3)]
+    replicas = [QueryServer(index, k=args.k, kprime=800,
+                            registry=MetricsRegistry()) for _ in range(3)]
     hedged = HedgedServer(replicas, straggler_prob=0.15, straggler_mult=10)
     for b in range(args.queries):
         hedged.query(qi[b], qv[b])
-    solo = np.asarray(replicas[0].stats["latency_ms"])
+    solo_p99 = replicas[0].latency_percentiles()["p99"]
     eff = np.asarray(hedged.effective_latency_ms)
-    print(f"hedged replicas: unhedged p99≈{np.percentile(solo, 99)*3.1:.1f}"
+    print(f"hedged replicas: unhedged p99≈{solo_p99*3.1:.1f}"
           f"ms(with stragglers) → hedged p99={np.percentile(eff, 99):.1f}ms")
 
 

@@ -31,6 +31,7 @@ Deletion  = bit-clear + slot recycling (paper §4.3): the sketch column is left
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -38,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitindex, sketch
+from repro.obs import metrics as obs_metrics
 from repro.storage import vecstore
 
 Array = jax.Array
@@ -586,6 +588,24 @@ def search(state: SinnamonState, spec: EngineSpec, q_idx: Array, q_val: Array,
     return state.ids[slots], top_scores, slots
 
 
+def rerank_topk(state, cand_scores, cand_slots, q_idx, q_val, k):
+    """Algorithm 7 back half: sparse exact rerank of [B, k'] candidates.
+
+    Gathers only the candidate CSR rows (no dense R^n query), masks slots
+    whose upper bound was gated to -inf, and returns the exact top-k:
+    (packed ids uint32[B, k, 2], scores f32[B, k], slots int32[B, k]).
+    Shared by :func:`search_batch` and the staged serving path so both
+    rerank bit-identically.
+    """
+    exact = jax.vmap(
+        lambda s_, i, v: vecstore.exact_scores_sparse(state.store, s_, i, v)
+    )(cand_slots, q_idx, q_val)
+    exact = jnp.where(jnp.isneginf(cand_scores), -jnp.inf, exact)
+    top_scores, pos = jax.lax.top_k(exact, k)
+    slots = jnp.take_along_axis(cand_slots, pos, axis=-1)
+    return state.ids[slots], top_scores, slots
+
+
 def search_batch(state, spec, q_idx, q_val, k, kprime, budget=None,
                  filter_mask=None, score_fn=None,
                  backend: Optional[str] = None):
@@ -597,18 +617,56 @@ def search_batch(state, spec, q_idx, q_val, k, kprime, budget=None,
     cand_scores, cand_slots = topk_candidates(
         state, spec, q_idx, q_val, kprime, budget, filter_mask,
         score_fn=score_fn, backend=backend)
-    exact = jax.vmap(
-        lambda s_, i, v: vecstore.exact_scores_sparse(state.store, s_, i, v)
-    )(cand_slots, q_idx, q_val)
-    exact = jnp.where(jnp.isneginf(cand_scores), -jnp.inf, exact)
-    top_scores, pos = jax.lax.top_k(exact, k)
-    slots = jnp.take_along_axis(cand_slots, pos, axis=-1)
-    return state.ids[slots], top_scores, slots
+    return rerank_topk(state, cand_scores, cand_slots, q_idx, q_val, k)
 
 
 # ---------------------------------------------------------------------------
 # Host wrapper: slot allocation, id mapping, growth
 # ---------------------------------------------------------------------------
+
+class _WritePathMetrics:
+    """Write-path metric handles, lazily bound and revalidated against the
+    current process-global registry (so `obs.metrics.set_registry` in tests
+    takes effect on indexes created earlier).  Shared by `SinnamonIndex`
+    and `ShardedSinnamonIndex`."""
+
+    __slots__ = ("_registry", "_ops", "_docs", "_batch")
+    _OPS = ("insert", "insert_many", "delete", "delete_many", "grow", "compact")
+
+    def __init__(self):
+        self._registry = None
+
+    def _bind(self):
+        reg = obs_metrics.get_registry()
+        if reg is not self._registry:
+            self._ops = {
+                op: (reg.counter("repro_engine_ops_total",
+                                 "Engine mutations applied.", labels={"op": op}),
+                     reg.histogram(
+                         "repro_engine_update_ms",
+                         "Host wall time of one mutation, scatter dispatch "
+                         "included (async device work not synced).",
+                         labels={"op": op}))
+                for op in self._OPS}
+            self._docs = {
+                d: reg.counter("repro_engine_docs_total",
+                               "Documents written/removed.", labels={"op": d})
+                for d in ("insert", "delete")}
+            self._batch = reg.histogram(
+                "repro_engine_update_batch_docs",
+                "Documents per mutation call.",
+                buckets=obs_metrics.DEFAULT_COUNT_BUCKETS)
+            self._registry = reg
+
+    def record(self, op: str, t0_s: float, ndocs: int = 0) -> None:
+        self._bind()
+        count, hist = self._ops[op]
+        count.inc()
+        hist.observe((time.perf_counter() - t0_s) * 1e3)
+        if ndocs:
+            self._batch.observe(ndocs)
+            self._docs["delete" if op.startswith("delete") else "insert"].inc(ndocs)
+
 
 class SinnamonIndex:
     """Streaming host-facing index (paper §4's full system, single device).
@@ -641,9 +699,11 @@ class SinnamonIndex:
             static_argnames=("score_fn", "backend"))
         self._compact = jax.jit(compact_state, static_argnums=(1,))
         self._slot_drift = jax.jit(slot_drift, static_argnums=(1,))
+        self._obs = _WritePathMetrics()
 
     # -- streaming updates ---------------------------------------------------
     def insert(self, ext_id: int, idx, val) -> None:
+        t0 = time.perf_counter()
         ext_id = int(ext_id)
         if ext_id in self._id2slot:
             self.delete(ext_id)
@@ -654,8 +714,10 @@ class SinnamonIndex:
         self.state = self._insert(self.state, self.spec, slot,
                                   jnp.asarray(pack_ids64(ext_id)), idx, val)
         self._id2slot[ext_id] = slot
+        self._obs.record("insert", t0, 1)
 
     def insert_many(self, ext_ids, idx_batch, val_batch) -> None:
+        t0 = time.perf_counter()
         ext_ids = [int(e) for e in ext_ids]
         if len(set(ext_ids)) != len(ext_ids):
             # Sequential overwrite semantics (same as the sharded index):
@@ -678,11 +740,14 @@ class SinnamonIndex:
             jnp.asarray(idx_batch), jnp.asarray(val_batch))
         for eid, slot in zip(ext_ids, slots):
             self._id2slot[int(eid)] = int(slot)
+        self._obs.record("insert_many", t0, bn)
 
     def delete(self, ext_id: int) -> None:
+        t0 = time.perf_counter()
         slot = self._id2slot.pop(ext_id)
         self.state = self._delete(self.state, self.spec, slot)
         self._free.append(slot)
+        self._obs.record("delete", t0, 1)
 
     # -- retrieval -------------------------------------------------------------
     def search(self, q_idx, q_val, k: int, kprime: Optional[int] = None,
@@ -720,6 +785,7 @@ class SinnamonIndex:
     # -- capacity management ----------------------------------------------------
     def grow(self, new_capacity: int) -> None:
         """Reallocate to a larger capacity, preserving slot numbering."""
+        t0 = time.perf_counter()
         spec = self.spec
         if new_capacity <= spec.capacity or new_capacity % 32 != 0:
             raise ValueError("new capacity must be a larger multiple of 32")
@@ -728,6 +794,7 @@ class SinnamonIndex:
         self.spec = new_spec
         self._free = (list(range(new_capacity - 1, spec.capacity - 1, -1))
                       + self._free)
+        self._obs.record("grow", t0)
 
     # -- maintenance -----------------------------------------------------------
     def compact(self) -> int:
@@ -736,9 +803,11 @@ class SinnamonIndex:
         Restores the Theorem 5.1 upper-bound tightness lost to §4.3
         delete-then-recycle churn.  Returns the number of columns rebuilt.
         """
+        t0 = time.perf_counter()
         n_dirty = int(jnp.sum(self.state.dirty))
         if n_dirty:
             self.state = self._compact(self.state, self.spec)
+        self._obs.record("compact", t0)
         return n_dirty
 
     def slot_drift(self) -> np.ndarray:

@@ -121,7 +121,7 @@ def evaluate_index(index: eng.SinnamonIndex, q_idx, q_val,
     server = QueryServer(index, k=k, kprime=kprime or 10 * k, budget=budget,
                          score_backend=backend)
     ids, _ = server.query_many(q_idx, q_val)      # warm-up + answers
-    server.stats["latency_ms"].clear()
+    server.reset_stats()
     for _ in range(reps):
         ids, _ = server.query_many(q_idx, q_val)
     recalls = [recall_at_k(ids[b], truth[b]) for b in range(len(q_idx))]

@@ -139,23 +139,19 @@ def prepare_fused_operands(state, q_idx, q_val, budget=None, spec=None):
     return qv, pos, rows, qbits, skmat, True
 
 
-def sinnamon_topk_batch(state, spec, q_idx, q_val, kprime, *, budget=None,
-                        ok=None, tile_c=None, query_block=2,
-                        use_kernel=None, interpret=None):
-    """Fused candidate generation: (vals f32[B, kprime], slots int32[B, kprime]).
+def sinnamon_tile_topk(state, spec, q_idx, q_val, kprime, *, budget=None,
+                       ok=None, tile_c=None, query_block=2,
+                       use_kernel=None, interpret=None):
+    """Sketch-scan stage of the fused path: per-tile candidates, pre-merge.
 
-    The full search front half in one pipeline: prepare sign-split operands,
-    pad the slot axis to a tile multiple (padded slots are gated to -inf so
-    they can never become candidates — works at any post-``grow()``
-    capacity), run the fused score→top-kp tile program, log-tree merge.
-
-    Implementation selection: the Pallas kernel where it compiles (TPU), the
-    XLA twin of the same tile program elsewhere (CPU serving); pass
-    ``use_kernel=True`` to force the kernel (interpret-mode validation).
-
-    ``ok``: optional bool[C] keep-mask (active & filter); ordering of the
-    result is (upper-bound desc, slot asc) — lax.top_k order over the gated
-    fused scores.
+    Prepares sign-split operands, pads the slot axis to a tile multiple
+    (padded slots are gated to -inf so they can never become candidates —
+    works at any post-``grow()`` capacity) and runs the fused
+    score→top-kp tile program.  Returns ``(vals f32[B, T, kp],
+    slots int32[B, T, kp])`` still per-tile; feed through
+    :func:`repro.kernels.sinnamon_score.merge_tile_topk` (or call
+    :func:`sinnamon_topk_batch` which does both).  Split out so the staged
+    query tracer can time sketch scan and top-k merge separately.
     """
     C = state.u.shape[1]
     if kprime > C:
@@ -174,13 +170,34 @@ def sinnamon_topk_batch(state, spec, q_idx, q_val, kprime, *, budget=None,
     kp = min(kprime, tile_c)
     if use_kernel:
         interpret = _interpret() if interpret is None else interpret
-        vals, slots = _sinn.sinnamon_score_topk(
+        return _sinn.sinnamon_score_topk(
             qv, pos, rows, qbits_p, gate, skmat, kp=kp, tile_c=tile_c,
             one_sided=one_sided, interpret=interpret)
-    else:
-        vals, slots = _sinn.fused_topk_xla(
-            qv, pos, rows, qbits_p, gate, skmat, kp=kp, tile_c=tile_c,
-            one_sided=one_sided, query_block=query_block)
+    return _sinn.fused_topk_xla(
+        qv, pos, rows, qbits_p, gate, skmat, kp=kp, tile_c=tile_c,
+        one_sided=one_sided, query_block=query_block)
+
+
+def sinnamon_topk_batch(state, spec, q_idx, q_val, kprime, *, budget=None,
+                        ok=None, tile_c=None, query_block=2,
+                        use_kernel=None, interpret=None):
+    """Fused candidate generation: (vals f32[B, kprime], slots int32[B, kprime]).
+
+    The full search front half in one pipeline: the per-tile scan
+    (:func:`sinnamon_tile_topk`) followed by the log-tree merge.
+
+    Implementation selection: the Pallas kernel where it compiles (TPU), the
+    XLA twin of the same tile program elsewhere (CPU serving); pass
+    ``use_kernel=True`` to force the kernel (interpret-mode validation).
+
+    ``ok``: optional bool[C] keep-mask (active & filter); ordering of the
+    result is (upper-bound desc, slot asc) — lax.top_k order over the gated
+    fused scores.
+    """
+    vals, slots = sinnamon_tile_topk(
+        state, spec, q_idx, q_val, kprime, budget=budget, ok=ok,
+        tile_c=tile_c, query_block=query_block, use_kernel=use_kernel,
+        interpret=interpret)
     return _sinn.merge_tile_topk(vals, slots, kprime)
 
 

@@ -28,6 +28,21 @@ re-indexing — so a second run with the same dirs skips the build entirely.
 ``--snapshot-every N`` snapshots after every N logged ops;
 ``--compact-threshold X`` rebuilds recycled sketch columns whenever the max
 per-slot overestimate exceeds X (see repro.persist).
+
+Observability (see docs/observability.md):
+
+* ``--metrics-port P`` serves the process-global metrics registry over
+  HTTP: ``/metrics`` (Prometheus text), ``/metrics.json`` (structured
+  snapshot), ``/healthz``.
+* ``--event-log FILE`` appends one JSON line per query / maintenance op
+  (trace spans attached on sampled queries).
+* ``--trace-every N`` runs every N-th query batch on the staged path,
+  populating per-stage latency histograms (default 32 when metrics or the
+  event log are on, else off; 0 disables).
+* ``--profile-dir DIR`` captures a ``jax.profiler`` trace of the query
+  loop for kernel-level inspection.
+* ``--hold-seconds S`` keeps the process (and the metrics endpoint) alive
+  after the query loop — for scrape-based smoke tests and demos.
 """
 
 from __future__ import annotations
@@ -80,7 +95,24 @@ def parse_args(argv=None):
                     help="snapshot after every N logged ops")
     ap.add_argument("--compact-threshold", type=float, default=None,
                     metavar="X", help="compact when max sketch drift > X")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="P",
+                    help="serve /metrics (Prometheus text) + /metrics.json "
+                         "+ /healthz on this port (0 = OS-assigned)")
+    ap.add_argument("--event-log", default=None, metavar="FILE",
+                    help="append one JSON line per query/maintenance op")
+    ap.add_argument("--trace-every", type=int, default=None, metavar="N",
+                    help="run every N-th query batch on the staged path "
+                         "(per-stage histograms); default 32 when metrics "
+                         "or the event log are enabled, 0 = off")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the query loop")
+    ap.add_argument("--hold-seconds", type=float, default=0.0, metavar="S",
+                    help="keep the process (and metrics endpoint) alive "
+                         "this long after the query loop")
     args = ap.parse_args(argv)
+    if args.trace_every is None:
+        args.trace_every = 32 if (args.metrics_port is not None
+                                  or args.event_log) else 0
     if args.wal is None and (args.snapshot_dir is not None
                              or args.snapshot_every is not None
                              or args.compact_threshold is not None):
@@ -143,8 +175,18 @@ def main():
     from repro.core.linscan import brute_force_topk
     from repro.data import synth
     from repro.distributed import mesh as meshlib
+    from repro.obs import EventLog, MetricsServer, set_event_log
     from repro.serving.serve import QueryServer
     from repro.serving.sharded import ShardedSinnamonIndex
+
+    metrics_server = None
+    if args.metrics_port is not None:
+        metrics_server = MetricsServer(port=args.metrics_port).start()
+        print(f"metrics: {metrics_server.url}/metrics "
+              f"(json: /metrics.json, liveness: /healthz)")
+    if args.event_log:
+        set_event_log(EventLog(args.event_log))
+        print(f"event log: {args.event_log}")
 
     ds = synth.DATASETS[args.dataset]
     idx, val = synth.make_corpus(0, ds, args.docs, pad=256)
@@ -219,7 +261,16 @@ def main():
 
     server = QueryServer(index, k=args.k, kprime=args.kprime,
                          budget=args.budget,
-                         score_backend=args.score_backend)
+                         score_backend=args.score_backend,
+                         trace_every=args.trace_every)
+    profiling = False
+    if args.profile_dir:
+        import jax
+        try:
+            jax.profiler.start_trace(args.profile_dir)
+            profiling = True
+        except Exception as e:                          # noqa: BLE001
+            print(f"profiler unavailable ({e!r}); continuing without")
     recalls = []
     for lo in range(0, args.queries, args.query_batch):
         hi = min(lo + args.query_batch, args.queries)
@@ -228,10 +279,27 @@ def main():
             ids0, _ = brute_force_topk(idx, val, qi[b], qv[b], ds.n, args.k)
             recalls.append(
                 len(set(ids[b - lo].tolist()) & set(ids0.tolist())) / args.k)
+    if profiling:
+        import jax
+        jax.profiler.stop_trace()
+        print(f"profiler trace written to {args.profile_dir}")
     lat = server.latency_percentiles()
     print(f"recall@{args.k}={np.mean(recalls):.3f}  "
           f"p50={lat['p50']:.1f}ms p90={lat['p90']:.1f}ms "
-          f"p99={lat['p99']:.1f}ms")
+          f"p99={lat['p99']:.1f}ms", flush=True)
+    if args.hold_seconds > 0:
+        import time
+        print(f"holding for {args.hold_seconds:.0f}s "
+              f"(metrics stay scrapeable); Ctrl-C to exit", flush=True)
+        try:
+            time.sleep(args.hold_seconds)
+        except KeyboardInterrupt:
+            pass
+    log = set_event_log(None)
+    if log is not None:
+        log.close()
+    if metrics_server is not None:
+        metrics_server.stop()
 
 
 if __name__ == "__main__":

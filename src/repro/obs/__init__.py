@@ -1,0 +1,46 @@
+"""Dependency-free observability: metrics registry, span tracer, JSONL
+event log, and a stdlib HTTP exposition server.
+
+Everything in this package is importable without JAX so the hot paths can
+instrument themselves unconditionally; the cost of a disabled registry
+(`NULL_REGISTRY`) is a no-op method call.  See `docs/observability.md`
+for the metric catalog.
+"""
+
+from repro.obs.events import EventLog, emit, get_event_log, set_event_log
+from repro.obs.metrics import (
+    NULL_REGISTRY,
+    Buckets,
+    Counter,
+    Gauge,
+    Histogram,
+    LabelCardinalityError,
+    MetricsRegistry,
+    get_registry,
+    merge_snapshots,
+    parse_exposition,
+    set_registry,
+)
+from repro.obs.server import MetricsServer
+from repro.obs.trace import Span, Trace
+
+__all__ = [
+    "Buckets",
+    "Counter",
+    "EventLog",
+    "Gauge",
+    "Histogram",
+    "LabelCardinalityError",
+    "MetricsRegistry",
+    "MetricsServer",
+    "NULL_REGISTRY",
+    "Span",
+    "Trace",
+    "emit",
+    "get_event_log",
+    "get_registry",
+    "merge_snapshots",
+    "parse_exposition",
+    "set_event_log",
+    "set_registry",
+]

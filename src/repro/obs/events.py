@@ -1,0 +1,79 @@
+"""Structured JSONL event log — one line per query / maintenance op.
+
+The log is append-only newline-delimited JSON so it can be tailed,
+`jq`-filtered, or bulk-loaded without a parser.  A process-global default
+log (set by `launch/serve.py --event-log`) receives events from every
+subsystem via the module-level `emit()`; when no log is installed,
+`emit()` is a cheap no-op.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+__all__ = ["EventLog", "emit", "get_event_log", "set_event_log"]
+
+
+class EventLog:
+    """Thread-safe append-only JSONL writer."""
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        parent = os.path.dirname(self.path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        self._f = open(self.path, "a", encoding="utf-8")
+        self._lock = threading.Lock()
+        self.written = 0
+
+    def emit(self, event: str, level: str = "INFO", **fields) -> None:
+        rec = {"ts": round(time.time(), 6), "level": level, "event": event}
+        for k, v in fields.items():
+            if v is not None:
+                rec[k] = v
+        line = json.dumps(rec, default=str, separators=(",", ":"))
+        with self._lock:
+            if self._f.closed:
+                return
+            self._f.write(line + "\n")
+            self._f.flush()
+            self.written += 1
+
+    def close(self) -> None:
+        with self._lock:
+            if not self._f.closed:
+                self._f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        self.close()
+        return False
+
+
+_global_log: EventLog | None = None
+_global_lock = threading.Lock()
+
+
+def get_event_log() -> EventLog | None:
+    return _global_log
+
+
+def set_event_log(log: EventLog | None) -> EventLog | None:
+    """Install the process-global event log; returns the previous one."""
+    global _global_log
+    with _global_lock:
+        old = _global_log
+        _global_log = log
+    return old
+
+
+def emit(event: str, level: str = "INFO", **fields) -> None:
+    """Emit to the process-global log if one is installed; else no-op."""
+    log = _global_log
+    if log is not None:
+        log.emit(event, level=level, **fields)

@@ -1,0 +1,86 @@
+"""Stdlib HTTP exposition server for a `MetricsRegistry`.
+
+Serves three endpoints from a daemon thread:
+
+- `/metrics` — Prometheus text exposition format 0.0.4;
+- `/metrics.json` — the structured registry snapshot as JSON;
+- `/healthz` — liveness probe (`ok`).
+
+Bound to loopback by default; pass ``port=0`` to let the OS pick (the
+chosen port is published on ``server.port`` after `start()`).
+"""
+
+from __future__ import annotations
+
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+from repro.obs import metrics as _metrics
+
+__all__ = ["MetricsServer"]
+
+
+class MetricsServer:
+    def __init__(self, registry=None, host: str = "127.0.0.1", port: int = 0):
+        self.registry = registry if registry is not None else _metrics.get_registry()
+        self.host = host
+        self.port = int(port)
+        self._httpd = None
+        self._thread = None
+
+    def start(self) -> "MetricsServer":
+        registry = self.registry
+
+        class Handler(BaseHTTPRequestHandler):
+            def do_GET(self):  # noqa: N802 - http.server API
+                if self.path in ("/metrics", "/"):
+                    body = registry.exposition().encode("utf-8")
+                    ctype = "text/plain; version=0.0.4; charset=utf-8"
+                elif self.path == "/metrics.json":
+                    body = registry.to_json().encode("utf-8")
+                    ctype = "application/json"
+                elif self.path == "/healthz":
+                    body = b"ok\n"
+                    ctype = "text/plain; charset=utf-8"
+                else:
+                    self.send_error(404)
+                    return
+                self.send_response(200)
+                self.send_header("Content-Type", ctype)
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, fmt, *args):
+                pass  # scrapes shouldn't spam the serving process's stderr
+
+        self._httpd = ThreadingHTTPServer((self.host, self.port), Handler)
+        self._httpd.daemon_threads = True
+        self.port = self._httpd.server_address[1]
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, name="metrics-http", daemon=True
+        )
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        if self._httpd is not None:
+            self._httpd.shutdown()
+            self._httpd.server_close()
+            self._httpd = None
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def __enter__(self):
+        if self._httpd is None:
+            self.start()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        self.stop()
+        return False

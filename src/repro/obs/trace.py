@@ -1,0 +1,68 @@
+"""Lightweight span tracer for staged query timing.
+
+A `Trace` is a flat list of named spans recorded with a context manager;
+the serving layer opens one per sampled query and calls
+`jax.block_until_ready` inside each span so device work is attributed to
+the stage that launched it (see `QueryServer._search_staged`).
+"""
+
+from __future__ import annotations
+
+import time
+
+__all__ = ["Span", "Trace"]
+
+
+class Span:
+    __slots__ = ("name", "ms")
+
+    def __init__(self, name: str, ms: float):
+        self.name = name
+        self.ms = ms
+
+    def __repr__(self) -> str:
+        return f"Span({self.name!r}, {self.ms:.3f}ms)"
+
+
+class _SpanCtx:
+    __slots__ = ("_trace", "_name", "_t0")
+
+    def __init__(self, trace: "Trace", name: str):
+        self._trace = trace
+        self._name = name
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        self._trace.spans.append(
+            Span(self._name, (time.perf_counter() - self._t0) * 1e3)
+        )
+        return False
+
+
+class Trace:
+    """Named collection of timed spans for one operation."""
+
+    __slots__ = ("name", "spans")
+
+    def __init__(self, name: str = "query"):
+        self.name = name
+        self.spans: list[Span] = []
+
+    def span(self, name: str) -> _SpanCtx:
+        """Context manager timing one stage; appends a `Span` on exit."""
+        return _SpanCtx(self, name)
+
+    def total_ms(self) -> float:
+        return sum(s.ms for s in self.spans)
+
+    def stage_ms(self) -> dict:
+        return {s.name: s.ms for s in self.spans}
+
+    def as_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "spans": [{"stage": s.name, "ms": round(s.ms, 4)} for s in self.spans],
+        }

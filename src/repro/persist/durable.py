@@ -24,6 +24,7 @@ Determinism notes:
 from __future__ import annotations
 
 import threading
+import time
 from contextlib import contextmanager
 from typing import Optional
 
@@ -31,6 +32,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine as eng
+from repro.obs import events as obs_events
+from repro.obs import metrics as obs_metrics
 from repro.persist import snapshot as snaplib
 from repro.persist import wal
 from repro.serving.sharded import ShardedSinnamonIndex, make_compact_step
@@ -60,6 +63,8 @@ class _DurableOps:
         self._last_lsn = -1
         self._ops_since_snapshot = 0
         self._ops_since_compact_check = 0
+        self._last_snapshot_ts: Optional[float] = None
+        self._replayed_ops = 0
 
     @contextmanager
     def _nolog(self):
@@ -117,11 +122,13 @@ class _DurableOps:
         """
         if not self.snapshot_dir:
             raise ValueError("index was opened without a snapshot_dir")
+        t0 = time.perf_counter()
         with self._lock:
             ms = snaplib.latest_manifest(self.snapshot_dir)
             extra = None if ms is None else ms[0]["extra"]
-            if (extra is not None and snaplib.matches_layout(extra, self)
-                    and int(extra["wal_lsn"]) == self._last_lsn):
+            skipped = (extra is not None and snaplib.matches_layout(extra, self)
+                       and int(extra["wal_lsn"]) == self._last_lsn)
+            if skipped:
                 # State at a given LSN is deterministic, so the on-disk
                 # snapshot is already current: rewriting it would briefly
                 # unpublish the only recovery base for zero gain.
@@ -130,11 +137,23 @@ class _DurableOps:
                 path = snaplib.save(self.snapshot_dir, self, self._last_lsn,
                                     keep=self.snapshot_keep)
             self._ops_since_snapshot = 0
-            wal.prune(self.wal_dir, self._last_lsn)
+            pruned = wal.prune(self.wal_dir, self._last_lsn)
             # The prune may unlink a writer's open segment; close so the next
             # append rotates to a fresh file instead of a dead inode.
             for w in self._writers.values():
                 w.close()
+            lsn = self._last_lsn
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        self._last_snapshot_ts = time.time()
+        reg = obs_metrics.get_registry()
+        reg.counter("repro_snapshots_total",
+                    "Snapshot calls by outcome (written | skipped_current).",
+                    labels={"outcome": "skipped_current" if skipped
+                            else "written"}).inc()
+        reg.histogram("repro_snapshot_ms",
+                      "Wall time of snapshot() incl. WAL prune.").observe(dt_ms)
+        obs_events.emit("snapshot", path=path, lsn=lsn, ms=round(dt_ms, 3),
+                        skipped=skipped, pruned_segments=pruned)
         return path
 
     def compact(self) -> int:
@@ -178,6 +197,7 @@ class _DurableOps:
         elastic (cross-layout / different shard count), in which case a fresh
         snapshot is written so later recoveries skip the rebuild.
         """
+        t0 = time.perf_counter()
         snap_lsn = -1
         rebased = False
         ms = None
@@ -197,7 +217,19 @@ class _DurableOps:
             state, extra = snaplib.restore_parts(self.snapshot_dir, ms)
             with self._nolog():     # elastic re-inserts must not re-log
                 snap_lsn, rebased = restore_fn(state, extra)
-        self._replay(snap_lsn)
+        horizon = self._replay(snap_lsn)
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        reg = obs_metrics.get_registry()
+        reg.counter("repro_recoveries_total", "Open-with-recovery calls.").inc()
+        reg.gauge("repro_recovery_replay_ms",
+                  "Wall time of the last recovery (restore + replay).",
+                  ).set(dt_ms)
+        reg.gauge("repro_recovery_replayed_ops",
+                  "WAL records replayed by the last recovery.",
+                  ).set(self._replayed_ops)
+        obs_events.emit("recovery", snapshot_lsn=snap_lsn, horizon=horizon,
+                        replayed=self._replayed_ops, rebased=rebased,
+                        ms=round(dt_ms, 3))
         if rebased:
             self.snapshot()
 
@@ -211,6 +243,7 @@ class _DurableOps:
         merged, torn = wal.scan_all(self.wal_dir)
         ops = wal.gap_free_ops(merged, after_lsn)
         horizon = after_lsn
+        self._replayed_ops = len(ops)
         with self._nolog():
             for lsn, kind, arrays in ops:
                 self._apply_op(kind, arrays)

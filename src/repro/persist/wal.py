@@ -31,10 +31,13 @@ from __future__ import annotations
 import io
 import os
 import struct
+import time
 import zlib
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+from repro.obs import metrics as obs_metrics
 
 MAGIC = 0x57414C31                       # "WAL1"
 _HEADER = struct.Struct("<IQB3xII")      # magic, lsn, kind, pad, len, crc
@@ -97,6 +100,30 @@ class WalWriter:
             _fsync_dir(os.path.dirname(part_dir.rstrip(os.sep)) or ".")
         self._f = None
         self._last_append: Optional[int] = None
+        self._obs_registry = None
+
+    def _obs(self):
+        """WAL metric handles, bound lazily against the current global
+        registry (revalidated so `set_registry` in tests takes effect)."""
+        reg = obs_metrics.get_registry()
+        if reg is not self._obs_registry:
+            self._obs_append_ms = reg.histogram(
+                "repro_wal_append_ms", "One WAL record append, fsync included.")
+            self._obs_fsync_ms = reg.histogram(
+                "repro_wal_fsync_ms", "fsync portion of a WAL append.")
+            self._obs_bytes = reg.counter(
+                "repro_wal_appended_bytes_total", "Record bytes appended.")
+            self._obs_records = {
+                name: reg.counter("repro_wal_records_total",
+                                  "WAL records appended by kind.",
+                                  labels={"kind": name})
+                for name in KIND_NAMES.values()}
+            self._obs_rotations = reg.counter(
+                "repro_wal_segment_rotations_total", "Segment files opened.")
+            self._obs_errors = reg.counter(
+                "repro_wal_append_errors_total", "Failed (unwound) appends.")
+            self._obs_registry = reg
+        return self
 
     def _rotate(self, first_lsn: int) -> None:
         self._last_append = None
@@ -104,6 +131,7 @@ class WalWriter:
             self._f.close()
         path = os.path.join(self.part_dir, f"wal-{first_lsn:016d}.seg")
         self._f = open(path, "ab")
+        self._obs()._obs_rotations.inc()
         if self.fsync:
             # Persist the directory entry too: an fsync'd record in a file
             # whose entry was lost to a power cut is a lost record.
@@ -111,23 +139,34 @@ class WalWriter:
 
     def append(self, kind: int, arrays: Dict[str, np.ndarray],
                lsn: Optional[int] = None) -> int:
+        t0 = time.perf_counter()
         lsn = self.next_lsn if lsn is None else lsn
         payload = _encode_payload(arrays) if arrays else b""
         if self._f is None or self._f.tell() >= self.segment_bytes:
             self._rotate(lsn)
         start = self._f.tell()
+        record = _pack_record(lsn, kind, payload)
+        obs = self._obs()
         try:
-            self._f.write(_pack_record(lsn, kind, payload))
+            self._f.write(record)
             self._f.flush()
+            t_sync = time.perf_counter()
             if self.fsync:
                 os.fsync(self._f.fileno())
+                obs._obs_fsync_ms.observe((time.perf_counter() - t_sync) * 1e3)
         except OSError:
             # Roll the partial bytes back: garbage mid-segment would hide
             # every later acknowledged record in this segment from replay.
+            obs._obs_errors.inc()
             self._unwind(start)
             raise
         self.next_lsn = lsn + 1
         self._last_append = start
+        obs._obs_append_ms.observe((time.perf_counter() - t0) * 1e3)
+        obs._obs_bytes.inc(len(record))
+        counter = obs._obs_records.get(KIND_NAMES.get(kind, ""))
+        if counter is not None:
+            counter.inc()
         return lsn
 
     def _unwind(self, start: int) -> None:

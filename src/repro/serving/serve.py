@@ -1,7 +1,11 @@
 """Host-side serving drivers for the retrieval engine.
 
 * ``QueryServer`` — batched query serving over a (possibly sharded) Sinnamon
-  index with the paper's anytime budget as the latency lever.
+  index with the paper's anytime budget as the latency lever.  Every query
+  reports into a metrics registry (`repro.obs`): latency/batch histograms
+  per scoring backend, plus — on sampled queries (``trace_every``) — a
+  per-stage span breakdown (admission → sketch scan → top-k merge →
+  rerank) recorded by running the same math as separate synced dispatches.
 * ``HedgedServer`` — straggler mitigation: the same query is issued to R
   replica indexes and the first completed answer wins.  On real clusters the
   replicas are distinct hosts; here they are distinct index objects and the
@@ -13,58 +17,61 @@
 from __future__ import annotations
 
 import time
+from functools import partial
 from typing import Optional, Sequence, Union
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core import engine as eng
 from repro.core.engine import SinnamonIndex
+from repro.obs import events as obs_events
+from repro.obs import metrics as obs_metrics
+from repro.obs.instrument import install_engine_gauges
+from repro.obs.trace import Trace
 from repro.serving.sharded import ShardedSinnamonIndex
 
+#: Stage names of the staged (traced) single-device query path, in order.
+QUERY_STAGES = ("admission", "sketch_scan", "topk_merge", "rerank")
 
-class LatencyRing:
-    """Fixed-size ring buffer of latency samples.
 
-    Under sustained traffic an unbounded list grows without limit; the ring
-    keeps the most recent ``maxlen`` samples in a preallocated f32 buffer
-    while exposing the same surface the old list did (append / extend /
-    clear / len / np.asarray), so percentile accounting is unchanged — it
-    just windows to recent traffic.
-    """
+# -- staged query pieces ------------------------------------------------------
+# The production path is ONE fused jit program (engine.search_batch); these
+# are the same stages as separate jitted dispatches, synced between spans so
+# a sampled query can attribute wall time per stage (the SINDI-style
+# breakdown).  Results are bit-identical to the fused path: identical
+# operand prep, identical kernels, identical rerank.
 
-    def __init__(self, maxlen: int = 8192):
-        self.maxlen = int(maxlen)
-        self._buf = np.zeros(self.maxlen, np.float32)
-        self._pos = 0          # next write index
-        self._count = 0        # total samples ever recorded
+@partial(jax.jit, static_argnums=(1, 4, 5))
+def _tile_candidates(state, spec, q_idx, q_val, kprime, budget):
+    from repro.kernels import ops as _ops
+    return _ops.sinnamon_tile_topk(state, spec, q_idx, q_val, kprime,
+                                   budget=budget, ok=state.active)
 
-    def append(self, value: float) -> None:
-        self._buf[self._pos] = value
-        self._pos = (self._pos + 1) % self.maxlen
-        self._count += 1
 
-    def extend(self, values) -> None:
-        for v in values:
-            self.append(v)
+@partial(jax.jit, static_argnums=(2,))
+def _merge_candidates(vals, slots, kprime):
+    from repro.kernels import sinnamon_score as _sinn
+    return _sinn.merge_tile_topk(vals, slots, kprime)
 
-    def clear(self) -> None:
-        self._pos = 0
-        self._count = 0
 
-    def __len__(self) -> int:
-        return min(self._count, self.maxlen)
+@partial(jax.jit, static_argnums=(1, 4, 5))
+def _gated_scores(state, spec, q_idx, q_val, budget, backend):
+    s = eng.score_batch(state, spec, q_idx, q_val, budget,
+                        grouped=(backend == "grouped"))
+    return jnp.where(state.active[None, :], s, -jnp.inf)
 
-    def __getitem__(self, i):
-        """Index into the oldest-first window (list-compatible access)."""
-        return np.asarray(self)[i]
 
-    def __array__(self, dtype=None, copy=None):
-        n = len(self)
-        if self._count <= self.maxlen:
-            out = self._buf[:n]
-        else:                  # oldest-first view of the wrapped window
-            out = np.concatenate([self._buf[self._pos:], self._buf[:self._pos]])
-        out = np.array(out) if copy is None or copy else out
-        return out.astype(dtype) if dtype is not None else out
+@partial(jax.jit, static_argnums=(1,))
+def _dense_topk(scores, kprime):
+    vals, slots = jax.lax.top_k(scores, kprime)
+    return vals, slots.astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnums=(1,))
+def _rerank(state, k, cand_scores, cand_slots, q_idx, q_val):
+    return eng.rerank_topk(state, cand_scores, cand_slots, q_idx, q_val, k)
 
 
 class QueryServer:
@@ -74,6 +81,15 @@ class QueryServer:
     ``score_backend`` picks the index's scoring backend per server
     (``reference | grouped | pallas``; None -> process default, see
     repro.kernels.ops.resolve_backend).
+
+    Telemetry: every query records into ``registry`` (default: the
+    process-global `repro.obs.metrics.get_registry()`; inject
+    ``NULL_REGISTRY`` to turn metrics off).  With ``trace_every=N > 0``
+    every N-th ``query_many`` batch runs the staged path and publishes
+    per-stage histograms (``repro_query_stage_ms``) plus a ``query`` event
+    with spans attached to the active event log.  Engine health gauges for
+    ``index`` are installed on construction (weakref — dropping the server
+    and index detaches them).
 
     Durable indexes (repro.persist.durable) serve through the same surface,
     and the server keeps answering during snapshots and background
@@ -85,20 +101,52 @@ class QueryServer:
                  k: int = 10, kprime: int = 1000,
                  budget: Optional[int] = None, score_fn=None,
                  score_backend: Optional[str] = None,
-                 latency_window: int = 8192):
+                 registry=None, event_log=None, trace_every: int = 0,
+                 index_name: str = "index"):
         self.index = index
         self.k, self.kprime, self.budget = k, kprime, budget
         self.score_fn = score_fn
         self.score_backend = score_backend
-        self.stats = {"queries": 0, "latency_ms": LatencyRing(latency_window)}
+        self.registry = (obs_metrics.get_registry() if registry is None
+                         else registry)
+        self.event_log = event_log
+        self.trace_every = int(trace_every)
+        self.stats = {"queries": 0}
+        self.last_latency_ms = 0.0       # most recent per-query latency
+        self.last_trace: Optional[Trace] = None
+        self._since_trace = 0
+        self._handles: dict = {}
+        install_engine_gauges(index, self.registry, name=index_name)
 
+    # -- metric handles (cached per label set) -------------------------------
+    def _backend_label(self) -> str:
+        if self.score_fn is not None:
+            return "custom"
+        from repro.kernels import ops as _ops
+        return _ops.resolve_backend(self.score_backend)
+
+    def _hist(self, name: str, help_text: str, labels=None, buckets=None):
+        key = (name, tuple(sorted((labels or {}).items())))
+        h = self._handles.get(key)
+        if h is None:
+            h = self.registry.histogram(name, help_text, labels=labels,
+                                        buckets=buckets)
+            self._handles[key] = h
+        return h
+
+    def _latency_hist(self, backend: str):
+        return self._hist("repro_query_latency_ms",
+                          "Per-query serving latency.",
+                          labels={"backend": backend})
+
+    # -- serving -------------------------------------------------------------
     def query(self, q_idx, q_val):
+        backend = self._backend_label()
         t0 = time.perf_counter()
         ids, scores = self.index.search(
             q_idx, q_val, k=self.k, kprime=self.kprime, budget=self.budget,
             score_fn=self.score_fn, backend=self.score_backend)
-        self.stats["queries"] += 1
-        self.stats["latency_ms"].append((time.perf_counter() - t0) * 1e3)
+        self._record(1, (time.perf_counter() - t0) * 1e3, backend)
         return ids, scores
 
     def query_many(self, q_idx, q_val):
@@ -109,20 +157,125 @@ class QueryServer:
         percentile accounting stays comparable with :meth:`query`.
         """
         bn = len(q_idx)
+        backend = self._backend_label()
+        trace = None
+        if self.trace_every > 0 and self.score_fn is None:
+            self._since_trace += 1
+            if self._since_trace >= self.trace_every:
+                self._since_trace = 0
+                trace = Trace()
         t0 = time.perf_counter()
-        ids, scores = self.index.search_many(
-            q_idx, q_val, k=self.k, kprime=self.kprime, budget=self.budget,
-            score_fn=self.score_fn, backend=self.score_backend)
-        dt_ms = (time.perf_counter() - t0) * 1e3
-        self.stats["queries"] += bn
-        self.stats["latency_ms"].extend([dt_ms / bn] * bn)
+        if trace is not None:
+            ids, scores = self._search_staged(q_idx, q_val, trace)
+        else:
+            ids, scores = self.index.search_many(
+                q_idx, q_val, k=self.k, kprime=self.kprime,
+                budget=self.budget, score_fn=self.score_fn,
+                backend=self.score_backend)
+        self._record(bn, (time.perf_counter() - t0) * 1e3, backend, trace)
         return ids, scores
 
+    def _record(self, bn: int, dt_ms: float, backend: str,
+                trace: Optional[Trace] = None) -> None:
+        per_query = dt_ms / bn
+        self.stats["queries"] += bn
+        self.last_latency_ms = per_query
+        self._latency_hist(backend).observe(per_query, n=bn)
+        self._hist("repro_query_batch_docs", "Queries per serving batch.",
+                   buckets=obs_metrics.DEFAULT_COUNT_BUCKETS).observe(bn)
+        self.registry.counter("repro_queries_total", "Queries served.",
+                              labels={"backend": backend}).inc(bn)
+        if trace is not None:
+            self.last_trace = trace
+            self.registry.counter("repro_query_traces_total",
+                                  "Sampled queries run on the staged "
+                                  "(per-stage timed) path.").inc()
+            for span in trace.spans:
+                self._hist("repro_query_stage_ms",
+                           "Wall time per query-path stage (sampled "
+                           "staged dispatches, device-synced per span).",
+                           labels={"stage": span.name,
+                                   "backend": backend}).observe(span.ms)
+        log = self.event_log if self.event_log is not None \
+            else obs_events.get_event_log()
+        if log is not None:
+            log.emit("query", batch=bn, ms=round(dt_ms, 4), backend=backend,
+                     spans=trace.as_dict()["spans"] if trace else None)
+
+    # -- staged (traced) path ------------------------------------------------
+    def _search_staged(self, q_idx, q_val, trace: Trace):
+        if isinstance(self.index, SinnamonIndex):
+            return self._staged_single(q_idx, q_val, trace)
+        return self._staged_generic(q_idx, q_val, trace)
+
+    def _staged_single(self, q_idx, q_val, trace: Trace):
+        index = self.index
+        with trace.span("admission"):
+            spec = index.spec
+            state = index.state
+            backend = self._backend_label()
+            kprime = self.kprime if self.kprime is not None \
+                else max(5 * self.k, self.k)
+            kprime = min(kprime, spec.capacity)
+            k = min(self.k, kprime)
+            q_idx = jnp.asarray(q_idx)
+            q_val = jnp.asarray(q_val)
+        if backend == "pallas":
+            with trace.span("sketch_scan"):
+                tile_vals, tile_slots = _tile_candidates(
+                    state, spec, q_idx, q_val, kprime, self.budget)
+                jax.block_until_ready(tile_vals)
+            with trace.span("topk_merge"):
+                cand_scores, cand_slots = _merge_candidates(
+                    tile_vals, tile_slots, kprime)
+                jax.block_until_ready(cand_scores)
+        else:
+            with trace.span("sketch_scan"):
+                scores = _gated_scores(state, spec, q_idx, q_val,
+                                       self.budget, backend)
+                jax.block_until_ready(scores)
+            with trace.span("topk_merge"):
+                cand_scores, cand_slots = _dense_topk(scores, kprime)
+                jax.block_until_ready(cand_scores)
+        with trace.span("rerank"):
+            ids, top_scores, _ = _rerank(state, k, cand_scores, cand_slots,
+                                         q_idx, q_val)
+            out_ids = eng.unpack_ids64(np.asarray(ids))
+            out_scores = np.asarray(top_scores)
+        return out_ids, out_scores
+
+    def _staged_generic(self, q_idx, q_val, trace: Trace):
+        """Sharded (or unknown) index: shard-local stages live inside one
+        shard_map program, so the finest honest split is admission vs the
+        SPMD search dispatch."""
+        with trace.span("admission"):
+            q_idx = np.asarray(q_idx)
+            q_val = np.asarray(q_val)
+        with trace.span("spmd_search"):
+            ids, scores = self.index.search_many(
+                q_idx, q_val, k=self.k, kprime=self.kprime,
+                budget=self.budget, backend=self.score_backend)
+        return ids, scores
+
+    # -- stats ---------------------------------------------------------------
     def latency_percentiles(self):
-        lat = np.asarray(self.stats["latency_ms"])
-        if lat.size == 0:
+        """Compat shim over the registry latency histogram (the one shared
+        percentile implementation — `obs.metrics.Histogram.percentile`)."""
+        h = self._latency_hist(self._backend_label())
+        if h.count == 0:
             return {}
-        return {f"p{p}": float(np.percentile(lat, p)) for p in (50, 90, 99)}
+        return {f"p{p}": h.percentile(p) for p in (50, 90, 99)}
+
+    def reset_stats(self) -> None:
+        """Zero the query counter and this server's latency/stage samples
+        (shared-registry histograms for the current backend label)."""
+        backend = self._backend_label()
+        self.stats["queries"] = 0
+        self.last_trace = None
+        self._latency_hist(backend).reset()
+        for stage in QUERY_STAGES + ("spmd_search",):
+            self._hist("repro_query_stage_ms", "",
+                       labels={"stage": stage, "backend": backend}).reset()
 
 
 class HedgedServer:
@@ -141,7 +294,7 @@ class HedgedServer:
         answers = []
         for rep in self.replicas:
             ids, scores = rep.query(q_idx, q_val)
-            base = rep.stats["latency_ms"][-1]
+            base = rep.last_latency_ms
             if self.gen.random() < self.straggler_prob:
                 base *= self.straggler_mult
             finish.append(base)

@@ -22,6 +22,7 @@ This module now covers the full *streaming* lifecycle at sharded scale:
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
 import jax
@@ -256,6 +257,7 @@ class ShardedSinnamonIndex:
                       for _ in range(self.n_shards)]
         self._id2slot: dict[int, tuple[int, int]] = {}
         self._steps: dict = {}
+        self._obs = eng._WritePathMetrics()
 
     # -- routing ------------------------------------------------------------
     def route(self, ext_id: int) -> int:
@@ -274,6 +276,7 @@ class ShardedSinnamonIndex:
         self.insert_many([ext_id], idx[None], val[None])
 
     def insert_many(self, ext_ids, idx_batch, val_batch) -> None:
+        t0 = time.perf_counter()
         ext_ids = [int(e) for e in ext_ids]
         if len(set(ext_ids)) != len(ext_ids):
             # Sequential overwrite semantics: only the LAST occurrence of a
@@ -321,11 +324,13 @@ class ShardedSinnamonIndex:
             self.state = step(self.state, jnp.asarray(slots),
                               jnp.asarray(eids), jnp.asarray(idxs),
                               jnp.asarray(vals), jnp.asarray(mask))
+        self._obs.record("insert_many", t0, len(ext_ids))
 
     def delete(self, ext_id: int) -> None:
         self.delete_many([ext_id])
 
     def delete_many(self, ext_ids) -> None:
+        t0 = time.perf_counter()
         # dedup: a repeated id is one deletion, not a KeyError mid-mutation
         ext_ids = list(dict.fromkeys(int(e) for e in ext_ids))
         missing = [e for e in ext_ids if e not in self._id2slot]
@@ -351,6 +356,7 @@ class ShardedSinnamonIndex:
                               jnp.asarray(mask))
         for s in range(S):
             self._free[s].extend(reversed(per_shard[s]))
+        self._obs.record("delete_many", t0, len(ext_ids))
 
     # -- retrieval ----------------------------------------------------------
     def search(self, q_idx, q_val, k: int, kprime: Optional[int] = None,
@@ -395,6 +401,7 @@ class ShardedSinnamonIndex:
     # -- capacity management ------------------------------------------------
     def grow(self, new_local_capacity: Optional[int] = None) -> None:
         """Double (or set) every shard's local capacity, shard-locally."""
+        t0 = time.perf_counter()
         old_c = self.spec.capacity
         new_c = new_local_capacity or old_c * 2
         if new_c <= old_c or new_c % 32 != 0:
@@ -406,6 +413,7 @@ class ShardedSinnamonIndex:
         for s in range(self.n_shards):
             self._free[s] = (list(range(new_c - 1, old_c - 1, -1))
                              + self._free[s])
+        self._obs.record("grow", t0)
 
     # -- maintenance ---------------------------------------------------------
     def compact(self) -> int:
@@ -413,11 +421,13 @@ class ShardedSinnamonIndex:
 
         Returns the number of columns rebuilt across all shards.
         """
+        t0 = time.perf_counter()
         n_dirty = int(np.asarray(jnp.sum(self.state.dirty)))
         if n_dirty:
             step = self._step("compact", lambda: make_compact_step(
                 self.mesh, self.spec))
             self.state = step(self.state)
+        self._obs.record("compact", t0)
         return n_dirty
 
     def slot_drift(self) -> np.ndarray:

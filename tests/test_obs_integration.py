@@ -1,0 +1,291 @@
+"""ISSUE 6 tentpole contracts: telemetry threaded through the live system.
+
+* Sampled staged tracing decomposes a served query into the
+  admission -> sketch_scan -> topk_merge -> rerank stages whose spans sum to
+  (almost all of) the measured batch time — and returns results identical
+  to the fused path, for every scoring backend.
+* A churn-then-query stream over a durable index populates the WAL,
+  snapshot, drift and recovery surfaces of one injected registry.
+* The /metrics endpoint serves a parseable Prometheus exposition of all of
+  the above; the event log captures traced queries as JSONL.
+* The sharded index traces as admission -> spmd_search.
+* BackgroundCompactor outcomes land in ``repro_compactor_outcomes_total``.
+"""
+
+import json
+import time
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core.engine import EngineSpec, SinnamonIndex
+from repro.data import synth
+from repro.distributed import mesh as meshlib
+from repro.obs import EventLog, MetricsRegistry, MetricsServer
+from repro.obs import metrics as obs_metrics
+from repro.obs.metrics import parse_exposition
+from repro.persist import compact as compactlib
+from repro.persist.durable import DurableSinnamonIndex
+from repro.serving.serve import QUERY_STAGES, QueryServer
+from repro.serving.sharded import ShardedSinnamonIndex
+
+DS = synth.SparseDatasetSpec("t", n=400, psi_doc=20, psi_query=10,
+                             value_dist="gaussian")
+N_DOCS = 96
+
+
+def _spec(capacity=128):
+    return EngineSpec(n=DS.n, m=12, capacity=capacity, max_nnz=32, h=2,
+                      seed=3, value_dtype="float32")
+
+
+def _churn(index, idx, val):
+    """Insert / delete / re-insert so recycled columns carry real drift."""
+    index.insert_many(list(range(64)), idx[:64], val[:64])
+    for e in (3, 17, 40, 41):
+        index.delete(e)
+    index.insert_many(list(range(64, N_DOCS)), idx[64:N_DOCS],
+                      val[64:N_DOCS])
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    idx, val = synth.make_corpus(0, DS, N_DOCS, pad=32)
+    qi, qv = synth.make_queries(1, DS, 8, pad=16)
+    return idx, val, qi, qv
+
+
+@pytest.fixture(scope="module")
+def index(corpus):
+    idx, val, _, _ = corpus
+    index = SinnamonIndex(_spec())
+    _churn(index, idx, val)
+    return index
+
+
+# ---------------------------------------------------------------------------
+# staged tracing on the single-device query path
+# ---------------------------------------------------------------------------
+
+def test_traced_query_spans_cover_measured_time(corpus, index):
+    _, _, qi, qv = corpus
+    reg = MetricsRegistry()
+    srv = QueryServer(index, k=5, kprime=32, registry=reg, trace_every=1)
+    srv.query_many(qi, qv)                 # staged-path compile warmup
+    t0 = time.perf_counter()
+    srv.query_many(qi, qv)
+    dt_ms = (time.perf_counter() - t0) * 1e3
+    trace = srv.last_trace
+    assert trace is not None
+    assert tuple(s.name for s in trace.spans) == QUERY_STAGES
+    # spans are nested inside the measured window, and the device syncs
+    # between spans mean they account for nearly all of it
+    assert trace.total_ms() <= dt_ms * 1.02
+    assert trace.total_ms() >= 0.5 * dt_ms
+    for stage in QUERY_STAGES:
+        h = reg.histogram("repro_query_stage_ms",
+                          labels={"stage": stage,
+                                  "backend": srv._backend_label()})
+        assert h.count == 2, stage
+    assert reg.counter("repro_query_traces_total").value == 2
+
+
+def test_traced_path_matches_fused_results_per_backend(corpus, index):
+    _, _, qi, qv = corpus
+    for backend in ("reference", "grouped", "pallas"):
+        reg = MetricsRegistry()
+        srv = QueryServer(index, k=5, kprime=32, registry=reg,
+                          trace_every=1, score_backend=backend)
+        ids_t, sc_t = srv.query_many(qi, qv)
+        assert srv.last_trace is not None, backend
+        ids_f, sc_f = index.search_many(qi, qv, k=5, kprime=32,
+                                        backend=backend)
+        np.testing.assert_array_equal(ids_t, ids_f)
+        np.testing.assert_allclose(sc_t, sc_f, rtol=1e-6)
+        h = reg.histogram("repro_query_stage_ms",
+                          labels={"stage": "sketch_scan", "backend": backend})
+        assert h.count == 1, backend
+
+
+def test_untraced_batches_skip_staging(corpus, index):
+    _, _, qi, qv = corpus
+    reg = MetricsRegistry()
+    srv = QueryServer(index, k=5, kprime=32, registry=reg, trace_every=3)
+    for _ in range(6):
+        srv.query_many(qi, qv)
+    assert reg.counter("repro_query_traces_total").value == 2   # 2 of 6
+    assert srv.stats["queries"] == 48
+    b = srv._backend_label()
+    assert reg.histogram("repro_query_latency_ms",
+                         labels={"backend": b}).count == 48
+    assert reg.counter("repro_queries_total", labels={"backend": b}).value \
+        == 48
+
+
+def test_sharded_trace_stages(corpus):
+    idx, val, qi, qv = corpus
+    mesh = meshlib.single_device_mesh(("data", "model"))
+    sharded = ShardedSinnamonIndex(_spec(), mesh)
+    _churn(sharded, idx, val)
+    reg = MetricsRegistry()
+    srv = QueryServer(sharded, k=5, kprime=32, registry=reg, trace_every=1)
+    ids_t, sc_t = srv.query_many(qi, qv)
+    assert tuple(s.name for s in srv.last_trace.spans) \
+        == ("admission", "spmd_search")
+    ids_f, sc_f = sharded.search_many(qi, qv, k=5, kprime=32)
+    np.testing.assert_array_equal(ids_t, ids_f)
+
+
+# ---------------------------------------------------------------------------
+# engine gauges, event log, HTTP endpoint
+# ---------------------------------------------------------------------------
+
+def test_engine_gauges_reflect_live_index(corpus, index):
+    _, _, qi, qv = corpus
+    reg = MetricsRegistry()
+    QueryServer(index, k=5, kprime=32, registry=reg).query_many(qi, qv)
+    snap = reg.snapshot()                  # runs the collector
+    lbl = {"index": "index"}               # install_engine_gauges name label
+    assert reg.gauge("repro_engine_live_docs", labels=lbl).value == 92
+    assert reg.gauge("repro_engine_capacity_slots", labels=lbl).value == 128
+    comps = {s["labels"]["component"]: s["value"]
+             for s in snap["repro_engine_bytes"]["series"]}
+    assert set(comps) == {"sketch", "inverted_index", "storage"}
+    assert all(v > 0 for v in comps.values())
+    assert reg.gauge("repro_engine_dirty_columns", labels=lbl).value >= 4
+
+
+def test_event_log_captures_traced_queries(tmp_path, corpus, index):
+    _, _, qi, qv = corpus
+    path = str(tmp_path / "events.jsonl")
+    with EventLog(path) as log:
+        srv = QueryServer(index, k=5, kprime=32, registry=MetricsRegistry(),
+                          event_log=log, trace_every=2)
+        for _ in range(4):
+            srv.query_many(qi, qv)
+    with open(path) as f:
+        events = [json.loads(line) for line in f]
+    queries = [e for e in events if e["event"] == "query"]
+    assert len(queries) == 4
+    traced = [e for e in queries if e.get("spans")]
+    assert len(traced) == 2
+    assert [s["stage"] for s in traced[0]["spans"]] == list(QUERY_STAGES)
+    assert all("ts" in e and e["level"] == "INFO" for e in queries)
+
+
+def test_metrics_http_endpoint_serves_parseable_exposition(corpus, index):
+    _, _, qi, qv = corpus
+    reg = MetricsRegistry()
+    srv = QueryServer(index, k=5, kprime=32, registry=reg, trace_every=1)
+    srv.query_many(qi, qv)
+    with MetricsServer(registry=reg, port=0) as ms:
+        with urllib.request.urlopen(ms.url + "/metrics", timeout=10) as r:
+            assert "text/plain" in r.headers["Content-Type"]
+            text = r.read().decode()
+        with urllib.request.urlopen(ms.url + "/metrics.json",
+                                    timeout=10) as r:
+            doc = json.loads(r.read().decode())
+        with urllib.request.urlopen(ms.url + "/healthz", timeout=10) as r:
+            assert r.read() == b"ok\n"
+    flat = parse_exposition(text)          # raises on malformed lines
+    names = {name for name, _ in flat}
+    for required in ("repro_query_latency_ms_count",
+                     "repro_query_stage_ms_count", "repro_engine_live_docs",
+                     "repro_engine_bytes"):
+        assert required in names, required
+    assert doc["repro_query_latency_ms"]["type"] == "histogram"
+
+
+# ---------------------------------------------------------------------------
+# durable churn-then-query: WAL / snapshot / drift / recovery surfaces
+# ---------------------------------------------------------------------------
+
+def test_durable_churn_populates_persistence_metrics(tmp_path, corpus):
+    idx, val, qi, qv = corpus
+    wd, sd = str(tmp_path / "wal"), str(tmp_path / "snap")
+    reg = MetricsRegistry()
+    old = obs_metrics.set_registry(reg)    # WAL/snapshot bind to the global
+    try:
+        live = DurableSinnamonIndex.open(_spec(), wal_dir=wd,
+                                         snapshot_dir=sd)
+        _churn(live, idx, val)
+        live.snapshot()
+
+        # write path: engine op counters + WAL record accounting
+        assert reg.counter("repro_engine_ops_total",
+                           labels={"op": "insert_many"}).value == 2
+        assert reg.counter("repro_engine_ops_total",
+                           labels={"op": "delete"}).value == 4
+        assert reg.counter("repro_wal_records_total",
+                           labels={"kind": "insert"}).value == 2
+        assert reg.counter("repro_wal_records_total",
+                           labels={"kind": "delete"}).value == 4
+        assert reg.counter("repro_wal_appended_bytes_total").value > 0
+        assert reg.histogram("repro_wal_append_ms").count >= 6
+        assert reg.histogram("repro_wal_fsync_ms").count >= 6
+
+        # snapshot surface
+        assert reg.counter("repro_snapshots_total",
+                           labels={"outcome": "written"}).value >= 1
+        assert reg.histogram("repro_snapshot_ms").count >= 1
+
+        # drift surface: recycled slots under churn carry stale maxima
+        drift = compactlib.drift_metrics(live, reg)
+        assert reg.gauge("repro_sketch_drift_max").value \
+            == drift["max_overestimate"]
+        assert reg.gauge("repro_sketch_dirty_active_slots").value \
+            == drift["dirty_active"] >= 1
+
+        # queries still served; engine gauges see WAL/snapshot sidecars
+        QueryServer(live, k=5, kprime=32, registry=reg).query_many(qi, qv)
+        snap = reg.snapshot()
+        assert ("repro_wal_last_lsn" in snap
+                and "repro_snapshot_age_s" in snap)
+
+        # recovery surface: reopen replays the tail past the snapshot
+        rec = DurableSinnamonIndex.open(_spec(), wal_dir=wd,
+                                        snapshot_dir=sd)
+        assert reg.counter("repro_recoveries_total").value >= 2
+        assert reg.gauge("repro_recovery_replay_ms").value >= 0
+        np.testing.assert_array_equal(np.asarray(rec.state.active),
+                                      np.asarray(live.state.active))
+    finally:
+        obs_metrics.set_registry(old)
+
+
+def test_background_compactor_outcomes(tmp_path, corpus):
+    idx, val, _, _ = corpus
+    wd = str(tmp_path / "wal")
+    reg = MetricsRegistry()
+    live = DurableSinnamonIndex.open(_spec(), wal_dir=wd)
+    _churn(live, idx, val)
+    assert compactlib.drift_metrics(live, reg)["max_overestimate"] > 0
+    comp = compactlib.BackgroundCompactor(live, threshold=0.0,
+                                          interval_s=0.02,
+                                          registry=reg).start()
+    try:
+        deadline = time.time() + 30
+        while comp.compactions == 0 and time.time() < deadline:
+            time.sleep(0.05)
+    finally:
+        comp.stop()
+    assert comp.compactions >= 1
+    assert reg.counter("repro_compactor_outcomes_total",
+                       labels={"outcome": "compacted"}).value >= 1
+    # a quiesced compaction restores the zero-drift invariant
+    assert reg.gauge("repro_compaction_drift_after").value == 0.0
+    assert reg.histogram("repro_compaction_ms").count >= 1
+    assert compactlib.drift_metrics(live, reg)["max_overestimate"] == 0.0
+
+
+def test_maybe_compact_publishes_before_after(corpus):
+    idx, val, _, _ = corpus
+    reg = MetricsRegistry()
+    index = SinnamonIndex(_spec())
+    _churn(index, idx, val)
+    pre = compactlib.maybe_compact(index, threshold=0.0, registry=reg)
+    assert pre is not None and pre["max_overestimate"] > 0
+    assert reg.gauge("repro_compaction_drift_before").value \
+        == pre["max_overestimate"]
+    assert reg.gauge("repro_compaction_drift_after").value == 0.0

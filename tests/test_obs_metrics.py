@@ -1,0 +1,237 @@
+"""ISSUE 6: metrics-registry unit contracts (no engine, no JAX).
+
+* thread-safety: concurrent increments/observes lose nothing,
+* histogram percentiles track np.percentile within one bucket's width,
+* exponential bucket boundaries follow bisect_left (upper-inclusive `le`),
+* label cardinality is capped (LabelCardinalityError) without evicting
+  existing series,
+* Prometheus exposition matches a golden text and round-trips through
+  parse_exposition,
+* snapshots of identical layouts merge additively,
+* NULL_REGISTRY swallows everything.
+"""
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.obs import metrics as obs
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def test_counter_monotone_and_negative_rejected():
+    reg = obs.MetricsRegistry()
+    c = reg.counter("c_total", "help")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_gauge_set_inc_dec():
+    g = obs.MetricsRegistry().gauge("g")
+    g.set(2.5)
+    g.inc(1.5)
+    g.dec(4.0)
+    assert g.value == 0.0
+
+
+def test_concurrent_increments_lose_nothing():
+    reg = obs.MetricsRegistry()
+    c = reg.counter("hits_total", "x")
+    h = reg.histogram("lat_ms", "x")
+    per_thread, n_threads = 5000, 8
+
+    def work():
+        for i in range(per_thread):
+            c.inc()
+            h.observe(0.1 + (i % 7))
+
+    threads = [threading.Thread(target=work) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.value == per_thread * n_threads
+    assert h.count == per_thread * n_threads
+    assert sum(h.bucket_counts) == per_thread * n_threads
+
+
+# ---------------------------------------------------------------------------
+# histogram buckets & percentiles
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_boundaries_upper_inclusive():
+    b = obs.Buckets(1.0, 2.0, 4)                    # bounds 1, 2, 4, 8
+    assert b.bounds == (1.0, 2.0, 4.0, 8.0)
+    # Prometheus `le` semantics: a sample on the bound lands IN that bucket
+    assert [b.index(v) for v in (0.5, 1.0, 1.5, 2.0, 7.9, 8.0, 9.0)] \
+        == [0, 0, 1, 1, 3, 3, 4]                   # 4 == +Inf overflow
+
+
+def test_percentiles_track_numpy_within_bucket_resolution():
+    h = obs.Histogram()                            # DEFAULT_LATENCY_BUCKETS
+    rng = np.random.default_rng(7)
+    samples = rng.lognormal(mean=1.0, sigma=0.8, size=20000)
+    for v in samples:
+        h.observe(float(v))
+    tol = obs.DEFAULT_LATENCY_BUCKETS.factor * 1.01   # one bucket + slack
+    for p in (50, 90, 99):
+        exact = np.percentile(samples, p)
+        est = h.percentile(p)
+        assert exact / tol <= est <= exact * tol, (p, est, exact)
+
+
+def test_percentile_edge_cases():
+    h = obs.Histogram(obs.Buckets(1.0, 2.0, 4))
+    assert h.percentile(50) == 0.0                 # empty -> 0, not NaN
+    h.observe(3.0, n=10)
+    # single distinct value: every percentile clamps to the tracked min/max
+    assert h.percentile(50) == 3.0
+    assert h.percentile(99) == 3.0
+    snap = h.snapshot()
+    assert snap["min"] == 3.0 and snap["max"] == 3.0 and snap["count"] == 10
+
+
+# ---------------------------------------------------------------------------
+# registry semantics
+# ---------------------------------------------------------------------------
+
+
+def test_label_cardinality_cap_preserves_existing_series():
+    reg = obs.MetricsRegistry(max_label_sets=4)
+    for i in range(4):
+        reg.counter("c_total", "x", labels={"shard": str(i)}).inc()
+    with pytest.raises(obs.LabelCardinalityError):
+        reg.counter("c_total", "x", labels={"shard": "overflow"})
+    # pre-existing series still addressable and intact after the refusal
+    assert reg.counter("c_total", "x", labels={"shard": "2"}).value == 1
+
+
+def test_type_and_bucket_conflicts_rejected():
+    reg = obs.MetricsRegistry()
+    reg.counter("m", "x")
+    with pytest.raises(ValueError):
+        reg.gauge("m")
+    reg.histogram("h_ms", "x", buckets=obs.Buckets(1.0, 2.0, 4))
+    with pytest.raises(ValueError):
+        reg.histogram("h_ms", "x", buckets=obs.Buckets(1.0, 4.0, 4))
+    with pytest.raises(ValueError):
+        reg.counter("bad name!", "x")
+
+
+def test_collector_removal_and_error_isolation():
+    reg = obs.MetricsRegistry()
+    calls = {"n": 0}
+
+    def once():
+        calls["n"] += 1
+        reg.gauge("live").set(7)
+        return False                                # ask to be removed
+
+    def broken():
+        raise RuntimeError("boom")
+
+    reg.add_collector(once)
+    reg.add_collector(broken)
+    reg.collect()
+    reg.collect()
+    assert calls["n"] == 1                          # removed after False
+    assert reg.gauge("live").value == 7
+    # broken collector is counted+kept, and never poisons a scrape
+    assert reg.collector_errors == 2
+    assert "live 7" in reg.exposition()
+
+
+# ---------------------------------------------------------------------------
+# exposition / parse / merge
+# ---------------------------------------------------------------------------
+
+GOLDEN = """\
+# HELP demo_total Things.
+# TYPE demo_total counter
+demo_total{kind="a"} 3
+# TYPE demo_gauge gauge
+demo_gauge 2.5
+# TYPE demo_ms histogram
+demo_ms_bucket{le="1"} 1
+demo_ms_bucket{le="2"} 1
+demo_ms_bucket{le="+Inf"} 2
+demo_ms_sum 3.5
+demo_ms_count 2
+"""
+
+
+def _demo_registry():
+    reg = obs.MetricsRegistry()
+    reg.counter("demo_total", "Things.", labels={"kind": "a"}).inc(3)
+    reg.gauge("demo_gauge").set(2.5)
+    h = reg.histogram("demo_ms", buckets=obs.Buckets(1, 2, 2))
+    h.observe(0.5)
+    h.observe(3.0)
+    return reg
+
+
+def test_exposition_golden():
+    assert _demo_registry().exposition() == GOLDEN
+
+
+def test_exposition_parse_round_trip():
+    flat = obs.parse_exposition(_demo_registry().exposition())
+    assert flat[("demo_total", (("kind", "a"),))] == 3.0
+    assert flat[("demo_gauge", ())] == 2.5
+    assert flat[("demo_ms_bucket", (("le", "+Inf"),))] == 2.0
+    assert flat[("demo_ms_count", ())] == 2.0
+
+
+def test_parse_rejects_malformed():
+    with pytest.raises(ValueError):
+        obs.parse_exposition("demo_total{kind=a} 3")   # unquoted label
+    with pytest.raises(ValueError):
+        obs.parse_exposition("demo_total three")
+
+
+def test_to_json_is_valid_json():
+    doc = json.loads(_demo_registry().to_json())
+    assert doc["demo_ms"]["type"] == "histogram"
+    assert doc["demo_total"]["series"][0]["value"] == 3
+
+
+def test_merge_snapshots_additive():
+    a, b = _demo_registry().snapshot(), _demo_registry().snapshot()
+    merged = obs.merge_snapshots(a, b)
+    assert merged["demo_total"]["series"][0]["value"] == 6
+    hist = merged["demo_ms"]["series"][0]
+    assert hist["count"] == 4 and hist["sum"] == 7.0
+    # layout mismatch must refuse, not silently mis-bin
+    reg2 = obs.MetricsRegistry()
+    reg2.histogram("demo_ms", buckets=obs.Buckets(1, 4, 2)).observe(1.0)
+    with pytest.raises(ValueError):
+        obs.merge_snapshots(a, reg2.snapshot())
+
+
+def test_null_registry_is_inert():
+    n = obs.NULL_REGISTRY
+    n.counter("x_total", "h", labels={"a": "b"}).inc(5)
+    n.gauge("g").set(1.0)
+    n.histogram("h_ms").observe(2.0)
+    n.add_collector(lambda r: True)
+    assert n.exposition() == ""
+    assert n.to_json() == "{}"
+
+
+def test_set_registry_swaps_global():
+    fresh = obs.MetricsRegistry()
+    old = obs.set_registry(fresh)
+    try:
+        assert obs.get_registry() is fresh
+    finally:
+        obs.set_registry(old)
+    assert obs.get_registry() is old

@@ -8,7 +8,7 @@
   lax.scan oracles leaf-for-leaf.
 * External ids are int64 end-to-end: values >= 2**31 survive the engine, the
   sharded locator path and a snapshot round-trip without wrapping.
-* QueryServer latency stats are a bounded ring buffer.
+* QueryServer latency stats are fixed-size registry histograms.
 """
 
 import dataclasses
@@ -22,7 +22,8 @@ from repro.core.engine import EngineSpec, SinnamonIndex
 from repro.data import synth
 from repro.distributed import mesh as meshlib
 from repro.kernels import ops, ref, sinnamon_score
-from repro.serving.serve import LatencyRing, QueryServer
+from repro.obs import metrics as obs_metrics
+from repro.serving.serve import QueryServer
 from repro.serving.sharded import ShardedSinnamonIndex
 
 DS = synth.SparseDatasetSpec("t", n=500, psi_doc=24, psi_query=12,
@@ -306,31 +307,39 @@ def test_pack_unpack_ids64_lossless():
 
 
 # ---------------------------------------------------------------------------
-# QueryServer latency ring
+# QueryServer latency accounting (fixed-size registry histograms)
 # ---------------------------------------------------------------------------
 
-def test_latency_ring_is_bounded():
-    ring = LatencyRing(maxlen=8)
-    ring.extend(range(100))
-    assert len(ring) == 8
-    np.testing.assert_array_equal(np.asarray(ring),
-                                  np.arange(92, 100, dtype=np.float32))
-    ring.clear()
-    assert len(ring) == 0
-    ring.append(5.0)
-    assert np.asarray(ring).tolist() == [5.0]
+def test_latency_histogram_is_bounded():
+    h = obs_metrics.Histogram(obs_metrics.Buckets(1.0, 2.0, 4))
+    for v in range(1000):
+        h.observe(float(v))
+    assert h.count == 1000
+    # storage is the fixed bucket array, independent of sample volume
+    assert len(h.bucket_counts) == 4 + 1
+    h.reset()
+    assert h.count == 0
+    h.observe(5.0)
+    assert h.count == 1 and h.snapshot()["min"] == 5.0
 
 
 def test_query_server_stats_stay_bounded():
     idx, val = synth.make_corpus(14, DS, 64, pad=48)
     index = SinnamonIndex(_spec(64, m=16, h=2))
     index.insert_many(list(range(64)), idx, val)
-    srv = QueryServer(index, k=5, kprime=16, latency_window=16)
+    reg = obs_metrics.MetricsRegistry()
+    srv = QueryServer(index, k=5, kprime=16, registry=reg)
     qi, qv = synth.make_queries(15, DS, 8, pad=24)
     for _ in range(5):
         srv.query_many(qi, qv)
     assert srv.stats["queries"] == 40
-    assert len(srv.stats["latency_ms"]) == 16       # windowed, not unbounded
+    hist = srv._latency_hist(srv._backend_label())
+    assert hist.count == 40                 # one sample per query...
+    # ...but storage stays the fixed bucket array, not a per-sample list
+    assert len(hist.bucket_counts) == obs_metrics.DEFAULT_LATENCY_BUCKETS.count + 1
     pcts = srv.latency_percentiles()
     assert set(pcts) == {"p50", "p90", "p99"}
     assert all(v >= 0 for v in pcts.values())
+    srv.reset_stats()
+    assert srv.stats["queries"] == 0
+    assert srv.latency_percentiles() == {}
