@@ -36,11 +36,11 @@ def _git_sha() -> str:
 
 def main() -> None:
     from benchmarks import (obs_overhead, paper, persist, query_path,
-                            recall, streaming)
+                            recall, serving, streaming)
 
     args = parse_args()
     fns = [fn for fn in paper.ALL + streaming.ALL + persist.ALL
-           + query_path.ALL + recall.ALL + obs_overhead.ALL
+           + query_path.ALL + recall.ALL + obs_overhead.ALL + serving.ALL
            if not args.only or args.only in fn.__name__]
     if not fns:
         print(f"no benchmark matches {args.only!r}", file=sys.stderr)

@@ -6,7 +6,7 @@ compare against the exact LinScan baseline.
 
 import numpy as np
 
-from repro.core.engine import EngineSpec, SinnamonIndex
+from repro.api import IndexConfig, open_index
 from repro.core.linscan import LinScanIndex
 from repro.data import synth
 
@@ -19,8 +19,8 @@ def main():
     qi, qv = synth.make_queries(seed=1, spec=ds, n_queries=5, pad=48)
 
     # --- Sinnamon: sketch size 2m = ψ_d (the paper's mid setting), h=1
-    spec = EngineSpec(n=ds.n, m=30, capacity=2_048, max_nnz=96, h=1)
-    index = SinnamonIndex(spec)
+    index = open_index(IndexConfig(n=ds.n, m=30, capacity=2_048,
+                                   max_nnz=96, h=1))
     index.insert_many(list(range(n_docs)), idx, val)
     print(f"indexed {index.size} docs; "
           f"index bytes: {index.memory_bytes()}")

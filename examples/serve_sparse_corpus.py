@@ -1,20 +1,23 @@
 """End-to-end serving driver (the paper's kind of workload): index a
-SPLADE-like corpus, serve batched queries through the QueryServer with the
-anytime budget as the latency lever, and report recall/latency, including a
-hedged-replica straggler-mitigation run.
+SPLADE-like corpus through the ``repro.api`` facade, serve batched queries
+through the QueryServer with the anytime budget as the latency lever, then
+put the async front door in front of it and show dynamic batching turning
+concurrent clients into fused dispatches.
 
     PYTHONPATH=src python examples/serve_sparse_corpus.py [--docs 20000]
 """
 
 import argparse
+import threading
+import time
 
 import numpy as np
 
-from repro.core.engine import EngineSpec, SinnamonIndex
+from repro.api import IndexConfig, open_index
 from repro.core.linscan import brute_force_topk
 from repro.data import synth
 from repro.obs import MetricsRegistry
-from repro.serving.serve import HedgedServer, QueryServer
+from repro.serving import QueryServer, ServingFrontend
 
 
 def main():
@@ -29,9 +32,8 @@ def main():
     idx, val = synth.make_corpus(0, ds, args.docs, pad=256)
     qi, qv = synth.make_queries(1, ds, args.queries, pad=96)
 
-    spec = EngineSpec(n=ds.n, m=60, capacity=((args.docs + 31) // 32) * 32,
-                      max_nnz=256, h=1, positive_only=True)
-    index = SinnamonIndex(spec)
+    index = open_index(IndexConfig(n=ds.n, m=60, capacity=args.docs,
+                                   max_nnz=256, h=1, positive_only=True))
     bs = 2_048
     for lo in range(0, args.docs, bs):
         index.insert_many(list(range(lo, min(lo + bs, args.docs))),
@@ -46,24 +48,44 @@ def main():
                              registry=MetricsRegistry())
         recalls = []
         for b in range(args.queries):
-            ids, _ = server.query(qi[b], qv[b])
-            recalls.append(len(set(ids.tolist())
+            result = server.query(qi[b], qv[b])      # -> QueryResult
+            recalls.append(len(set(result.ids.tolist())
                                & set(truth[b].tolist())) / args.k)
         lat = server.latency_percentiles()
         print(f"budget={str(budget):>4s}: recall@{args.k}="
               f"{np.mean(recalls):.3f}  latency p50={lat['p50']:.1f}ms "
               f"p99={lat['p99']:.1f}ms")
 
-    # straggler mitigation: 3 replicas, hedged
-    replicas = [QueryServer(index, k=args.k, kprime=800,
-                            registry=MetricsRegistry()) for _ in range(3)]
-    hedged = HedgedServer(replicas, straggler_prob=0.15, straggler_mult=10)
-    for b in range(args.queries):
-        hedged.query(qi[b], qv[b])
-    solo_p99 = replicas[0].latency_percentiles()["p99"]
-    eff = np.asarray(hedged.effective_latency_ms)
-    print(f"hedged replicas: unhedged p99≈{solo_p99*3.1:.1f}"
-          f"ms(with stragglers) → hedged p99={np.percentile(eff, 99):.1f}ms")
+    # --- the async front door: concurrent clients coalesce into fused
+    # query_many dispatches (docs/serving.md); answers stay bit-identical
+    # to the per-query path.
+    server = QueryServer(index, k=args.k, kprime=800, budget=16,
+                         registry=MetricsRegistry())
+    with ServingFrontend(server, max_batch=16, batch_window_ms=2.0,
+                         queue_depth=256) as frontend:
+        frontend.query(qi[0], qv[0])                 # compile warmup
+        t0 = time.perf_counter()
+        lats = []
+        lock = threading.Lock()
+
+        def client(b):
+            for _ in range(8):
+                t = time.perf_counter()
+                frontend.query(qi[b], qv[b])
+                with lock:
+                    lats.append((time.perf_counter() - t) * 1e3)
+
+        threads = [threading.Thread(target=client, args=(b,))
+                   for b in range(min(args.queries, 16))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        print(f"front door: {len(lats)} concurrent queries in {wall:.2f}s "
+              f"({len(lats) / wall:.0f} qps) — p50="
+              f"{np.percentile(lats, 50):.1f}ms "
+              f"p99={np.percentile(lats, 99):.1f}ms")
 
 
 if __name__ == "__main__":

@@ -15,10 +15,10 @@ import tempfile
 
 import numpy as np
 
-from repro.core.engine import EngineSpec
+from repro.api import DurabilityConfig, IndexConfig, open_index
 from repro.core.linscan import brute_force_topk
 from repro.data import synth
-from repro.persist import DurableSinnamonIndex, wal
+from repro.persist import wal
 from repro.persist.compact import drift_metrics
 
 
@@ -40,12 +40,13 @@ def report(step, index, live_idx, live_val, qi, qv, ds):
 def main():
     ds = synth.SparseDatasetSpec("stream", n=4_000, psi_doc=40,
                                  psi_query=16, value_dist="gaussian")
-    spec = EngineSpec(n=ds.n, m=20, capacity=1_024, max_nnz=64, h=1)
     root = tempfile.mkdtemp(prefix="streaming_updates_")
     wal_dir, snap_dir = os.path.join(root, "wal"), os.path.join(root, "snap")
+    config = IndexConfig(n=ds.n, m=20, capacity=1_024, max_nnz=64, h=1,
+                         durability=DurabilityConfig(wal_dir=wal_dir,
+                                                     snapshot_dir=snap_dir))
 
-    index = DurableSinnamonIndex.open(spec, wal_dir=wal_dir,
-                                      snapshot_dir=snap_dir)
+    index = open_index(config)
     feed = synth.StreamingFeed(seed=0, spec=ds, pad=64, delete_ratio=0.25)
 
     live_idx, live_val = {}, {}
@@ -78,8 +79,8 @@ def main():
         f.truncate(os.path.getsize(seg) - 9)     # mid-record, like a power cut
 
     # ---- restart-and-resume: snapshot + WAL tail replay ------------------
-    index = DurableSinnamonIndex.open(spec, wal_dir=wal_dir,
-                                      snapshot_dir=snap_dir)
+    # same config, same dirs -> open_index recovers instead of starting empty
+    index = open_index(config)
     # The torn record is the last, unacknowledged op.  Like a real client,
     # the application re-applies whatever the recovered index is missing
     # relative to its own mirror (a lost insert or a lost delete).

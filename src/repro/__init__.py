@@ -4,11 +4,15 @@
    Sparse Vectors" (Bruch, Nardini, Ingber, Liberty — 2023, cs.IR).
 
 Public surface (see docs/architecture.md for the data-flow map):
+    repro.api         — the facade: IndexConfig + open_index over every
+                        deployment shape; typed QueryResult
     repro.core        — Sinnamon sketch / bit-packed index / engines
                         (Sinnamon, LinScan, WAND) + the §5 error theory
     repro.kernels     — Pallas TPU kernels, XLA twins, scoring-backend dispatch
     repro.storage     — raw padded-CSR vector store (exact rerank source)
-    repro.serving     — QueryServer + the mesh-sharded SPMD index
+    repro.serving     — QueryServer, the async front door (admission,
+                        per-tenant quotas, deadline-aware dynamic batching,
+                        HTTP/JSON door) + loadgen, the mesh-sharded SPMD index
     repro.distributed — mesh helpers, hierarchical top-k candidate merge
     repro.persist     — WAL, snapshots, crash recovery, sketch compaction
     repro.eval        — recall harness, empirical-vs-theory bounds, auto-tuner

@@ -685,6 +685,7 @@ class SinnamonIndex:
 
     def __init__(self, spec: EngineSpec):
         self.spec = spec
+        self.default_backend: Optional[str] = None  # repro.api facade sets this
         self.state = init(spec)
         self._free = list(range(spec.capacity - 1, -1, -1))  # pop() -> slot 0 first
         self._id2slot: dict[int, int] = {}
@@ -775,11 +776,14 @@ class SinnamonIndex:
             backend=self._backend(backend))
         return unpack_ids64(np.asarray(ids)), np.asarray(scores)
 
-    @staticmethod
-    def _backend(backend) -> str:
-        """Resolve the backend OUTSIDE jit so the env default binds at call
-        time (not at trace time) and jit caches key on the concrete choice."""
+    def _backend(self, backend) -> str:
+        """Resolve the backend OUTSIDE jit so the default binds at call
+        time (not at trace time) and jit caches key on the concrete choice.
+        Per-call choice > the index default (``repro.api`` sets it from
+        ``IndexConfig.backend``) > the process env default."""
         from repro.kernels import ops as _ops
+        if backend is None:
+            backend = self.default_backend
         return _ops.resolve_backend(backend)
 
     # -- capacity management ----------------------------------------------------

@@ -43,6 +43,25 @@ Observability (see docs/observability.md):
   loop for kernel-level inspection.
 * ``--hold-seconds S`` keeps the process (and the metrics endpoint) alive
   after the query loop — for scrape-based smoke tests and demos.
+
+Serving front door (see docs/serving.md):
+
+* ``--serve-port P`` boots the async HTTP/JSON front door
+  (``repro.serving.frontend``) on this port after the build/recovery —
+  ``POST /v1/query`` plus the standard ``/metrics`` family on the same
+  port — and holds for ``--hold-seconds``.
+* ``--max-batch B`` / ``--batch-window-ms W`` — dynamic batching: coalesce
+  queries for up to W ms or until B are waiting, then issue ONE fused
+  ``query_many`` dispatch.
+* ``--queue-depth D`` — bounded admission queue; requests beyond D are
+  rejected with 429 + Retry-After (explicit backpressure).
+* ``--deadline-ms T`` — default per-request deadline; queries whose budget
+  elapses while queued are dropped and counted, not served late.
+
+Index construction goes through the ``repro.api`` facade: the flags here
+are argparse spellings of :class:`repro.api.IndexConfig` (and the ``--wal``
+family of :class:`repro.api.DurabilityConfig`), and the launcher calls
+``open_index`` exactly like library code should.
 """
 
 from __future__ import annotations
@@ -109,6 +128,22 @@ def parse_args(argv=None):
     ap.add_argument("--hold-seconds", type=float, default=0.0, metavar="S",
                     help="keep the process (and metrics endpoint) alive "
                          "this long after the query loop")
+    ap.add_argument("--serve-port", type=int, default=None, metavar="P",
+                    help="boot the HTTP/JSON front door (POST /v1/query + "
+                         "/metrics family) on this port (0 = OS-assigned) "
+                         "and hold for --hold-seconds")
+    ap.add_argument("--max-batch", type=int, default=16, metavar="B",
+                    help="front door: max queries coalesced into one fused "
+                         "dispatch")
+    ap.add_argument("--batch-window-ms", type=float, default=2.0,
+                    metavar="W", help="front door: max coalesce wait after "
+                                      "the first queued query")
+    ap.add_argument("--queue-depth", type=int, default=128, metavar="D",
+                    help="front door: bounded admission queue; beyond this "
+                         "requests get 429 + Retry-After")
+    ap.add_argument("--deadline-ms", type=float, default=1000.0, metavar="T",
+                    help="front door: default per-request deadline; "
+                         "requests expiring in-queue are dropped + counted")
     args = ap.parse_args(argv)
     if args.trace_every is None:
         args.trace_every = 32 if (args.metrics_port is not None
@@ -171,13 +206,11 @@ def main():
 
     import numpy as np
 
-    from repro.core.engine import EngineSpec, SinnamonIndex
+    from repro.api import DurabilityConfig, IndexConfig, open_index
     from repro.core.linscan import brute_force_topk
     from repro.data import synth
-    from repro.distributed import mesh as meshlib
     from repro.obs import EventLog, MetricsServer, set_event_log
     from repro.serving.serve import QueryServer
-    from repro.serving.sharded import ShardedSinnamonIndex
 
     metrics_server = None
     if args.metrics_port is not None:
@@ -213,9 +246,6 @@ def main():
               f"{pt['predicted_index_bytes'] / 2**20:.2f} MiB @ {args.docs} "
               f"docs, sample recall@{args.k}={pt['recall_at_k']:.3f} "
               f"({'meets constraints' if result.feasible else 'NO feasible point — best-recall fallback'})")
-    durable = dict(wal_dir=args.wal, snapshot_dir=args.snapshot_dir,
-                   snapshot_every=args.snapshot_every,
-                   compact_threshold=args.compact_threshold)
     if args.wal:
         # Recovery serves the PREVIOUS run's vectors, while the corpus and
         # the recall ground truth are regenerated from the flags — and
@@ -223,28 +253,19 @@ def main():
         # mix durable state with a differently-drawn corpus (or a spec the
         # snapshot would silently override).
         _check_launch_params(args)
-    if args.shards > 1:
-        cap_local = ((cap // args.shards + 31) // 32) * 32
-        spec = EngineSpec(n=ds.n, m=args.m, h=args.h, capacity=cap_local,
-                          max_nnz=256, positive_only=ds.nonneg,
-                          index_buckets=args.index_buckets,
-                          sketch_kind=sketch_kind, dtype=cell_dtype)
-        mesh = meshlib.make_mesh((1, args.shards), ("data", "model"))
-        if args.wal:
-            from repro.persist import DurableShardedSinnamonIndex
-            index = DurableShardedSinnamonIndex.open(spec, mesh, **durable)
-        else:
-            index = ShardedSinnamonIndex(spec, mesh)
-    else:
-        spec = EngineSpec(n=ds.n, m=args.m, h=args.h, capacity=cap,
-                          max_nnz=256, positive_only=ds.nonneg,
-                          index_buckets=args.index_buckets,
-                          sketch_kind=sketch_kind, dtype=cell_dtype)
-        if args.wal:
-            from repro.persist import DurableSinnamonIndex
-            index = DurableSinnamonIndex.open(spec, **durable)
-        else:
-            index = SinnamonIndex(spec)
+    durability = None
+    if args.wal:
+        durability = DurabilityConfig(
+            wal_dir=args.wal, snapshot_dir=args.snapshot_dir,
+            snapshot_every=args.snapshot_every,
+            compact_threshold=args.compact_threshold)
+    config = IndexConfig(
+        n=ds.n, capacity=cap, m=args.m, h=args.h, max_nnz=256,
+        positive_only=ds.nonneg, index_buckets=args.index_buckets,
+        sketch_kind=sketch_kind, cell_dtype=cell_dtype,
+        backend=args.score_backend, shards=args.shards,
+        durability=durability)
+    index = open_index(config)
     recovered = index.size
     if recovered:
         print(f"recovered {recovered} docs from snapshot + WAL tail")
@@ -287,14 +308,34 @@ def main():
     print(f"recall@{args.k}={np.mean(recalls):.3f}  "
           f"p50={lat['p50']:.1f}ms p90={lat['p90']:.1f}ms "
           f"p99={lat['p99']:.1f}ms", flush=True)
+    frontend = front_door = None
+    if args.serve_port is not None:
+        from repro.serving.frontend import FrontendServer, ServingFrontend
+        frontend = ServingFrontend(
+            server, max_batch=args.max_batch,
+            batch_window_ms=args.batch_window_ms,
+            queue_depth=args.queue_depth,
+            default_deadline_ms=args.deadline_ms)
+        front_door = FrontendServer(frontend, port=args.serve_port).start()
+        print(f"front door: POST {front_door.url}/v1/query "
+              f"(max_batch={args.max_batch}, "
+              f"window={args.batch_window_ms:g}ms, "
+              f"queue_depth={args.queue_depth}, "
+              f"deadline={args.deadline_ms:g}ms); "
+              f"metrics also on {front_door.url}/metrics", flush=True)
     if args.hold_seconds > 0:
         import time
         print(f"holding for {args.hold_seconds:.0f}s "
-              f"(metrics stay scrapeable); Ctrl-C to exit", flush=True)
+              f"(front door and metrics stay up); Ctrl-C to exit",
+              flush=True)
         try:
             time.sleep(args.hold_seconds)
         except KeyboardInterrupt:
             pass
+    if front_door is not None:
+        front_door.stop()
+    if frontend is not None:
+        frontend.close()
     log = set_event_log(None)
     if log is not None:
         log.close()

@@ -17,7 +17,29 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
 from repro.obs import metrics as _metrics
 
-__all__ = ["MetricsServer"]
+__all__ = ["MetricsServer", "registry_endpoints"]
+
+
+def registry_endpoints(registry) -> dict:
+    """The standard observability GET endpoints as ``{path: () -> (body,
+    content_type)}`` thunks.
+
+    `MetricsServer` serves exactly these; other HTTP front doors (e.g. the
+    serving frontend in ``repro.serving.frontend``) mount the same map so
+    every server in the system exposes ``/metrics`` identically.
+    """
+    def metrics():
+        return (registry.exposition().encode("utf-8"),
+                "text/plain; version=0.0.4; charset=utf-8")
+
+    def metrics_json():
+        return registry.to_json().encode("utf-8"), "application/json"
+
+    def healthz():
+        return b"ok\n", "text/plain; charset=utf-8"
+
+    return {"/metrics": metrics, "/": metrics,
+            "/metrics.json": metrics_json, "/healthz": healthz}
 
 
 class MetricsServer:
@@ -29,22 +51,15 @@ class MetricsServer:
         self._thread = None
 
     def start(self) -> "MetricsServer":
-        registry = self.registry
+        endpoints = registry_endpoints(self.registry)
 
         class Handler(BaseHTTPRequestHandler):
             def do_GET(self):  # noqa: N802 - http.server API
-                if self.path in ("/metrics", "/"):
-                    body = registry.exposition().encode("utf-8")
-                    ctype = "text/plain; version=0.0.4; charset=utf-8"
-                elif self.path == "/metrics.json":
-                    body = registry.to_json().encode("utf-8")
-                    ctype = "application/json"
-                elif self.path == "/healthz":
-                    body = b"ok\n"
-                    ctype = "text/plain; charset=utf-8"
-                else:
+                endpoint = endpoints.get(self.path)
+                if endpoint is None:
                     self.send_error(404)
                     return
+                body, ctype = endpoint()
                 self.send_response(200)
                 self.send_header("Content-Type", ctype)
                 self.send_header("Content-Length", str(len(body)))

@@ -1,0 +1,39 @@
+"""Host-side serving surface over the Sinnamon engine.
+
+Two levels (docs/serving.md):
+
+* `QueryServer.query` / `QueryServer.query_many` — synchronous, typed
+  (`QueryResult`), instrumented single-index serving;
+* `ServingFrontend` / `FrontendServer` — the async front door: bounded
+  admission queue with explicit backpressure, per-tenant token-bucket
+  quotas, and deadline-aware dynamic batching into fused ``query_many``
+  dispatches, plus the stdlib HTTP/JSON endpoint.
+
+`repro.serving.loadgen` drives offered-load sweeps against either level.
+"""
+
+from repro.serving import loadgen
+from repro.serving.frontend import (
+    DeadlineExceeded,
+    FrontendServer,
+    Rejected,
+    ServingFrontend,
+    TenantQuota,
+)
+from repro.serving.results import QueryResult, new_trace_id
+from repro.serving.serve import HedgedServer, QueryServer
+from repro.serving.sharded import ShardedSinnamonIndex
+
+__all__ = [
+    "DeadlineExceeded",
+    "FrontendServer",
+    "HedgedServer",
+    "QueryResult",
+    "QueryServer",
+    "Rejected",
+    "ServingFrontend",
+    "ShardedSinnamonIndex",
+    "TenantQuota",
+    "loadgen",
+    "new_trace_id",
+]

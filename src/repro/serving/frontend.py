@@ -1,0 +1,550 @@
+"""Async serving front door: admission, deadline-aware dynamic batching,
+per-tenant quotas, and a stdlib HTTP/JSON endpoint.
+
+This is the layer that models *concurrent clients* over the fused batched
+query path — the GPUExecutor shape: a bounded admission queue decouples
+request intake from device execution, and one dispatcher thread drains it
+into single fused ``query_many`` dispatches.
+
+Pipeline (see docs/serving.md for the full diagram and SLO guidance)::
+
+    client threads / HTTP handlers
+        │  submit(q, tenant, deadline)
+        ▼
+    [admission]  per-tenant token bucket ──✗──► Rejected(throttled,
+        │                                        retry_after)
+        ▼
+    [queue]  bounded depth ──✗──► Rejected(queue_full, retry_after)
+        │                         (explicit backpressure, never silent
+        ▼                          blocking)
+    [dispatcher thread]  coalesce: wait ≤ batch_window_ms OR until
+        │                max_batch queued, whichever first
+        │   drop + count queries whose deadline elapsed while queued
+        ▼
+    QueryServer.query_many  — ONE fused dispatch for the whole batch
+        │
+        ▼
+    per-request ``QueryResult`` futures (bit-identical to per-query
+    ``query()`` answers — batching is a scheduling optimization, never a
+    semantic one; asserted in tests/test_frontend.py)
+
+Shape discipline: every dispatch is padded to exactly
+``(max_batch, query_pad·j)`` so the jit cache holds one program per width
+bucket instead of one per (B, Lq) combination.  Padding rows/coordinates
+contribute exact zeros, which is why coalesced answers stay bit-identical.
+
+All queue/batch/latency/drop behaviour reports into the ``repro.obs``
+registry (metric catalog: docs/observability.md, "Serving front door").
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import server as obs_server
+from repro.serving.results import QueryResult, new_trace_id
+
+__all__ = [
+    "DeadlineExceeded",
+    "FrontendServer",
+    "Rejected",
+    "ServingFrontend",
+    "TenantQuota",
+]
+
+
+class Rejected(RuntimeError):
+    """Admission failure — the request never entered the queue.
+
+    ``reason`` is ``"queue_full"`` (backpressure: the bounded admission
+    queue is at depth) or ``"throttled"`` (the tenant's token bucket is
+    empty).  ``retry_after_ms`` is the server's estimate of when capacity
+    will exist; the HTTP front door surfaces it as a ``Retry-After`` header
+    on a 429.
+    """
+
+    def __init__(self, reason: str, retry_after_ms: float, tenant: str):
+        super().__init__(f"rejected ({reason}, tenant={tenant!r}): "
+                         f"retry after {retry_after_ms:.1f} ms")
+        self.reason = reason
+        self.retry_after_ms = float(retry_after_ms)
+        self.tenant = tenant
+
+
+class DeadlineExceeded(RuntimeError):
+    """The request's deadline elapsed while it sat in the queue.
+
+    The query was admitted but never dispatched: spending device time on an
+    answer nobody is still waiting for only steals capacity from requests
+    that can still meet their deadline, so the dispatcher drops and counts
+    it instead.
+    """
+
+    def __init__(self, queued_ms: float, deadline_ms: float):
+        super().__init__(f"deadline of {deadline_ms:.1f} ms elapsed after "
+                         f"{queued_ms:.1f} ms in queue")
+        self.queued_ms = queued_ms
+        self.deadline_ms = deadline_ms
+
+
+@dataclass(frozen=True)
+class TenantQuota:
+    """Token-bucket quota: sustained ``rate_qps`` with ``burst`` headroom."""
+
+    rate_qps: float
+    burst: float = 0.0      # 0 -> defaults to max(rate_qps, 1)
+
+    def resolved_burst(self) -> float:
+        return self.burst if self.burst > 0 else max(self.rate_qps, 1.0)
+
+
+class _TokenBucket:
+    def __init__(self, quota: TenantQuota, now: float):
+        self.rate = float(quota.rate_qps)
+        self.burst = float(quota.resolved_burst())
+        self.tokens = self.burst
+        self.t = now
+        self.lock = threading.Lock()
+
+    def try_take(self, now: float) -> float:
+        """0.0 when a token was taken, else seconds until one exists."""
+        with self.lock:
+            self.tokens = min(self.burst,
+                              self.tokens + (now - self.t) * self.rate)
+            self.t = now
+            if self.tokens >= 1.0:
+                self.tokens -= 1.0
+                return 0.0
+            return (1.0 - self.tokens) / self.rate if self.rate > 0 \
+                else math.inf
+
+
+@dataclass
+class _Pending:
+    q_idx: np.ndarray
+    q_val: np.ndarray
+    k: Optional[int]
+    tenant: str
+    deadline_ms: float
+    deadline: float              # clock timestamp
+    enqueued: float              # clock timestamp
+    trace_id: str
+    future: Future = field(default_factory=Future)
+
+
+def _pad_batch(items, width: int, rows: int):
+    """Pad sparse queries to one ``[rows, width]`` rectangle.
+
+    Shorter queries pad with (idx=-1, val=0) — scoring treats idx<0 as
+    absent and the contribution is an exact 0.0, so padding never changes a
+    real row's answer.  Rows beyond ``len(items)`` are all-padding dummy
+    queries whose results are discarded.
+    """
+    qi = np.full((rows, width), -1, np.int32)
+    qv = np.zeros((rows, width), np.float32)
+    for b, p in enumerate(items):
+        L = p.q_idx.shape[0]
+        qi[b, :L] = p.q_idx
+        qv[b, :L] = p.q_val
+    return qi, qv
+
+
+class ServingFrontend:
+    """Deadline-aware dynamically batching front end over a `QueryServer`.
+
+    The only thing this class asks of ``server`` is ``query_many`` returning
+    a batched :class:`QueryResult` and a ``k`` attribute, so tests can stub
+    the device side, and any index layout the ``QueryServer`` handles
+    (single, sharded, durable) serves through it unchanged.
+
+    Admission (caller thread, never blocks on the device):
+
+    1. per-tenant token bucket (``quotas`` / ``default_quota``; None =
+       unthrottled) — failure raises :class:`Rejected` ("throttled");
+    2. bounded queue (``queue_depth``) — failure raises :class:`Rejected`
+       ("queue_full") with a retry-after derived from the queue's current
+       drain rate.
+
+    Dispatch (single daemon thread): collect for ``batch_window_ms`` after
+    the first waiting request OR until ``max_batch`` requests are queued,
+    whichever comes first; drop queued requests whose deadline has already
+    elapsed (their futures fail with :class:`DeadlineExceeded`); pad to the
+    fixed ``(max_batch, width_bucket)`` rectangle; one fused
+    ``query_many``; split the batched result into per-request futures.
+
+    ``submit`` returns a ``concurrent.futures.Future[QueryResult]``;
+    :meth:`query` is the blocking convenience wrapper.
+    """
+
+    def __init__(self, server, *, max_batch: int = 16,
+                 batch_window_ms: float = 2.0, queue_depth: int = 128,
+                 default_deadline_ms: float = 1000.0,
+                 quotas: Optional[Dict[str, TenantQuota]] = None,
+                 default_quota: Optional[TenantQuota] = None,
+                 query_pad: int = 32, registry=None,
+                 clock=time.monotonic):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if queue_depth < 1:
+            raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
+        self.server = server
+        self.max_batch = int(max_batch)
+        self.batch_window_s = float(batch_window_ms) / 1e3
+        self.queue_depth = int(queue_depth)
+        self.default_deadline_ms = float(default_deadline_ms)
+        self.query_pad = int(query_pad)
+        self.quotas = dict(quotas or {})
+        self.default_quota = default_quota
+        self.registry = (obs_metrics.get_registry() if registry is None
+                         else registry)
+        self._clock = clock
+        self._queue: deque[_Pending] = deque()
+        self._cv = threading.Condition()
+        self._buckets: Dict[str, _TokenBucket] = {}
+        self._buckets_lock = threading.Lock()
+        self._closed = False
+        self._ewma_service_s = 0.0           # drain-rate estimate for 429s
+        self._metrics_init()
+        self._dispatcher = threading.Thread(target=self._dispatch_loop,
+                                            name="frontend-dispatch",
+                                            daemon=True)
+        self._dispatcher.start()
+
+    # -- metrics -------------------------------------------------------------
+    def _metrics_init(self):
+        reg = self.registry
+        self._m_depth = reg.gauge(
+            "repro_frontend_queue_depth",
+            "Requests currently waiting in the admission queue.")
+        self._m_batch = reg.histogram(
+            "repro_frontend_batch_size",
+            "Live queries per coalesced dispatch.",
+            buckets=obs_metrics.DEFAULT_COUNT_BUCKETS)
+        self._m_wait = reg.histogram(
+            "repro_frontend_coalesce_wait_ms",
+            "Oldest-request wait from enqueue to dispatch.")
+        self._m_dispatch = reg.counter(
+            "repro_frontend_dispatches_total",
+            "Coalesced device dispatches issued.")
+        self._m_expired = reg.counter(
+            "repro_frontend_expired_total",
+            "Queries dropped because their deadline elapsed while queued.")
+
+    def _m_outcome(self, tenant: str, outcome: str):
+        return self.registry.counter(
+            "repro_frontend_requests_total",
+            "Front-door requests by tenant and outcome.",
+            labels={"tenant": tenant, "outcome": outcome})
+
+    def _m_reject(self, reason: str):
+        return self.registry.counter(
+            "repro_frontend_rejected_total",
+            "Admission rejections (explicit backpressure) by reason.",
+            labels={"reason": reason})
+
+    def _m_throttle(self, tenant: str):
+        return self.registry.counter(
+            "repro_frontend_throttled_total",
+            "Token-bucket quota rejections per tenant.",
+            labels={"tenant": tenant})
+
+    def _m_latency(self, tenant: str):
+        return self.registry.histogram(
+            "repro_frontend_latency_ms",
+            "End-to-end front-door latency (admission to response).",
+            labels={"tenant": tenant})
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, q_idx, q_val, *, tenant: str = "default",
+               deadline_ms: Optional[float] = None,
+               k: Optional[int] = None) -> Future:
+        """Admit one query; returns a ``Future[QueryResult]``.
+
+        Raises :class:`Rejected` synchronously when admission fails (quota
+        or queue depth); the future fails with :class:`DeadlineExceeded`
+        when the deadline elapses in-queue, or with the device error if the
+        dispatch itself fails.
+        """
+        if self._closed:
+            raise RuntimeError("frontend is closed")
+        now = self._clock()
+        deadline_ms = (self.default_deadline_ms if deadline_ms is None
+                       else float(deadline_ms))
+        quota = self.quotas.get(tenant, self.default_quota)
+        if quota is not None:
+            with self._buckets_lock:
+                bucket = self._buckets.get(tenant)
+                if bucket is None:
+                    bucket = self._buckets[tenant] = _TokenBucket(quota, now)
+            wait_s = bucket.try_take(now)
+            if wait_s > 0:
+                self._m_throttle(tenant).inc()
+                self._m_reject("throttled").inc()
+                self._m_outcome(tenant, "rejected_throttled").inc()
+                raise Rejected("throttled", wait_s * 1e3, tenant)
+        p = _Pending(
+            q_idx=np.asarray(q_idx, np.int32).reshape(-1),
+            q_val=np.asarray(q_val, np.float32).reshape(-1),
+            k=k, tenant=tenant, deadline_ms=deadline_ms,
+            deadline=now + deadline_ms / 1e3, enqueued=now,
+            trace_id=new_trace_id())
+        if p.q_idx.shape != p.q_val.shape:
+            raise ValueError(f"query idx/val length mismatch: "
+                             f"{p.q_idx.shape[0]} vs {p.q_val.shape[0]}")
+        with self._cv:
+            if len(self._queue) >= self.queue_depth:
+                # Explicit backpressure: hand the client a retry hint
+                # instead of silently blocking its thread on our queue.
+                per = self._ewma_service_s or self.batch_window_s or 1e-3
+                retry_ms = per * (1 + len(self._queue) / self.max_batch) * 1e3
+                self._m_reject("queue_full").inc()
+                self._m_outcome(tenant, "rejected_queue_full").inc()
+                raise Rejected("queue_full", retry_ms, tenant)
+            self._queue.append(p)
+            self._m_depth.set(len(self._queue))
+            self._cv.notify_all()
+        return p.future
+
+    def query(self, q_idx, q_val, *, tenant: str = "default",
+              deadline_ms: Optional[float] = None,
+              k: Optional[int] = None) -> QueryResult:
+        """Blocking convenience wrapper over :meth:`submit`."""
+        return self.submit(q_idx, q_val, tenant=tenant,
+                           deadline_ms=deadline_ms, k=k).result()
+
+    # -- dispatch ------------------------------------------------------------
+    def _take_batch(self):
+        """Wait for work, coalesce, and pop up to ``max_batch`` requests."""
+        with self._cv:
+            while not self._queue and not self._closed:
+                self._cv.wait()
+            if not self._queue:
+                return []
+            first = self._queue[0].enqueued
+            while (len(self._queue) < self.max_batch and not self._closed):
+                remaining = first + self.batch_window_s - self._clock()
+                if remaining <= 0:
+                    break
+                self._cv.wait(timeout=remaining)
+                if not self._queue:          # everything got drained/closed
+                    return []
+                first = self._queue[0].enqueued
+            n = min(len(self._queue), self.max_batch)
+            batch = [self._queue.popleft() for _ in range(n)]
+            self._m_depth.set(len(self._queue))
+            return batch
+
+    def _dispatch_loop(self):
+        while True:
+            batch = self._take_batch()
+            if not batch:
+                if self._closed:
+                    return
+                continue
+            now = self._clock()
+            live = []
+            for p in batch:
+                if p.deadline < now:
+                    self._m_expired.inc()
+                    self._m_outcome(p.tenant, "expired").inc()
+                    p.future.set_exception(DeadlineExceeded(
+                        (now - p.enqueued) * 1e3, p.deadline_ms))
+                else:
+                    live.append(p)
+            if not live:
+                continue
+            self._m_wait.observe(
+                (now - min(p.enqueued for p in live)) * 1e3)
+            self._m_batch.observe(len(live))
+            self._m_dispatch.inc()
+            t0 = self._clock()
+            try:
+                width = max(p.q_idx.shape[0] for p in live)
+                width = max(self.query_pad,
+                            -(-width // self.query_pad) * self.query_pad)
+                qi, qv = _pad_batch(live, width, self.max_batch)
+                res = self.server.query_many(qi, qv)
+            except Exception as e:                       # noqa: BLE001
+                for p in live:
+                    self._m_outcome(p.tenant, "error").inc()
+                    p.future.set_exception(e)
+                continue
+            dt = self._clock() - t0
+            a = 0.2        # smooth the drain-rate estimate for 429 hints
+            self._ewma_service_s = (dt if self._ewma_service_s == 0
+                                    else a * dt + (1 - a) * self._ewma_service_s)
+            done = self._clock()
+            for i, p in enumerate(live):
+                out = res.row(i, k=p.k, trace_id=p.trace_id)
+                self._m_outcome(p.tenant, "ok").inc()
+                self._m_latency(p.tenant).observe((done - p.enqueued) * 1e3)
+                p.future.set_result(out)
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self, drain: bool = True) -> None:
+        """Stop the dispatcher.  With ``drain`` (default) queued requests
+        are served first; otherwise their futures fail with `Rejected`."""
+        with self._cv:
+            self._closed = True
+            if not drain:
+                while self._queue:
+                    p = self._queue.popleft()
+                    self._m_outcome(p.tenant, "rejected_shutdown").inc()
+                    p.future.set_exception(
+                        Rejected("shutdown", 0.0, p.tenant))
+                self._m_depth.set(0)
+            self._cv.notify_all()
+        self._dispatcher.join(timeout=30)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        self.close()
+        return False
+
+
+# ---------------------------------------------------------------------------
+# HTTP/JSON front door
+# ---------------------------------------------------------------------------
+
+class FrontendServer:
+    """Stdlib HTTP/JSON front door over a :class:`ServingFrontend`.
+
+    Endpoints:
+
+    * ``POST /v1/query`` — body ``{"indices": [...], "values": [...]}`` plus
+      optional ``"k"``, ``"tenant"``, ``"deadline_ms"``; responds 200 with
+      ``{"ids", "scores", "k", "backend", "trace_id"}``, 429 +
+      ``Retry-After`` on admission rejection, 504 on in-queue deadline
+      expiry, 400 on malformed input.
+    * the standard observability endpoints (``/metrics``,
+      ``/metrics.json``, ``/healthz``) mounted from ``repro.obs.server`` —
+      one port serves both queries and scrapes.
+
+    Handlers block in ``frontend.query`` (each connection gets a thread via
+    ``ThreadingHTTPServer``), so concurrent clients coalesce into fused
+    batches exactly like in-process callers.
+    """
+
+    def __init__(self, frontend: ServingFrontend, host: str = "127.0.0.1",
+                 port: int = 0, registry=None):
+        self.frontend = frontend
+        self.host = host
+        self.port = int(port)
+        self.registry = (frontend.registry if registry is None else registry)
+        self._httpd = None
+        self._thread = None
+
+    def start(self) -> "FrontendServer":
+        frontend = self.frontend
+        get_endpoints = obs_server.registry_endpoints(self.registry)
+
+        class Handler(BaseHTTPRequestHandler):
+            def _reply(self, code: int, body: bytes, ctype: str,
+                       headers=()):
+                self.send_response(code)
+                self.send_header("Content-Type", ctype)
+                self.send_header("Content-Length", str(len(body)))
+                for k, v in headers:
+                    self.send_header(k, v)
+                self.end_headers()
+                self.wfile.write(body)
+
+            def _reply_json(self, code: int, doc: dict, headers=()):
+                self._reply(code, json.dumps(doc).encode("utf-8"),
+                            "application/json", headers)
+
+            def do_GET(self):  # noqa: N802 - http.server API
+                endpoint = get_endpoints.get(self.path)
+                if endpoint is None:
+                    self.send_error(404)
+                    return
+                body, ctype = endpoint()
+                self._reply(200, body, ctype)
+
+            def do_POST(self):  # noqa: N802 - http.server API
+                if self.path != "/v1/query":
+                    self.send_error(404)
+                    return
+                try:
+                    length = int(self.headers.get("Content-Length", 0))
+                    doc = json.loads(self.rfile.read(length))
+                    q_idx = np.asarray(doc["indices"], np.int32)
+                    q_val = np.asarray(doc["values"], np.float32)
+                    if q_idx.ndim != 1 or q_idx.shape != q_val.shape:
+                        raise ValueError("indices/values must be equal-"
+                                         "length 1-d arrays")
+                    tenant = str(doc.get("tenant", "default"))
+                    deadline_ms = doc.get("deadline_ms")
+                    k = doc.get("k")
+                except (KeyError, TypeError, ValueError,
+                        json.JSONDecodeError) as e:
+                    self._reply_json(400, {"error": "bad_request",
+                                           "detail": str(e)})
+                    return
+                try:
+                    res = frontend.query(q_idx, q_val, tenant=tenant,
+                                         deadline_ms=deadline_ms, k=k)
+                except Rejected as e:
+                    self._reply_json(
+                        429, {"error": "rejected", "reason": e.reason,
+                              "retry_after_ms": e.retry_after_ms},
+                        headers=[("Retry-After",
+                                  str(max(1, math.ceil(e.retry_after_ms
+                                                       / 1e3))))])
+                    return
+                except DeadlineExceeded as e:
+                    self._reply_json(504, {"error": "deadline_exceeded",
+                                           "queued_ms": round(e.queued_ms, 3),
+                                           "deadline_ms": e.deadline_ms})
+                    return
+                self._reply_json(200, {
+                    "ids": [int(i) for i in res.ids],
+                    "scores": [float(s) for s in res.scores],
+                    "k": res.k, "backend": res.backend,
+                    "trace_id": res.trace_id})
+
+            def log_message(self, fmt, *args):
+                pass    # request logging belongs to metrics, not stderr
+
+        self._httpd = ThreadingHTTPServer((self.host, self.port), Handler)
+        self._httpd.daemon_threads = True
+        self.port = self._httpd.server_address[1]
+        self._thread = threading.Thread(target=self._httpd.serve_forever,
+                                        name="frontend-http", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        if self._httpd is not None:
+            self._httpd.shutdown()
+            self._httpd.server_close()
+            self._httpd = None
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def __enter__(self):
+        if self._httpd is None:
+            self.start()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        self.stop()
+        return False

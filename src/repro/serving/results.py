@@ -1,0 +1,88 @@
+"""Typed query results for the serving surface.
+
+The two-level serving API (documented in docs/serving.md):
+
+* **Level 1 — functional**: ``repro.core.engine.search`` /
+  ``search_batch`` are pure jittable functions of ``(state, spec)``;
+  they return device arrays and exist for composition (shard_map bodies,
+  staged tracing, custom pipelines).
+* **Level 2 — host serving**: ``QueryServer.query`` / ``query_many`` (and
+  the async front door, ``repro.serving.frontend``) own host concerns —
+  metrics, tracing, padding — and return a :class:`QueryResult`.
+
+``QueryResult`` is frozen (the arrays it carries are the response; mutate
+copies, not the result) and remains unpackable as the legacy
+``(ids, scores)`` tuple so existing call sites keep working during the
+migration to the typed surface.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import os
+import threading
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["QueryResult", "new_trace_id"]
+
+_trace_counter = itertools.count(1)
+_trace_lock = threading.Lock()
+
+
+def new_trace_id() -> str:
+    """Process-unique, monotonically increasing query trace id."""
+    with _trace_lock:
+        n = next(_trace_counter)
+    return f"q-{os.getpid():x}-{n:x}"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class QueryResult:
+    """One query (or query batch) answer from the serving surface.
+
+    ``ids``/``scores`` are ``[k]`` for :meth:`QueryServer.query` and
+    ``[B, k]`` for :meth:`QueryServer.query_many` / coalesced front-door
+    batches.  ``backend`` is the resolved scoring backend that produced the
+    candidates (``reference | grouped | pallas | custom``); ``trace_id``
+    correlates the response with metric samples and event-log entries.
+
+    Tuple-compat shim: iterating/indexing yields ``(ids, scores)`` so legacy
+    ``ids, scores = server.query(...)`` call sites keep working.
+    """
+
+    ids: np.ndarray
+    scores: np.ndarray
+    k: int
+    backend: str
+    trace_id: str
+
+    # -- legacy (ids, scores) tuple compatibility ---------------------------
+    def __iter__(self):
+        return iter((self.ids, self.scores))
+
+    def __getitem__(self, i):
+        return (self.ids, self.scores)[i]
+
+    def __len__(self) -> int:
+        return 2
+
+    # -- batch helpers -------------------------------------------------------
+    @property
+    def batch_size(self) -> Optional[int]:
+        """B for a batched result, None for a single-query result."""
+        return self.ids.shape[0] if self.ids.ndim == 2 else None
+
+    def row(self, i: int, k: Optional[int] = None,
+            trace_id: Optional[str] = None) -> "QueryResult":
+        """Per-request slice of a batched result (optionally trimmed to a
+        smaller ``k``); the front door uses this to split a coalesced batch
+        back into individual responses."""
+        if self.ids.ndim != 2:
+            raise ValueError("row() is only defined on batched results")
+        kk = self.k if k is None else min(int(k), self.k)
+        return QueryResult(ids=self.ids[i, :kk], scores=self.scores[i, :kk],
+                           k=kk, backend=self.backend,
+                           trace_id=trace_id or self.trace_id)

@@ -1,11 +1,17 @@
 """Host-side serving drivers for the retrieval engine.
 
 * ``QueryServer`` — batched query serving over a (possibly sharded) Sinnamon
-  index with the paper's anytime budget as the latency lever.  Every query
-  reports into a metrics registry (`repro.obs`): latency/batch histograms
-  per scoring backend, plus — on sampled queries (``trace_every``) — a
-  per-stage span breakdown (admission → sketch scan → top-k merge →
-  rerank) recorded by running the same math as separate synced dispatches.
+  index with the paper's anytime budget as the latency lever.  ``query`` /
+  ``query_many`` return a typed :class:`repro.serving.results.QueryResult`
+  (ids, scores, k, backend, trace id) — the level-2 host surface over the
+  level-1 functional ``engine.search`` / ``search_batch`` (see
+  docs/serving.md).  Every query reports into a metrics registry
+  (`repro.obs`): latency/batch histograms per scoring backend, plus — on
+  sampled queries (``trace_every``) — a per-stage span breakdown
+  (admission → sketch scan → top-k merge → rerank) recorded by running the
+  same math as separate synced dispatches.  Concurrent-client admission,
+  dynamic batching and quotas live one level up, in
+  ``repro.serving.frontend``.
 * ``HedgedServer`` — straggler mitigation: the same query is issued to R
   replica indexes and the first completed answer wins.  On real clusters the
   replicas are distinct hosts; here they are distinct index objects and the
@@ -17,6 +23,7 @@
 from __future__ import annotations
 
 import time
+import warnings
 from functools import partial
 from typing import Optional, Sequence, Union
 
@@ -30,6 +37,7 @@ from repro.obs import events as obs_events
 from repro.obs import metrics as obs_metrics
 from repro.obs.instrument import install_engine_gauges
 from repro.obs.trace import Trace
+from repro.serving.results import QueryResult, new_trace_id
 from repro.serving.sharded import ShardedSinnamonIndex
 
 #: Stage names of the staged (traced) single-device query path, in order.
@@ -123,7 +131,10 @@ class QueryServer:
         if self.score_fn is not None:
             return "custom"
         from repro.kernels import ops as _ops
-        return _ops.resolve_backend(self.score_backend)
+        backend = self.score_backend
+        if backend is None:     # index default (repro.api) > process default
+            backend = getattr(self.index, "default_backend", None)
+        return _ops.resolve_backend(backend)
 
     def _hist(self, name: str, help_text: str, labels=None, buckets=None):
         key = (name, tuple(sorted((labels or {}).items())))
@@ -140,24 +151,31 @@ class QueryServer:
                           labels={"backend": backend})
 
     # -- serving -------------------------------------------------------------
-    def query(self, q_idx, q_val):
+    def query(self, q_idx, q_val) -> QueryResult:
+        """Serve one query.  Returns a :class:`repro.serving.QueryResult`
+        (``[k]`` ids/scores; unpackable as the legacy ``(ids, scores)``)."""
         backend = self._backend_label()
+        trace_id = new_trace_id()
         t0 = time.perf_counter()
         ids, scores = self.index.search(
             q_idx, q_val, k=self.k, kprime=self.kprime, budget=self.budget,
             score_fn=self.score_fn, backend=self.score_backend)
         self._record(1, (time.perf_counter() - t0) * 1e3, backend)
-        return ids, scores
+        return QueryResult(ids=ids, scores=scores, k=len(ids),
+                           backend=backend, trace_id=trace_id)
 
-    def query_many(self, q_idx, q_val):
+    def query_many(self, q_idx, q_val) -> QueryResult:
         """Batched serving path: [B, Lq] queries in ONE device dispatch.
 
         Amortizes dispatch + (on a sharded index) the candidate merge across
         the batch; per-query latency is recorded as batch time / B, so the
-        percentile accounting stays comparable with :meth:`query`.
+        percentile accounting stays comparable with :meth:`query`.  Returns
+        one batched :class:`QueryResult` (``[B, k]``; ``.row(i)`` slices out
+        a per-request result).
         """
         bn = len(q_idx)
         backend = self._backend_label()
+        trace_id = new_trace_id()
         trace = None
         if self.trace_every > 0 and self.score_fn is None:
             self._since_trace += 1
@@ -173,7 +191,8 @@ class QueryServer:
                 budget=self.budget, score_fn=self.score_fn,
                 backend=self.score_backend)
         self._record(bn, (time.perf_counter() - t0) * 1e3, backend, trace)
-        return ids, scores
+        return QueryResult(ids=ids, scores=scores, k=ids.shape[-1],
+                           backend=backend, trace_id=trace_id)
 
     def _record(self, bn: int, dt_ms: float, backend: str,
                 trace: Optional[Trace] = None) -> None:
@@ -279,26 +298,39 @@ class QueryServer:
 
 
 class HedgedServer:
-    """Issue each query to all replicas; take the first simulated finisher."""
+    """Issue each query to all replicas; take the first simulated finisher.
+
+    .. deprecated::
+        Straggler mitigation now belongs to the async front door
+        (``repro.serving.frontend``): hedging is an admission/scheduling
+        concern, and the front door owns admission.  ``HedgedServer`` keeps
+        working (and now returns :class:`QueryResult` like every serving
+        path) but will be removed once a replicated front end lands
+        (ROADMAP item 5).
+    """
 
     def __init__(self, replicas: Sequence[QueryServer], seed: int = 0,
                  straggler_prob: float = 0.1, straggler_mult: float = 10.0):
+        warnings.warn(
+            "HedgedServer is deprecated: use the async serving front door "
+            "(repro.serving.frontend.ServingFrontend) for tail-latency "
+            "control; see docs/serving.md", DeprecationWarning, stacklevel=2)
         self.replicas = list(replicas)
         self.gen = np.random.Generator(np.random.Philox(key=seed))
         self.straggler_prob = straggler_prob
         self.straggler_mult = straggler_mult
         self.effective_latency_ms: list = []
 
-    def query(self, q_idx, q_val):
+    def query(self, q_idx, q_val) -> QueryResult:
         finish = []
         answers = []
         for rep in self.replicas:
-            ids, scores = rep.query(q_idx, q_val)
+            res = rep.query(q_idx, q_val)
             base = rep.last_latency_ms
             if self.gen.random() < self.straggler_prob:
                 base *= self.straggler_mult
             finish.append(base)
-            answers.append((ids, scores))
+            answers.append(res)
         win = int(np.argmin(finish))
         self.effective_latency_ms.append(min(finish))
         return answers[win]

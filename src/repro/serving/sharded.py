@@ -247,6 +247,7 @@ class ShardedSinnamonIndex:
                  update_block: int = 32):
         self.mesh = mesh
         self.spec = spec                       # per-shard spec
+        self.default_backend: Optional[str] = None  # repro.api facade sets this
         self.corpus = meshlib.corpus_axes(mesh)
         self.n_shards = meshlib.n_shards(mesh, self.corpus)
         self.update_block = update_block
@@ -386,6 +387,8 @@ class ShardedSinnamonIndex:
         kprime = kprime if kprime is not None else max(5 * k, k)
         kl = min(kprime, self.spec.capacity)
         k = min(k, kl * self.n_shards)
+        if backend is None:
+            backend = self.default_backend
         backend = _ops.resolve_backend(backend) if score_fn is None else None
         key = ("search", k, kl, budget, score_fn, backend)
         step = self._step(key, lambda: make_search_step(

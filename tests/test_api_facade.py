@@ -1,0 +1,192 @@
+"""`repro.api` facade contracts (ISSUE 7 satellite).
+
+Every deployment shape an `IndexConfig` can describe — {single, sharded} x
+{ephemeral, durable}, plus the accuracy levers — must:
+
+* open through ``open_index`` and serve queries,
+* produce byte-identical engine state to its LEGACY constructor spelling
+  (the facade routes, it must not reinterpret),
+* for durable shapes: snapshot, reopen, and recover byte-identically.
+
+Plus the config-surface contracts: validation, derived per-shard capacity,
+and ``backend`` pinning subsuming ``REPRO_SCORE_BACKEND``.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import DurabilityConfig, IndexConfig, open_index
+from repro.core.engine import SinnamonIndex
+from repro.data import synth
+from repro.distributed import mesh as meshlib
+from repro.serving.serve import QueryServer
+from repro.serving.sharded import ShardedSinnamonIndex
+
+DS = synth.SparseDatasetSpec("api", n=400, psi_doc=20, psi_query=10,
+                             value_dist="gaussian")
+N_DOCS = 64
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    idx, val = synth.make_corpus(0, DS, N_DOCS, pad=32)
+    qi, qv = synth.make_queries(1, DS, 4, pad=16)
+    return idx, val, qi, qv
+
+
+def _config(**kw):
+    base = dict(n=DS.n, capacity=128, m=12, h=2, max_nnz=32, seed=3,
+                store_dtype="float32")
+    base.update(kw)
+    return IndexConfig(**base)
+
+
+def _fill(index, corpus):
+    idx, val, _, _ = corpus
+    index.insert_many(list(range(N_DOCS)), idx[:N_DOCS], val[:N_DOCS])
+    index.delete(7)
+    return index
+
+
+def _assert_state_equal(a, b):
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), a, b)
+
+
+def _assert_serves(index, corpus):
+    _, _, qi, qv = corpus
+    srv = QueryServer(index, k=10, kprime=40)
+    res = srv.query(qi[0], qv[0])
+    assert res.ids.shape == (10,)
+    assert 7 not in np.asarray(res.ids)              # the deleted doc
+    return res
+
+
+# ---------------------------------------------------------------------------
+# facade vs legacy constructors: identical state, every permutation
+# ---------------------------------------------------------------------------
+
+def test_single_ephemeral_matches_legacy(corpus):
+    cfg = _config()
+    via_api = _fill(open_index(cfg), corpus)
+    assert isinstance(via_api, SinnamonIndex)
+    legacy = _fill(SinnamonIndex(cfg.engine_spec()), corpus)
+    _assert_state_equal(via_api.state, legacy.state)
+    a, b = _assert_serves(via_api, corpus), _assert_serves(legacy, corpus)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.scores),
+                                  np.asarray(b.scores))
+
+
+def test_sharded_ephemeral_matches_legacy(corpus):
+    mesh = meshlib.single_device_mesh(("data", "model"))
+    cfg = _config()
+    via_api = _fill(open_index(cfg, mesh=mesh), corpus)
+    assert isinstance(via_api, ShardedSinnamonIndex)
+    legacy = _fill(ShardedSinnamonIndex(cfg.engine_spec(), mesh,
+                                        update_block=cfg.update_block),
+                   corpus)
+    _assert_state_equal(via_api.state, legacy.state)
+    _assert_serves(via_api, corpus)
+
+
+def test_durable_single_matches_legacy_and_recovers(corpus, tmp_path):
+    from repro.persist import DurableSinnamonIndex
+
+    cfg = _config(durability=DurabilityConfig(
+        wal_dir=str(tmp_path / "api" / "wal"),
+        snapshot_dir=str(tmp_path / "api" / "snap")))
+    via_api = _fill(open_index(cfg), corpus)
+    assert isinstance(via_api, DurableSinnamonIndex)
+    legacy_d = dataclasses.replace(
+        cfg.durability, wal_dir=str(tmp_path / "legacy" / "wal"),
+        snapshot_dir=str(tmp_path / "legacy" / "snap"))
+    legacy = _fill(DurableSinnamonIndex.open(cfg.engine_spec(),
+                                             **legacy_d.kwargs()), corpus)
+    _assert_state_equal(via_api.state, legacy.state)
+    _assert_serves(via_api, corpus)
+    via_api.snapshot()
+    recovered = open_index(cfg)                   # same dirs -> recovery
+    assert recovered.size == N_DOCS - 1
+    _assert_state_equal(recovered.state, legacy.state)
+    _assert_serves(recovered, corpus)
+
+
+def test_durable_sharded_matches_legacy_and_recovers(corpus, tmp_path):
+    from repro.persist import DurableShardedSinnamonIndex
+
+    mesh = meshlib.single_device_mesh(("data", "model"))
+    cfg = _config(durability=DurabilityConfig(
+        wal_dir=str(tmp_path / "api" / "wal"),
+        snapshot_dir=str(tmp_path / "api" / "snap")))
+    via_api = _fill(open_index(cfg, mesh=mesh), corpus)
+    assert isinstance(via_api, DurableShardedSinnamonIndex)
+    legacy_d = dataclasses.replace(
+        cfg.durability, wal_dir=str(tmp_path / "legacy" / "wal"),
+        snapshot_dir=str(tmp_path / "legacy" / "snap"))
+    legacy = _fill(DurableShardedSinnamonIndex.open(
+        cfg.engine_spec(), mesh, update_block=cfg.update_block,
+        **legacy_d.kwargs()), corpus)
+    _assert_state_equal(via_api.state, legacy.state)
+    _assert_serves(via_api, corpus)
+    via_api.snapshot()
+    recovered = open_index(cfg, mesh=mesh)
+    assert recovered.size == N_DOCS - 1
+    _assert_state_equal(recovered.state, legacy.state)
+    _assert_serves(recovered, corpus)
+
+
+# ---------------------------------------------------------------------------
+# accuracy levers through the facade
+# ---------------------------------------------------------------------------
+
+def test_lever_configs_open_and_serve(corpus):
+    for levers in ({"sketch_kind": "lite"}, {"cell_dtype": "f8"},
+                   {"index_buckets": 128}):
+        index = _fill(open_index(_config(**levers)), corpus)
+        _assert_serves(index, corpus)
+        assert index.config.sketch_kind == levers.get("sketch_kind", "full")
+
+
+# ---------------------------------------------------------------------------
+# config surface
+# ---------------------------------------------------------------------------
+
+def test_backend_pinning_subsumes_env(corpus):
+    cfg = _config(backend="reference")
+    index = _fill(open_index(cfg), corpus)
+    assert index.default_backend == "reference"
+    res = _assert_serves(index, corpus)
+    assert res.backend == "reference"
+    # per-call override still wins over the pinned default
+    _, _, qi, qv = corpus
+    ids, _ = index.search(qi[0], qv[0], k=10, backend="pallas")
+    assert ids.shape == (10,)
+
+
+def test_local_capacity_derivation():
+    cfg = IndexConfig(n=100, capacity=100, shards=3)
+    assert cfg.local_capacity == 64          # ceil(100/3)=34 -> round to 64
+    assert cfg.engine_spec().capacity == 64
+    assert IndexConfig(n=100, capacity=96).local_capacity == 96
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        IndexConfig(n=100, capacity=0)
+    with pytest.raises(ValueError):
+        IndexConfig(n=100, capacity=32, shards=0)
+    with pytest.raises(ValueError):
+        IndexConfig(n=100, capacity=32, backend="not_a_backend")
+    with pytest.raises(ValueError):
+        DurabilityConfig(wal_dir="/w", snapshot_every=5)  # no snapshot_dir
+
+
+def test_config_attached_to_index(corpus):
+    cfg = _config()
+    index = open_index(cfg)
+    assert index.config is cfg
+    assert index.default_backend is None

@@ -1,0 +1,368 @@
+"""ISSUE 7 tentpole contracts: the async serving front door.
+
+* Coalesced-batch answers are BIT-IDENTICAL (ids and scores) to per-query
+  ``QueryServer.query`` — with actual coalescing asserted, not assumed.
+* Backpressure: a full admission queue rejects synchronously with a
+  retry-after hint; nothing blocks silently.
+* Deadline expiry: queries whose budget elapses while queued behind a
+  stalled device are dropped and counted, not served late.
+* Per-tenant token-bucket quotas throttle one tenant without touching
+  another.
+* The HTTP front door speaks 200 / 429+Retry-After / 400 and serves the
+  standard /metrics family on the same port.
+* ``QueryResult`` is frozen, typed, and still unpacks as ``(ids, scores)``.
+
+Device-independent behaviours (backpressure, expiry, quotas) run against a
+stub server so the tests control time and stalls exactly; bit-identity and
+the HTTP round trip run against the real engine.
+"""
+
+import json
+import threading
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core.engine import EngineSpec, SinnamonIndex
+from repro.data import synth
+from repro.obs import MetricsRegistry
+from repro.obs.metrics import parse_exposition
+from repro.serving.frontend import (DeadlineExceeded, FrontendServer,
+                                    Rejected, ServingFrontend, TenantQuota)
+from repro.serving.results import QueryResult
+from repro.serving.serve import QueryServer
+
+DS = synth.SparseDatasetSpec("fe", n=400, psi_doc=20, psi_query=10,
+                             value_dist="gaussian")
+N_DOCS = 96
+
+
+@pytest.fixture(scope="module")
+def served():
+    idx, val = synth.make_corpus(0, DS, N_DOCS, pad=32)
+    qi, qv = synth.make_queries(1, DS, 16, pad=16)
+    index = SinnamonIndex(EngineSpec(n=DS.n, m=12, capacity=128, max_nnz=32,
+                                     h=2, seed=3, value_dtype="float32"))
+    index.insert_many(list(range(N_DOCS)), idx[:N_DOCS], val[:N_DOCS])
+    server = QueryServer(index, k=10, kprime=40)
+    return server, qi, qv
+
+
+class _StubServer:
+    """Device stand-in: controllable stall, records dispatched batches."""
+
+    def __init__(self, k=4, delay_s=0.0, gate: threading.Event = None):
+        self.k = k
+        self.delay_s = delay_s
+        self.gate = gate
+        self.batches = []
+
+    def query_many(self, qi, qv):
+        if self.gate is not None:
+            self.gate.wait()
+        if self.delay_s:
+            import time
+            time.sleep(self.delay_s)
+        self.batches.append(qi.shape[0])
+        B = qi.shape[0]
+        ids = np.tile(np.arange(self.k, dtype=np.int64), (B, 1))
+        scores = np.zeros((B, self.k), np.float32)
+        return QueryResult(ids=ids, scores=scores, k=self.k,
+                           backend="stub", trace_id="q-stub")
+
+
+def _q(seed=0, nnz=8):
+    rng = np.random.default_rng(seed)
+    return (rng.choice(DS.n, nnz, replace=False).astype(np.int32),
+            rng.random(nnz, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# bit-identity of coalesced batches (real engine)
+# ---------------------------------------------------------------------------
+
+def test_coalesced_bit_identical_to_per_query(served):
+    server, qi, qv = served
+    expect = [server.query(qi[b], qv[b]) for b in range(qi.shape[0])]
+    fe = ServingFrontend(server, max_batch=8, batch_window_ms=50.0,
+                         queue_depth=64)
+    try:
+        fe.query(qi[0], qv[0])                       # compile warmup
+        futs = [fe.submit(qi[b], qv[b]) for b in range(qi.shape[0])]
+        got = [f.result(timeout=60) for f in futs]
+    finally:
+        fe.close()
+    for b, (g, e) in enumerate(zip(got, expect)):
+        np.testing.assert_array_equal(np.asarray(g.ids), np.asarray(e.ids),
+                                      err_msg=f"query {b}: ids differ")
+        np.testing.assert_array_equal(
+            np.asarray(g.scores), np.asarray(e.scores),
+            err_msg=f"query {b}: scores not bit-identical")
+        assert g.k == e.k and g.backend == e.backend
+
+
+def test_batches_actually_coalesce():
+    """The identity test must not pass vacuously via batch-of-1 dispatches."""
+    gate = threading.Event()
+    stub = _StubServer(gate=gate)
+    fe = ServingFrontend(stub, max_batch=8, batch_window_ms=5.0,
+                         queue_depth=64)
+    try:
+        qi, qv = _q()
+        futs = [fe.submit(qi, qv) for _ in range(8)]
+        gate.set()                    # stall admission, then release
+        for f in futs:
+            f.result(timeout=30)
+    finally:
+        fe.close()
+    assert max(stub.batches) > 1, (
+        f"8 concurrent submits never coalesced: dispatched {stub.batches}")
+
+
+def test_mixed_widths_pad_without_crosstalk(served):
+    """Different-nnz queries coalesced into one rectangle answer as alone."""
+    server, qi, qv = served
+    short_i, short_v = qi[0][:6].copy(), qv[0][:6].copy()
+    expect_short = server.query(short_i, short_v)
+    expect_full = server.query(qi[1], qv[1])
+    fe = ServingFrontend(server, max_batch=4, batch_window_ms=50.0,
+                         queue_depth=16)
+    try:
+        fe.query(qi[0], qv[0])                       # compile warmup
+        fa = fe.submit(short_i, short_v)
+        fb = fe.submit(qi[1], qv[1])
+        ga, gb = fa.result(timeout=60), fb.result(timeout=60)
+    finally:
+        fe.close()
+    np.testing.assert_array_equal(np.asarray(ga.ids),
+                                  np.asarray(expect_short.ids))
+    np.testing.assert_array_equal(np.asarray(ga.scores),
+                                  np.asarray(expect_short.scores))
+    np.testing.assert_array_equal(np.asarray(gb.ids),
+                                  np.asarray(expect_full.ids))
+    np.testing.assert_array_equal(np.asarray(gb.scores),
+                                  np.asarray(expect_full.scores))
+
+
+# ---------------------------------------------------------------------------
+# backpressure / deadline / quotas (stub device)
+# ---------------------------------------------------------------------------
+
+def test_backpressure_rejects_at_full_queue():
+    gate = threading.Event()
+    stub = _StubServer(gate=gate)
+    reg = MetricsRegistry()
+    fe = ServingFrontend(stub, max_batch=2, batch_window_ms=1000.0,
+                         queue_depth=4, registry=reg)
+    try:
+        qi, qv = _q()
+        held = [fe.submit(qi, qv) for _ in range(4)]   # device is stalled
+        with pytest.raises(Rejected) as exc:
+            fe.submit(qi, qv)
+        assert exc.value.reason == "queue_full"
+        assert exc.value.retry_after_ms > 0
+        gate.set()
+        for f in held:                # queued work still completes after
+            f.result(timeout=30)
+        snap = json.loads(reg.to_json())
+        rej = [s["value"]
+               for s in snap["repro_frontend_rejected_total"]["series"]
+               if s["labels"].get("reason") == "queue_full"]
+        assert rej == [1]
+    finally:
+        fe.close()
+
+
+def test_deadline_expiry_under_stalled_device():
+    gate = threading.Event()
+    stub = _StubServer(gate=gate)
+    reg = MetricsRegistry()
+    fe = ServingFrontend(stub, max_batch=4, batch_window_ms=0.0,
+                         queue_depth=16, default_deadline_ms=30.0,
+                         registry=reg)
+    try:
+        qi, qv = _q()
+        blocker = fe.submit(qi, qv, deadline_ms=60_000)  # occupies device
+        import time
+        time.sleep(0.02)              # let the dispatcher pick blocker up
+        doomed = [fe.submit(qi, qv, deadline_ms=20.0) for _ in range(3)]
+        time.sleep(0.1)               # deadlines elapse while device stalls
+        gate.set()
+        blocker.result(timeout=30)
+        for f in doomed:
+            with pytest.raises(DeadlineExceeded) as exc:
+                f.result(timeout=30)
+            assert exc.value.queued_ms >= 20.0
+        snap = json.loads(reg.to_json())
+        exp = snap["repro_frontend_expired_total"]["series"]
+        assert [s["value"] for s in exp] == [3]
+    finally:
+        fe.close()
+
+
+def test_per_tenant_quota_isolation():
+    stub = _StubServer()
+    reg = MetricsRegistry()
+    fe = ServingFrontend(
+        stub, max_batch=4, batch_window_ms=0.0, queue_depth=64,
+        quotas={"limited": TenantQuota(rate_qps=1.0, burst=2)},
+        registry=reg)
+    try:
+        qi, qv = _q()
+        # limited tenant: burst of 2 admitted, third throttled
+        ok = [fe.submit(qi, qv, tenant="limited") for _ in range(2)]
+        with pytest.raises(Rejected) as exc:
+            fe.submit(qi, qv, tenant="limited")
+        assert exc.value.reason == "throttled"
+        assert exc.value.tenant == "limited"
+        assert exc.value.retry_after_ms > 0
+        # unthrottled tenant is untouched by the other tenant's bucket
+        free = [fe.submit(qi, qv, tenant="free") for _ in range(16)]
+        for f in ok + free:
+            f.result(timeout=30)
+        snap = json.loads(reg.to_json())
+        throttled = {s["labels"]["tenant"]: s["value"]
+                     for s in
+                     snap["repro_frontend_throttled_total"]["series"]}
+        assert throttled == {"limited": 1}
+    finally:
+        fe.close()
+
+
+def test_quota_refills_over_time():
+    stub = _StubServer()
+    t = [0.0]
+    fe = ServingFrontend(
+        stub, max_batch=4, batch_window_ms=0.0, queue_depth=64,
+        default_quota=TenantQuota(rate_qps=10.0, burst=1),
+        clock=lambda: t[0])
+    try:
+        qi, qv = _q()
+        f1 = fe.submit(qi, qv)
+        with pytest.raises(Rejected):
+            fe.submit(qi, qv)
+        t[0] += 0.2                   # 0.2s at 10 qps -> 2 tokens back
+        f2 = fe.submit(qi, qv)
+        for f in (f1, f2):
+            f.result(timeout=30)
+    finally:
+        fe.close()
+
+
+def test_close_without_drain_fails_queued_futures():
+    gate = threading.Event()
+    stub = _StubServer(gate=gate)
+    fe = ServingFrontend(stub, max_batch=1, batch_window_ms=0.0,
+                         queue_depth=16)
+    qi, qv = _q()
+    stuck = fe.submit(qi, qv)
+    import time
+    time.sleep(0.02)
+    queued = [fe.submit(qi, qv) for _ in range(3)]
+    threading.Timer(0.05, gate.set).start()
+    fe.close(drain=False)
+    stuck.result(timeout=30)          # in-flight dispatch still completes
+    for f in queued:
+        with pytest.raises(Rejected) as exc:
+            f.result(timeout=30)
+        assert exc.value.reason == "shutdown"
+    with pytest.raises(RuntimeError):
+        fe.submit(qi, qv)
+
+
+# ---------------------------------------------------------------------------
+# HTTP front door
+# ---------------------------------------------------------------------------
+
+def test_http_round_trip(served):
+    server, qi, qv = served
+    expect = server.query(qi[2], qv[2])
+    reg = MetricsRegistry()
+    fe = ServingFrontend(server, max_batch=4, batch_window_ms=1.0,
+                         queue_depth=32, registry=reg)
+    try:
+        with FrontendServer(fe, port=0, registry=reg) as door:
+            body = json.dumps({"indices": qi[2].tolist(),
+                               "values": qv[2].tolist()}).encode()
+            req = urllib.request.Request(door.url + "/v1/query", data=body,
+                                         method="POST")
+            doc = json.loads(urllib.request.urlopen(req, timeout=60).read())
+            assert doc["ids"] == [int(i) for i in np.asarray(expect.ids)]
+            np.testing.assert_array_equal(
+                np.asarray(doc["scores"], np.float32),
+                np.asarray(expect.scores, np.float32))
+            assert doc["k"] == expect.k
+            assert doc["backend"] == expect.backend
+            assert doc["trace_id"].startswith("q-")
+            # malformed -> 400
+            with pytest.raises(urllib.error.HTTPError) as exc:
+                urllib.request.urlopen(urllib.request.Request(
+                    door.url + "/v1/query", data=b'{"indices": [1, 2]}',
+                    method="POST"), timeout=30)
+            assert exc.value.code == 400
+            # metrics family on the same port
+            scrape = urllib.request.urlopen(door.url + "/metrics",
+                                            timeout=30).read().decode()
+            names = {n for (n, _l) in parse_exposition(scrape)}
+            assert any(n.startswith("repro_frontend_requests_total")
+                       for n in names)
+            assert urllib.request.urlopen(
+                door.url + "/healthz", timeout=30).read() == b"ok\n"
+    finally:
+        fe.close()
+
+
+def test_http_429_with_retry_after():
+    stub = _StubServer(gate=threading.Event())       # never released
+    fe = ServingFrontend(stub, max_batch=1, batch_window_ms=0.0,
+                         queue_depth=1)
+    try:
+        with FrontendServer(fe, port=0) as door:
+            qi, qv = _q()
+            fe.submit(qi, qv)          # dispatcher picks this up and stalls
+            import time
+            time.sleep(0.05)
+            fe.submit(qi, qv)          # fills the depth-1 queue
+            body = json.dumps({"indices": qi.tolist(),
+                               "values": qv.tolist()}).encode()
+            with pytest.raises(urllib.error.HTTPError) as exc:
+                urllib.request.urlopen(urllib.request.Request(
+                    door.url + "/v1/query", data=body, method="POST"),
+                    timeout=30)
+            assert exc.value.code == 429
+            assert int(exc.value.headers["Retry-After"]) >= 1
+            detail = json.loads(exc.value.read())
+            assert detail["reason"] == "queue_full"
+    finally:
+        fe.close(drain=False)
+
+
+# ---------------------------------------------------------------------------
+# QueryResult typing
+# ---------------------------------------------------------------------------
+
+def test_query_result_typed_and_frozen(served):
+    server, qi, qv = served
+    res = server.query(qi[0], qv[0])
+    assert isinstance(res, QueryResult)
+    assert res.k == 10
+    assert res.backend in ("reference", "grouped", "pallas", "custom")
+    assert res.trace_id.startswith("q-")
+    with pytest.raises(AttributeError):
+        res.k = 99
+    # legacy tuple-compat: unpack, index, len
+    ids, scores = res
+    assert ids is res.ids and scores is res.scores
+    assert res[0] is res.ids and res[1] is res.scores
+    assert len(res) == 2
+    assert res.batch_size is None
+    batched = server.query_many(qi[:4], qv[:4])
+    assert batched.batch_size == 4
+    row = batched.row(2, k=5, trace_id="q-test")
+    assert row.ids.shape == (5,) and row.k == 5
+    np.testing.assert_array_equal(np.asarray(row.ids),
+                                  np.asarray(batched.ids)[2, :5])
+    with pytest.raises(ValueError):
+        res.row(0)
