@@ -11,7 +11,11 @@ event log and tracing enabled, then:
    present (per-stage latency, WAL-independent engine health, byte gauges),
 4. fetches ``/metrics.json`` and checks it is valid JSON with the same
    metric names,
-5. checks the event log contains parseable ``query`` events with spans.
+5. checks the event log contains parseable ``query`` events with spans,
+6. hits the ISSUE 8 surfaces on the same port — ``/readyz`` (must be 200
+   with per-check detail once the engine is built), ``/debug/requests``
+   (flight-recorder ring + stats schema), and ``/debug/slo`` (declared
+   objectives + per-window burn rates) — validating each JSON schema.
 
 Exit 0 on success; raises (non-zero) on any failure.  Run as
 ``python benchmarks/check_metrics_endpoint.py`` from the repo root.
@@ -125,6 +129,46 @@ def main() -> None:
                                f"saw {[e['event'] for e in events][:20]}")
         print(f"event log OK: {len(events)} events, {len(traced)} traced; "
               f"sample spans={[s['stage'] for s in traced[0]['spans']]}")
+
+        ready = json.loads(_fetch(base + "/readyz"))
+        if ready.get("ready") is not True:
+            raise RuntimeError(f"/readyz not ready after build: {ready}")
+        engine = ready.get("checks", {}).get("engine")
+        if not (isinstance(engine, dict) and engine.get("ok") is True):
+            raise RuntimeError(f"/readyz missing engine check: {ready}")
+        print(f"/readyz OK: checks={sorted(ready['checks'])}")
+
+        dbg = json.loads(_fetch(base + "/debug/requests?limit=10"))
+        for key in ("requests", "count", "recorder"):
+            if key not in dbg:
+                raise RuntimeError(f"/debug/requests missing {key!r}: "
+                                   f"{sorted(dbg)}")
+        stats = dbg["recorder"]
+        if stats.get("seen", 0) < 1 or "capacity" not in stats:
+            raise RuntimeError(f"/debug/requests recorder stats wrong: "
+                               f"{stats}")
+        for rec in dbg["requests"]:
+            for key in ("trace_id", "outcome", "stages", "retained"):
+                if key not in rec:
+                    raise RuntimeError(
+                        f"/debug/requests record missing {key!r}: {rec}")
+        print(f"/debug/requests OK: {dbg['count']} retained of "
+              f"{stats['seen']} seen")
+
+        slo = json.loads(_fetch(base + "/debug/slo"))
+        for key in ("objectives", "windows", "slos"):
+            if key not in slo:
+                raise RuntimeError(f"/debug/slo missing {key!r}: "
+                                   f"{sorted(slo)}")
+        for name in ("latency", "availability"):
+            wins = slo["slos"][name]["windows"]
+            for w in ("fast", "slow"):
+                for key in ("burn_rate", "compliance", "good", "total"):
+                    if key not in wins[w]:
+                        raise RuntimeError(
+                            f"/debug/slo {name}/{w} missing {key!r}: "
+                            f"{wins[w]}")
+        print(f"/debug/slo OK: objectives={slo['objectives']}")
         print("check_metrics_endpoint: PASS")
     finally:
         proc.terminate()

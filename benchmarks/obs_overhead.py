@@ -3,14 +3,16 @@
 Measures the serving-path cost of the metrics registry by timing the SAME
 query stream through three QueryServer configurations over one shared index:
 
-* ``off``    — ``NULL_REGISTRY`` injected: every metric call is a no-op
-  attribute chain, the zero-instrumentation baseline.
-* ``on``     — a real ``MetricsRegistry``: per-query latency histograms,
-  batch-size histogram, per-backend counters (the always-on production
-  path; ``trace_every=0`` so no staged dispatches).
-* ``traced`` — metrics plus ``trace_every=8``: every 8th batch runs the
-  staged per-stage path with device syncs between spans (reported for
-  context; sampling keeps it off the common case so it is NOT gated).
+* ``off``    — ``NULL_REGISTRY`` injected, no recorder: every metric call
+  is a no-op attribute chain, the zero-instrumentation baseline.
+* ``on``     — a real ``MetricsRegistry`` PLUS the full ISSUE 8 stack:
+  per-query latency histograms and counters, a per-batch `TraceContext`,
+  a tail-sampled `FlightRecorder`, and a ticking `SLOMonitor` (the
+  always-on production path; ``trace_every=0`` so no staged dispatches).
+* ``traced`` — the ``on`` stack plus ``trace_every=8``: every 8th batch
+  runs the staged per-stage path with device syncs between spans
+  (reported for context; sampling keeps it off the common case so it is
+  NOT gated).
 
 Rounds alternate off/on/traced so drift (thermal, allocator state) hits all
 three equally, and p50s come from external ``perf_counter`` timing around
@@ -33,16 +35,29 @@ _GATE_PCT = 5.0
 
 def _bench(docs=2048, batch=_BATCH, rounds=_ROUNDS):
     from benchmarks.query_path import _QUERIES, _build
-    from repro.obs import NULL_REGISTRY, MetricsRegistry
+    from repro.obs import FlightRecorder, NULL_REGISTRY, MetricsRegistry
+    from repro.obs.slo import SLOMonitor, SLOSpec
     from repro.serving.serve import QueryServer
 
     index, _, _, qi, qv = _build(docs)
+
+    def full_stack(trace_every=0):
+        # the production configuration the gate must hold with: registry +
+        # flight recorder + ticking SLO monitor (ISSUE 8 acceptance)
+        reg = MetricsRegistry()
+        rec = FlightRecorder(capacity=512, sample_rate=0.05, registry=reg,
+                             spill=False)
+        slo = SLOMonitor(SLOSpec(), reg).start(interval_s=0.25)
+        srv = QueryServer(index, k=10, kprime=100, registry=reg,
+                          recorder=rec, trace_every=trace_every)
+        return srv, slo
+
+    on_srv, on_slo = full_stack()
+    traced_srv, traced_slo = full_stack(trace_every=8)
     servers = {
         "off": QueryServer(index, k=10, kprime=100, registry=NULL_REGISTRY),
-        "on": QueryServer(index, k=10, kprime=100,
-                          registry=MetricsRegistry()),
-        "traced": QueryServer(index, k=10, kprime=100,
-                              registry=MetricsRegistry(), trace_every=8),
+        "on": on_srv,
+        "traced": traced_srv,
     }
     for srv in servers.values():                     # compile warmup
         for _ in range(8):                           # incl. staged path jits
@@ -57,6 +72,8 @@ def _bench(docs=2048, batch=_BATCH, rounds=_ROUNDS):
                 srv.query_many(qi[lo:lo + batch], qv[lo:lo + batch])
             samples[name].append((time.perf_counter() - t0) * 1e3
                                  / _QUERIES)
+    on_slo.stop()
+    traced_slo.stop()
     return ({name: float(np.median(v)) for name, v in samples.items()},
             {name: float(np.percentile(v, 99)) for name, v in samples.items()})
 
@@ -70,9 +87,9 @@ def obs_overhead():
         (f"obs_overhead/b{_BATCH}/off_p50_ms", f"{p50['off']:.4f}",
          "NULL_REGISTRY baseline"),
         (f"obs_overhead/b{_BATCH}/on_p50_ms", f"{p50['on']:.4f}",
-         "metrics registry on"),
+         "metrics + flight recorder + SLO monitor on"),
         (f"obs_overhead/b{_BATCH}/traced_p50_ms", f"{p50['traced']:.4f}",
-         "metrics + trace_every=8 (not gated)"),
+         "full stack + trace_every=8 (not gated)"),
         (f"obs_overhead/b{_BATCH}/off_p99_ms", f"{p99['off']:.4f}", ""),
         (f"obs_overhead/b{_BATCH}/on_p99_ms", f"{p99['on']:.4f}", ""),
         (f"obs_overhead/b{_BATCH}/traced_p99_ms", f"{p99['traced']:.4f}",

@@ -33,14 +33,26 @@ Observability (see docs/observability.md):
 
 * ``--metrics-port P`` serves the process-global metrics registry over
   HTTP: ``/metrics`` (Prometheus text), ``/metrics.json`` (structured
-  snapshot), ``/healthz``.
+  snapshot), ``/healthz`` (liveness), ``/readyz`` (readiness: 503 until
+  the index is built/recovered), plus the ``/debug/*`` surfaces below.
 * ``--event-log FILE`` appends one JSON line per query / maintenance op
-  (trace spans attached on sampled queries).
+  (trace spans attached on sampled queries); ``--event-log-max-bytes B``
+  rotates the file at B bytes keeping ``--event-log-keep`` segments.
 * ``--trace-every N`` runs every N-th query batch on the staged path,
   populating per-stage latency histograms (default 32 when metrics or the
   event log are on, else off; 0 disables).
+* ``--recorder-capacity N`` sizes the tail-sampled flight recorder ring
+  (``/debug/requests``, ``/debug/trace/<id>``, ``/debug/batches``);
+  ``--record-sample R`` head-samples fast OK requests at rate R (errors,
+  rejections, deadline misses, and the slowest decile are always kept).
+* ``--slo-latency-ms`` / ``--slo-target`` / ``--slo-availability`` declare
+  the serving SLOs; a background monitor publishes ``repro_slo_*``
+  burn-rate gauges over fast/slow windows (``--slo-fast-window-s`` /
+  ``--slo-slow-window-s``), serves ``/debug/slo``, and WARNs to the event
+  log on sustained burn.
 * ``--profile-dir DIR`` captures a ``jax.profiler`` trace of the query
-  loop for kernel-level inspection.
+  loop for kernel-level inspection, and mounts ``/debug/profile?seconds=N``
+  for on-demand traces while serving.
 * ``--hold-seconds S`` keeps the process (and the metrics endpoint) alive
   after the query loop — for scrape-based smoke tests and demos.
 
@@ -119,6 +131,29 @@ def parse_args(argv=None):
                          "+ /healthz on this port (0 = OS-assigned)")
     ap.add_argument("--event-log", default=None, metavar="FILE",
                     help="append one JSON line per query/maintenance op")
+    ap.add_argument("--event-log-max-bytes", type=int, default=None,
+                    metavar="B", help="rotate the event log at B bytes "
+                                      "(default: never)")
+    ap.add_argument("--event-log-keep", type=int, default=3, metavar="N",
+                    help="rotated event-log segments to keep")
+    ap.add_argument("--recorder-capacity", type=int, default=512,
+                    metavar="N", help="flight-recorder ring size "
+                                      "(0 disables the recorder)")
+    ap.add_argument("--record-sample", type=float, default=0.05, metavar="R",
+                    help="head-sampling rate for fast OK requests "
+                         "(failures and the slow tail are always kept)")
+    ap.add_argument("--slo-latency-ms", type=float, default=100.0,
+                    metavar="MS", help="latency SLO bound")
+    ap.add_argument("--slo-target", type=float, default=0.99, metavar="F",
+                    help="fraction of requests that must meet the latency "
+                         "bound")
+    ap.add_argument("--slo-availability", type=float, default=0.999,
+                    metavar="F", help="fraction of requests that must not "
+                                      "be rejected/expired/errored")
+    ap.add_argument("--slo-fast-window-s", type=float, default=300.0,
+                    metavar="S", help="fast burn-rate window")
+    ap.add_argument("--slo-slow-window-s", type=float, default=3600.0,
+                    metavar="S", help="slow burn-rate window")
     ap.add_argument("--trace-every", type=int, default=None, metavar="N",
                     help="run every N-th query batch on the staged path "
                          "(per-stage histograms); default 32 when metrics "
@@ -209,17 +244,51 @@ def main():
     from repro.api import DurabilityConfig, IndexConfig, open_index
     from repro.core.linscan import brute_force_topk
     from repro.data import synth
-    from repro.obs import EventLog, MetricsServer, set_event_log
+    from repro.obs import (
+        EventLog,
+        FlightRecorder,
+        MetricsServer,
+        ReadyState,
+        SLOMonitor,
+        SLOSpec,
+        set_event_log,
+        set_recorder,
+    )
+    from repro.obs.instrument import install_recorder_gauges
     from repro.serving.serve import QueryServer
 
+    obs_on = args.metrics_port is not None or args.serve_port is not None
+    if args.event_log:
+        set_event_log(EventLog(args.event_log,
+                               max_bytes=args.event_log_max_bytes,
+                               keep=args.event_log_keep))
+        print(f"event log: {args.event_log}"
+              + (f" (rotate at {args.event_log_max_bytes} B, "
+                 f"keep {args.event_log_keep})"
+                 if args.event_log_max_bytes else ""))
+    recorder = slo_monitor = None
+    ready = ReadyState()
+    ready.mark("engine", False, "index build/recovery in progress")
+    if obs_on and args.recorder_capacity > 0:
+        recorder = FlightRecorder(capacity=args.recorder_capacity,
+                                  sample_rate=args.record_sample)
+        set_recorder(recorder)
+        install_recorder_gauges(recorder)
+    if obs_on:
+        slo_monitor = SLOMonitor(
+            SLOSpec(latency_ms=args.slo_latency_ms,
+                    latency_target=args.slo_target,
+                    availability_target=args.slo_availability),
+            fast_window_s=args.slo_fast_window_s,
+            slow_window_s=args.slo_slow_window_s)
     metrics_server = None
     if args.metrics_port is not None:
-        metrics_server = MetricsServer(port=args.metrics_port).start()
+        metrics_server = MetricsServer(
+            port=args.metrics_port, ready=ready, recorder=recorder,
+            slo=slo_monitor, profile_dir=args.profile_dir).start()
         print(f"metrics: {metrics_server.url}/metrics "
-              f"(json: /metrics.json, liveness: /healthz)")
-    if args.event_log:
-        set_event_log(EventLog(args.event_log))
-        print(f"event log: {args.event_log}")
+              f"(json: /metrics.json, liveness: /healthz, "
+              f"readiness: /readyz, debug: /debug/requests /debug/slo)")
 
     ds = synth.DATASETS[args.dataset]
     idx, val = synth.make_corpus(0, ds, args.docs, pad=256)
@@ -284,6 +353,9 @@ def main():
                          budget=args.budget,
                          score_backend=args.score_backend,
                          trace_every=args.trace_every)
+    ready.mark("engine", True)      # built/recovered: ready to serve
+    if slo_monitor is not None:
+        slo_monitor.start()
     profiling = False
     if args.profile_dir:
         import jax
@@ -316,13 +388,18 @@ def main():
             batch_window_ms=args.batch_window_ms,
             queue_depth=args.queue_depth,
             default_deadline_ms=args.deadline_ms)
-        front_door = FrontendServer(frontend, port=args.serve_port).start()
+        front_door = FrontendServer(
+            frontend, port=args.serve_port, slo=slo_monitor,
+            profile_dir=args.profile_dir)
+        front_door.ready.add_check("engine",
+                                   lambda: ready()[1]["engine"]["ok"])
+        front_door.start()
         print(f"front door: POST {front_door.url}/v1/query "
               f"(max_batch={args.max_batch}, "
               f"window={args.batch_window_ms:g}ms, "
               f"queue_depth={args.queue_depth}, "
               f"deadline={args.deadline_ms:g}ms); "
-              f"metrics also on {front_door.url}/metrics", flush=True)
+              f"metrics + /debug also on {front_door.url}", flush=True)
     if args.hold_seconds > 0:
         import time
         print(f"holding for {args.hold_seconds:.0f}s "
@@ -336,6 +413,9 @@ def main():
         front_door.stop()
     if frontend is not None:
         frontend.close()
+    if slo_monitor is not None:
+        slo_monitor.stop()
+    set_recorder(None)
     log = set_event_log(None)
     if log is not None:
         log.close()

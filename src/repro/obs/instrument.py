@@ -16,7 +16,7 @@ import weakref
 
 from repro.obs import metrics as _metrics
 
-__all__ = ["install_engine_gauges"]
+__all__ = ["install_engine_gauges", "install_recorder_gauges"]
 
 
 def install_engine_gauges(index, registry=None, name: str = "index"):
@@ -32,6 +32,38 @@ def install_engine_gauges(index, registry=None, name: str = "index"):
         if ix is None:
             return False
         _publish(registry, ix, labels)
+        return True
+
+    registry.add_collector(_collect)
+    return _collect
+
+
+def install_recorder_gauges(recorder, registry=None):
+    """Attach pull-time ring-occupancy gauges for a `FlightRecorder`.
+
+    Same weakref-collector pattern as the engine gauges: nothing runs on
+    the request path, the scrape reads `recorder.stats()`."""
+    registry = registry if registry is not None else _metrics.get_registry()
+    ref = weakref.ref(recorder)
+
+    def _collect():
+        rec = ref()
+        if rec is None:
+            return False
+        stats = rec.stats()
+        registry.gauge(
+            "repro_recorder_ring_size",
+            "Request traces currently retained in the flight-recorder "
+            "ring.").set(stats["ring_size"])
+        registry.gauge(
+            "repro_recorder_ring_capacity",
+            "Flight-recorder ring capacity.").set(stats["capacity"])
+        registry.gauge(
+            "repro_recorder_tail_threshold_ms",
+            "Current tail-retention latency threshold (-1 until enough OK "
+            "samples).").set(
+            -1.0 if stats["tail_threshold_ms"] is None
+            else stats["tail_threshold_ms"])
         return True
 
     registry.add_collector(_collect)

@@ -147,9 +147,16 @@ class Gauge:
 
 
 class Histogram:
-    """Exponential-bucket histogram with exact sum/count/min/max sidecars."""
+    """Exponential-bucket histogram with exact sum/count/min/max sidecars.
 
-    __slots__ = ("buckets", "_counts", "_count", "_sum", "_min", "_max", "_lock")
+    Buckets optionally carry an *exemplar* — the id of one concrete sample
+    (a flight-recorder trace id) that landed in the bucket, so a latency
+    bucket in a dashboard links to a full request trace at
+    ``/debug/trace/<id>``.  One exemplar per bucket, latest wins.
+    """
+
+    __slots__ = ("buckets", "_counts", "_count", "_sum", "_min", "_max",
+                 "_exemplars", "_lock")
 
     def __init__(self, buckets: Buckets | None = None):
         self.buckets = buckets if buckets is not None else DEFAULT_LATENCY_BUCKETS
@@ -158,11 +165,13 @@ class Histogram:
         self._sum = 0.0
         self._min = math.inf
         self._max = -math.inf
+        self._exemplars = None  # {bucket_index: (id, value)}, lazily allocated
         self._lock = threading.Lock()
 
-    def observe(self, value: float, n: int = 1) -> None:
+    def observe(self, value: float, n: int = 1, exemplar: str | None = None) -> None:
         """Record `value`; `n > 1` records it as n identical samples (used
-        for per-query latency derived from one timed batch)."""
+        for per-query latency derived from one timed batch).  `exemplar`
+        attaches a trace id to the bucket the value lands in."""
         value = float(value)
         i = self.buckets.index(value)
         with self._lock:
@@ -173,6 +182,10 @@ class Histogram:
                 self._min = value
             if value > self._max:
                 self._max = value
+            if exemplar is not None:
+                if self._exemplars is None:
+                    self._exemplars = {}
+                self._exemplars[i] = (str(exemplar), value)
 
     @property
     def count(self) -> int:
@@ -215,6 +228,7 @@ class Histogram:
             self._sum = 0.0
             self._min = math.inf
             self._max = -math.inf
+            self._exemplars = None
 
     @property
     def bucket_counts(self) -> list:
@@ -223,7 +237,7 @@ class Histogram:
 
     def snapshot(self) -> dict:
         with self._lock:
-            return {
+            out = {
                 "buckets": self.buckets.spec(),
                 "counts": list(self._counts),
                 "count": self._count,
@@ -231,6 +245,12 @@ class Histogram:
                 "min": None if self._count == 0 else self._min,
                 "max": None if self._count == 0 else self._max,
             }
+            if self._exemplars:
+                out["exemplars"] = {
+                    str(i): {"trace_id": tid, "value": val}
+                    for i, (tid, val) in self._exemplars.items()
+                }
+            return out
 
 
 class _Family:
@@ -377,11 +397,18 @@ class MetricsRegistry:
                 else:
                     spec = s["buckets"]
                     bounds = [spec["start"] * spec["factor"] ** i for i in range(spec["count"])]
+                    exemplars = s.get("exemplars", {})
                     cum = 0
-                    for b, c in zip(bounds, s["counts"]):
+                    for i, (b, c) in enumerate(zip(bounds, s["counts"])):
                         cum += c
                         le = {**labels, "le": format(b, ".10g")}
-                        lines.append(f"{name}_bucket{_fmt_labels(le)} {cum}")
+                        line = f"{name}_bucket{_fmt_labels(le)} {cum}"
+                        ex = exemplars.get(str(i))
+                        if ex is not None:  # OpenMetrics exemplar suffix
+                            line += (f' # {{trace_id="'
+                                     f'{_escape_label_value(ex["trace_id"])}'
+                                     f'"}} {_fmt_value(ex["value"])}')
+                        lines.append(line)
                     cum += s["counts"][-1]
                     le = {**labels, "le": "+Inf"}
                     lines.append(f"{name}_bucket{_fmt_labels(le)} {cum}")
@@ -434,7 +461,7 @@ class _NullMetric:
     def set(self, value: float) -> None:
         pass
 
-    def observe(self, value: float, n: int = 1) -> None:
+    def observe(self, value: float, n: int = 1, exemplar: str | None = None) -> None:
         pass
 
     def reset(self) -> None:
@@ -541,6 +568,9 @@ def merge_snapshots(a: dict, b: dict) -> dict:
                     for fld, pick in (("min", min), ("max", max)):
                         vals = [v for v in (prev[fld], s[fld]) if v is not None]
                         prev[fld] = pick(vals) if vals else None
+                    if "exemplars" in s:  # per-bucket: later source wins
+                        prev["exemplars"] = {**prev.get("exemplars", {}),
+                                             **s["exemplars"]}
                 else:
                     prev["value"] += s["value"]
         merged["series"] = [by_labels[k] for k in sorted(by_labels)]
@@ -553,7 +583,8 @@ def merge_snapshots(a: dict, b: dict) -> dict:
 _SAMPLE_RE = re.compile(
     r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
     r"(?:\{(?P<labels>[^}]*)\})?"
-    r"\s+(?P<value>[^\s]+)\s*$"
+    r"\s+(?P<value>[^\s#]+)"
+    r"(?P<exemplar>\s+#\s+\{[^}]*\}\s+[^\s]+)?\s*$"
 )
 _LABEL_PAIR_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
 
@@ -561,8 +592,10 @@ _LABEL_PAIR_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
 def parse_exposition(text: str) -> dict:
     """Parse Prometheus text exposition into {(name, label_tuple): value}.
 
-    Raises ValueError on any malformed line — used by CI to validate the
-    live `/metrics` endpoint actually speaks the format.
+    OpenMetrics exemplar suffixes (``# {trace_id="..."} 1.23``) on bucket
+    lines are validated and stripped.  Raises ValueError on any malformed
+    line — used by CI to validate the live `/metrics` endpoint actually
+    speaks the format.
     """
     samples = {}
     for lineno, line in enumerate(text.splitlines(), 1):

@@ -52,8 +52,11 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.obs import metrics as obs_metrics
+from repro.obs import recorder as obs_recorder
 from repro.obs import server as obs_server
-from repro.serving.results import QueryResult, new_trace_id
+from repro.obs.recorder import new_batch_id
+from repro.obs.trace import TraceContext
+from repro.serving.results import QueryResult
 
 __all__ = [
     "DeadlineExceeded",
@@ -74,12 +77,14 @@ class Rejected(RuntimeError):
     on a 429.
     """
 
-    def __init__(self, reason: str, retry_after_ms: float, tenant: str):
+    def __init__(self, reason: str, retry_after_ms: float, tenant: str,
+                 trace_id: Optional[str] = None):
         super().__init__(f"rejected ({reason}, tenant={tenant!r}): "
                          f"retry after {retry_after_ms:.1f} ms")
         self.reason = reason
         self.retry_after_ms = float(retry_after_ms)
         self.tenant = tenant
+        self.trace_id = trace_id     # resolves at /debug/trace/<id>
 
 
 class DeadlineExceeded(RuntimeError):
@@ -91,11 +96,13 @@ class DeadlineExceeded(RuntimeError):
     it instead.
     """
 
-    def __init__(self, queued_ms: float, deadline_ms: float):
+    def __init__(self, queued_ms: float, deadline_ms: float,
+                 trace_id: Optional[str] = None):
         super().__init__(f"deadline of {deadline_ms:.1f} ms elapsed after "
                          f"{queued_ms:.1f} ms in queue")
         self.queued_ms = queued_ms
         self.deadline_ms = deadline_ms
+        self.trace_id = trace_id     # resolves at /debug/trace/<id>
 
 
 @dataclass(frozen=True)
@@ -139,7 +146,7 @@ class _Pending:
     deadline_ms: float
     deadline: float              # clock timestamp
     enqueued: float              # clock timestamp
-    trace_id: str
+    ctx: TraceContext            # propagated request trace (ISSUE 8)
     future: Future = field(default_factory=Future)
 
 
@@ -193,7 +200,7 @@ class ServingFrontend:
                  quotas: Optional[Dict[str, TenantQuota]] = None,
                  default_quota: Optional[TenantQuota] = None,
                  query_pad: int = 32, registry=None,
-                 clock=time.monotonic):
+                 clock=time.monotonic, recorder=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if queue_depth < 1:
@@ -208,6 +215,7 @@ class ServingFrontend:
         self.default_quota = default_quota
         self.registry = (obs_metrics.get_registry() if registry is None
                          else registry)
+        self.recorder = recorder     # None -> process-global at record time
         self._clock = clock
         self._queue: deque[_Pending] = deque()
         self._cv = threading.Condition()
@@ -265,6 +273,19 @@ class ServingFrontend:
             "End-to-end front-door latency (admission to response).",
             labels={"tenant": tenant})
 
+    # -- tracing -------------------------------------------------------------
+    def _recorder(self):
+        return self.recorder if self.recorder is not None \
+            else obs_recorder.get_recorder()
+
+    def _seal(self, ctx: TraceContext, outcome: str, total_ms: float,
+              error: Optional[str] = None):
+        """Finish a request context and hand it to the flight recorder.
+        Returns the retention reason (truthy when the id resolves)."""
+        ctx.finish(outcome, total_ms=total_ms, error=error)
+        rec = self._recorder()
+        return rec.record(ctx) if rec is not None else None
+
     # -- admission -----------------------------------------------------------
     def submit(self, q_idx, q_val, *, tenant: str = "default",
                deadline_ms: Optional[float] = None,
@@ -279,6 +300,7 @@ class ServingFrontend:
         if self._closed:
             raise RuntimeError("frontend is closed")
         now = self._clock()
+        ctx = TraceContext(tenant=tenant)
         deadline_ms = (self.default_deadline_ms if deadline_ms is None
                        else float(deadline_ms))
         quota = self.quotas.get(tenant, self.default_quota)
@@ -288,17 +310,24 @@ class ServingFrontend:
                 if bucket is None:
                     bucket = self._buckets[tenant] = _TokenBucket(quota, now)
             wait_s = bucket.try_take(now)
+            ctx.add_stage("quota", (self._clock() - now) * 1e3, start_ms=0.0)
             if wait_s > 0:
                 self._m_throttle(tenant).inc()
                 self._m_reject("throttled").inc()
                 self._m_outcome(tenant, "rejected_throttled").inc()
-                raise Rejected("throttled", wait_s * 1e3, tenant)
+                ctx.annotate(retry_after_ms=round(wait_s * 1e3, 3))
+                self._seal(ctx, "rejected_throttled",
+                           (self._clock() - now) * 1e3)
+                raise Rejected("throttled", wait_s * 1e3, tenant,
+                               trace_id=ctx.trace_id)
+        else:
+            ctx.add_stage("quota", (self._clock() - now) * 1e3, start_ms=0.0)
         p = _Pending(
             q_idx=np.asarray(q_idx, np.int32).reshape(-1),
             q_val=np.asarray(q_val, np.float32).reshape(-1),
             k=k, tenant=tenant, deadline_ms=deadline_ms,
             deadline=now + deadline_ms / 1e3, enqueued=now,
-            trace_id=new_trace_id())
+            ctx=ctx)
         if p.q_idx.shape != p.q_val.shape:
             raise ValueError(f"query idx/val length mismatch: "
                              f"{p.q_idx.shape[0]} vs {p.q_val.shape[0]}")
@@ -310,7 +339,12 @@ class ServingFrontend:
                 retry_ms = per * (1 + len(self._queue) / self.max_batch) * 1e3
                 self._m_reject("queue_full").inc()
                 self._m_outcome(tenant, "rejected_queue_full").inc()
-                raise Rejected("queue_full", retry_ms, tenant)
+                ctx.annotate(retry_after_ms=round(retry_ms, 3),
+                             queue_depth=len(self._queue))
+                self._seal(ctx, "rejected_queue_full",
+                           (self._clock() - now) * 1e3)
+                raise Rejected("queue_full", retry_ms, tenant,
+                               trace_id=ctx.trace_id)
             self._queue.append(p)
             self._m_depth.set(len(self._queue))
             self._cv.notify_all()
@@ -355,11 +389,16 @@ class ServingFrontend:
             now = self._clock()
             live = []
             for p in batch:
+                queued_ms = (now - p.enqueued) * 1e3
+                p.ctx.add_stage("queue", queued_ms)
                 if p.deadline < now:
                     self._m_expired.inc()
                     self._m_outcome(p.tenant, "expired").inc()
+                    self._seal(p.ctx, "expired", queued_ms,
+                               error=f"deadline {p.deadline_ms:.1f} ms "
+                                     f"elapsed in queue")
                     p.future.set_exception(DeadlineExceeded(
-                        (now - p.enqueued) * 1e3, p.deadline_ms))
+                        queued_ms, p.deadline_ms, trace_id=p.ctx.trace_id))
                 else:
                     live.append(p)
             if not live:
@@ -368,28 +407,68 @@ class ServingFrontend:
                 (now - min(p.enqueued for p in live)) * 1e3)
             self._m_batch.observe(len(live))
             self._m_dispatch.inc()
+            bctx = TraceContext(tenant="batch", trace_id=new_batch_id())
+            width = max(p.q_idx.shape[0] for p in live)
+            width = max(self.query_pad,
+                        -(-width // self.query_pad) * self.query_pad)
             t0 = self._clock()
             try:
-                width = max(p.q_idx.shape[0] for p in live)
-                width = max(self.query_pad,
-                            -(-width // self.query_pad) * self.query_pad)
                 qi, qv = _pad_batch(live, width, self.max_batch)
-                res = self.server.query_many(qi, qv)
+                bctx.add_stage("assembly", (self._clock() - t0) * 1e3,
+                               start_ms=0.0)
+                res = self.server.query_many(qi, qv, ctx=bctx)
             except Exception as e:                       # noqa: BLE001
+                err = repr(e)
+                bctx.finish("error", error=err)
                 for p in live:
                     self._m_outcome(p.tenant, "error").inc()
+                    for name, _start, dur in bctx.stages:
+                        p.ctx.add_stage(name, dur)
+                    self._seal(p.ctx, "error",
+                               (self._clock() - p.enqueued) * 1e3, error=err)
                     p.future.set_exception(e)
+                self._record_batch(bctx, live, width)
                 continue
             dt = self._clock() - t0
             a = 0.2        # smooth the drain-rate estimate for 429 hints
             self._ewma_service_s = (dt if self._ewma_service_s == 0
                                     else a * dt + (1 - a) * self._ewma_service_s)
             done = self._clock()
+            pad_frac = 1.0 - (sum(p.q_idx.shape[0] for p in live)
+                              / float(self.max_batch * width))
             for i, p in enumerate(live):
-                out = res.row(i, k=p.k, trace_id=p.trace_id)
+                out = res.row(i, k=p.k, trace_id=p.ctx.trace_id)
                 self._m_outcome(p.tenant, "ok").inc()
-                self._m_latency(p.tenant).observe((done - p.enqueued) * 1e3)
+                lat_ms = (done - p.enqueued) * 1e3
+                # batch-level stages (assembly + synced device dispatch +
+                # sampled device/* sub-spans) are wall time every rider
+                # waited through, so each request inherits them whole.
+                for name, _start, dur in bctx.stages:
+                    p.ctx.add_stage(name, dur)
+                p.ctx.add_stage("respond", (self._clock() - done) * 1e3)
+                p.ctx.annotate(batch_id=bctx.trace_id, batch_size=len(live),
+                               width_bucket=width,
+                               padding_fraction=round(pad_frac, 4))
+                retained = self._seal(p.ctx, "ok", lat_ms)
+                self._m_latency(p.tenant).observe(
+                    lat_ms, exemplar=p.ctx.trace_id if retained else None)
                 p.future.set_result(out)
+            bctx.finish("ok", total_ms=(self._clock() - t0) * 1e3)
+            self._record_batch(bctx, live, width)
+
+    def _record_batch(self, bctx: TraceContext, live, width: int) -> None:
+        """Retain one coalesced-dispatch record in the recorder's batch
+        ring (`/debug/batches`, `/debug/trace/<batch_id>`)."""
+        rec = self._recorder()
+        if rec is None:
+            return
+        pad_frac = 1.0 - (sum(p.q_idx.shape[0] for p in live)
+                          / float(self.max_batch * width))
+        bctx.annotate(batch_id=bctx.trace_id, size=len(live),
+                      width_bucket=width,
+                      padding_fraction=round(pad_frac, 4),
+                      trace_ids=[p.ctx.trace_id for p in live])
+        rec.record_batch(bctx.to_dict())
 
     # -- lifecycle -----------------------------------------------------------
     def close(self, drain: bool = True) -> None:
@@ -398,11 +477,16 @@ class ServingFrontend:
         with self._cv:
             self._closed = True
             if not drain:
+                now = self._clock()
                 while self._queue:
                     p = self._queue.popleft()
                     self._m_outcome(p.tenant, "rejected_shutdown").inc()
+                    p.ctx.add_stage("queue", (now - p.enqueued) * 1e3)
+                    self._seal(p.ctx, "rejected_shutdown",
+                               (now - p.enqueued) * 1e3)
                     p.future.set_exception(
-                        Rejected("shutdown", 0.0, p.tenant))
+                        Rejected("shutdown", 0.0, p.tenant,
+                                 trace_id=p.ctx.trace_id))
                 self._m_depth.set(0)
             self._cv.notify_all()
         self._dispatcher.join(timeout=30)
@@ -430,26 +514,57 @@ class FrontendServer:
       ``Retry-After`` on admission rejection, 504 on in-queue deadline
       expiry, 400 on malformed input.
     * the standard observability endpoints (``/metrics``,
-      ``/metrics.json``, ``/healthz``) mounted from ``repro.obs.server`` —
-      one port serves both queries and scrapes.
+      ``/metrics.json``, ``/healthz``, ``/readyz``) plus any ``/debug/*``
+      surfaces, mounted from ``repro.obs.server`` — one port serves both
+      queries and scrapes.  ``/readyz`` defaults to two live checks:
+      the dispatcher thread is alive, and the admission queue is below 90%
+      of its depth (saturated = not ready, so load balancers stop sending
+      before clients start seeing 429s); pass ``ready=`` to extend or
+      replace them.
 
     Handlers block in ``frontend.query`` (each connection gets a thread via
     ``ThreadingHTTPServer``), so concurrent clients coalesce into fused
-    batches exactly like in-process callers.
+    batches exactly like in-process callers.  Rejection (429) and deadline
+    (504) bodies carry the request's ``trace_id``, which resolves at
+    ``/debug/trace/<id>`` whenever a flight recorder is mounted.
     """
 
     def __init__(self, frontend: ServingFrontend, host: str = "127.0.0.1",
-                 port: int = 0, registry=None):
+                 port: int = 0, registry=None, *, ready=None, recorder=None,
+                 slo=None, profile_dir=None):
         self.frontend = frontend
         self.host = host
         self.port = int(port)
         self.registry = (frontend.registry if registry is None else registry)
+        if ready is None:
+            ready = obs_server.ReadyState()
+            ready.add_check("dispatcher", self._check_dispatcher)
+            ready.add_check("admission_queue", self._check_queue)
+        self.ready = ready
+        self.recorder = recorder
+        self.slo = slo
+        self.profile_dir = profile_dir
         self._httpd = None
         self._thread = None
 
+    def _check_dispatcher(self):
+        alive = self.frontend._dispatcher.is_alive()
+        return alive, "" if alive else "dispatcher thread is not running"
+
+    def _check_queue(self):
+        depth = len(self.frontend._queue)
+        limit = 0.9 * self.frontend.queue_depth
+        ok = depth < limit
+        return ok, "" if ok else (f"admission queue saturated: "
+                                  f"{depth}/{self.frontend.queue_depth}")
+
     def start(self) -> "FrontendServer":
         frontend = self.frontend
-        get_endpoints = obs_server.registry_endpoints(self.registry)
+        recorder = self.recorder if self.recorder is not None \
+            else frontend._recorder()
+        get_endpoints = obs_server.build_endpoints(
+            self.registry, ready=self.ready, recorder=recorder,
+            slo=self.slo, profile_dir=self.profile_dir)
 
         class Handler(BaseHTTPRequestHandler):
             def _reply(self, code: int, body: bytes, ctype: str,
@@ -467,12 +582,12 @@ class FrontendServer:
                             "application/json", headers)
 
             def do_GET(self):  # noqa: N802 - http.server API
-                endpoint = get_endpoints.get(self.path)
-                if endpoint is None:
+                routed = obs_server.dispatch(get_endpoints, self.path)
+                if routed is None:
                     self.send_error(404)
                     return
-                body, ctype = endpoint()
-                self._reply(200, body, ctype)
+                status, body, ctype = routed
+                self._reply(status, body, ctype)
 
             def do_POST(self):  # noqa: N802 - http.server API
                 if self.path != "/v1/query":
@@ -500,7 +615,8 @@ class FrontendServer:
                 except Rejected as e:
                     self._reply_json(
                         429, {"error": "rejected", "reason": e.reason,
-                              "retry_after_ms": e.retry_after_ms},
+                              "retry_after_ms": e.retry_after_ms,
+                              "trace_id": e.trace_id},
                         headers=[("Retry-After",
                                   str(max(1, math.ceil(e.retry_after_ms
                                                        / 1e3))))])
@@ -508,7 +624,8 @@ class FrontendServer:
                 except DeadlineExceeded as e:
                     self._reply_json(504, {"error": "deadline_exceeded",
                                            "queued_ms": round(e.queued_ms, 3),
-                                           "deadline_ms": e.deadline_ms})
+                                           "deadline_ms": e.deadline_ms,
+                                           "trace_id": e.trace_id})
                     return
                 self._reply_json(200, {
                     "ids": [int(i) for i in res.ids],

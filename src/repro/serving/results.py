@@ -14,29 +14,23 @@ The two-level serving API (documented in docs/serving.md):
 copies, not the result) and remains unpackable as the legacy
 ``(ids, scores)`` tuple so existing call sites keep working during the
 migration to the typed surface.
+
+``trace_id`` generation lives in ``repro.obs.trace`` (re-exported here for
+compatibility) so every serving layer draws from ONE id namespace: a
+result's trace id resolves against the flight recorder at
+``/debug/trace/<id>`` regardless of which layer created it.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import itertools
-import os
-import threading
 from typing import Optional
 
 import numpy as np
 
+from repro.obs.trace import new_trace_id
+
 __all__ = ["QueryResult", "new_trace_id"]
-
-_trace_counter = itertools.count(1)
-_trace_lock = threading.Lock()
-
-
-def new_trace_id() -> str:
-    """Process-unique, monotonically increasing query trace id."""
-    with _trace_lock:
-        n = next(_trace_counter)
-    return f"q-{os.getpid():x}-{n:x}"
 
 
 @dataclasses.dataclass(frozen=True, eq=False)

@@ -35,9 +35,10 @@ from repro.core import engine as eng
 from repro.core.engine import SinnamonIndex
 from repro.obs import events as obs_events
 from repro.obs import metrics as obs_metrics
+from repro.obs import recorder as obs_recorder
 from repro.obs.instrument import install_engine_gauges
-from repro.obs.trace import Trace
-from repro.serving.results import QueryResult, new_trace_id
+from repro.obs.trace import Trace, TraceContext
+from repro.serving.results import QueryResult
 from repro.serving.sharded import ShardedSinnamonIndex
 
 #: Stage names of the staged (traced) single-device query path, in order.
@@ -110,7 +111,7 @@ class QueryServer:
                  budget: Optional[int] = None, score_fn=None,
                  score_backend: Optional[str] = None,
                  registry=None, event_log=None, trace_every: int = 0,
-                 index_name: str = "index"):
+                 index_name: str = "index", recorder=None):
         self.index = index
         self.k, self.kprime, self.budget = k, kprime, budget
         self.score_fn = score_fn
@@ -118,6 +119,7 @@ class QueryServer:
         self.registry = (obs_metrics.get_registry() if registry is None
                          else registry)
         self.event_log = event_log
+        self.recorder = recorder
         self.trace_every = int(trace_every)
         self.stats = {"queries": 0}
         self.last_latency_ms = 0.0       # most recent per-query latency
@@ -150,21 +152,50 @@ class QueryServer:
                           "Per-query serving latency.",
                           labels={"backend": backend})
 
-    # -- serving -------------------------------------------------------------
-    def query(self, q_idx, q_val) -> QueryResult:
-        """Serve one query.  Returns a :class:`repro.serving.QueryResult`
-        (``[k]`` ids/scores; unpackable as the legacy ``(ids, scores)``)."""
-        backend = self._backend_label()
-        trace_id = new_trace_id()
-        t0 = time.perf_counter()
-        ids, scores = self.index.search(
-            q_idx, q_val, k=self.k, kprime=self.kprime, budget=self.budget,
-            score_fn=self.score_fn, backend=self.score_backend)
-        self._record(1, (time.perf_counter() - t0) * 1e3, backend)
-        return QueryResult(ids=ids, scores=scores, k=len(ids),
-                           backend=backend, trace_id=trace_id)
+    def _recorder(self):
+        return self.recorder if self.recorder is not None \
+            else obs_recorder.get_recorder()
 
-    def query_many(self, q_idx, q_val) -> QueryResult:
+    def _fail(self, ctx: TraceContext, owns: bool, e: BaseException) -> None:
+        """Seal + record an errored context this server owns."""
+        if not owns:
+            return      # the front door owns the context's lifecycle
+        ctx.finish("error", error=repr(e))
+        rec = self._recorder()
+        if rec is not None:
+            rec.record(ctx)
+
+    # -- serving -------------------------------------------------------------
+    def query(self, q_idx, q_val, ctx: Optional[TraceContext] = None) \
+            -> QueryResult:
+        """Serve one query.  Returns a :class:`repro.serving.QueryResult`
+        (``[k]`` ids/scores; unpackable as the legacy ``(ids, scores)``).
+
+        ``ctx`` is an optional propagated :class:`TraceContext`; without
+        one the server opens (and records) its own, so the result's
+        ``trace_id`` resolves at ``/debug/trace/<id>`` whenever a flight
+        recorder is installed."""
+        backend = self._backend_label()
+        owns = ctx is None
+        if owns:
+            ctx = TraceContext()
+        try:
+            with ctx.stage("device"):
+                t0 = time.perf_counter()
+                ids, scores = self.index.search(
+                    q_idx, q_val, k=self.k, kprime=self.kprime,
+                    budget=self.budget, score_fn=self.score_fn,
+                    backend=self.score_backend)
+                dt_ms = (time.perf_counter() - t0) * 1e3
+        except Exception as e:
+            self._fail(ctx, owns, e)
+            raise
+        self._record(1, dt_ms, backend, ctx=ctx, owns=owns)
+        return QueryResult(ids=ids, scores=scores, k=len(ids),
+                           backend=backend, trace_id=ctx.trace_id)
+
+    def query_many(self, q_idx, q_val,
+                   ctx: Optional[TraceContext] = None) -> QueryResult:
         """Batched serving path: [B, Lq] queries in ONE device dispatch.
 
         Amortizes dispatch + (on a sharded index) the candidate merge across
@@ -172,34 +203,61 @@ class QueryServer:
         percentile accounting stays comparable with :meth:`query`.  Returns
         one batched :class:`QueryResult` (``[B, k]``; ``.row(i)`` slices out
         a per-request result).
+
+        With a caller-provided ``ctx`` (the front door's batch context) the
+        server only annotates it — the caller seals and records it; without
+        one the server owns the context end to end.
         """
         bn = len(q_idx)
         backend = self._backend_label()
-        trace_id = new_trace_id()
+        owns = ctx is None
+        if owns:
+            ctx = TraceContext()
         trace = None
         if self.trace_every > 0 and self.score_fn is None:
             self._since_trace += 1
             if self._since_trace >= self.trace_every:
                 self._since_trace = 0
                 trace = Trace()
-        t0 = time.perf_counter()
-        if trace is not None:
-            ids, scores = self._search_staged(q_idx, q_val, trace)
-        else:
-            ids, scores = self.index.search_many(
-                q_idx, q_val, k=self.k, kprime=self.kprime,
-                budget=self.budget, score_fn=self.score_fn,
-                backend=self.score_backend)
-        self._record(bn, (time.perf_counter() - t0) * 1e3, backend, trace)
+        try:
+            with ctx.stage("device"):
+                t0 = time.perf_counter()
+                if trace is not None:
+                    ids, scores = self._search_staged(q_idx, q_val, trace)
+                else:
+                    ids, scores = self.index.search_many(
+                        q_idx, q_val, k=self.k, kprime=self.kprime,
+                        budget=self.budget, score_fn=self.score_fn,
+                        backend=self.score_backend)
+                dt_ms = (time.perf_counter() - t0) * 1e3
+        except Exception as e:
+            self._fail(ctx, owns, e)
+            raise
+        self._record(bn, dt_ms, backend, trace, ctx=ctx, owns=owns)
         return QueryResult(ids=ids, scores=scores, k=ids.shape[-1],
-                           backend=backend, trace_id=trace_id)
+                           backend=backend, trace_id=ctx.trace_id)
 
     def _record(self, bn: int, dt_ms: float, backend: str,
-                trace: Optional[Trace] = None) -> None:
+                trace: Optional[Trace] = None,
+                ctx: Optional[TraceContext] = None,
+                owns: bool = False) -> None:
         per_query = dt_ms / bn
         self.stats["queries"] += bn
         self.last_latency_ms = per_query
-        self._latency_hist(backend).observe(per_query, n=bn)
+        retained = None
+        if ctx is not None:
+            ctx.annotate(backend=backend, batch=bn)
+            if trace is not None:
+                ctx.add_trace(trace, prefix="device/")
+            if owns:
+                ctx.finish("ok", total_ms=dt_ms)
+                rec = self._recorder()
+                if rec is not None:
+                    retained = rec.record(ctx)
+        # exemplar only when the id actually resolves in the recorder ring
+        self._latency_hist(backend).observe(
+            per_query, n=bn,
+            exemplar=ctx.trace_id if (ctx is not None and retained) else None)
         self._hist("repro_query_batch_docs", "Queries per serving batch.",
                    buckets=obs_metrics.DEFAULT_COUNT_BUCKETS).observe(bn)
         self.registry.counter("repro_queries_total", "Queries served.",
@@ -219,6 +277,7 @@ class QueryServer:
             else obs_events.get_event_log()
         if log is not None:
             log.emit("query", batch=bn, ms=round(dt_ms, 4), backend=backend,
+                     trace_id=ctx.trace_id if ctx is not None else None,
                      spans=trace.as_dict()["spans"] if trace else None)
 
     # -- staged (traced) path ------------------------------------------------
@@ -270,10 +329,16 @@ class QueryServer:
         with trace.span("admission"):
             q_idx = np.asarray(q_idx)
             q_val = np.asarray(q_val)
-        with trace.span("spmd_search"):
+        if isinstance(self.index, ShardedSinnamonIndex):
+            # the index records the (synced) spmd_search span itself
             ids, scores = self.index.search_many(
                 q_idx, q_val, k=self.k, kprime=self.kprime,
-                budget=self.budget, backend=self.score_backend)
+                budget=self.budget, backend=self.score_backend, trace=trace)
+        else:
+            with trace.span("spmd_search"):
+                ids, scores = self.index.search_many(
+                    q_idx, q_val, k=self.k, kprime=self.kprime,
+                    budget=self.budget, backend=self.score_backend)
         return ids, scores
 
     # -- stats ---------------------------------------------------------------

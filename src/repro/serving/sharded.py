@@ -374,13 +374,16 @@ class ShardedSinnamonIndex:
                     kprime: Optional[int] = None,
                     budget: Optional[int] = None, score_fn=None,
                     backend: Optional[str] = None,
-                    return_locators: bool = False):
+                    return_locators: bool = False, trace=None):
         """Batched search over [B, Lq] queries (one SPMD dispatch).
 
         ``kprime`` is the per-shard candidate count k'.  ``backend`` picks
         the shard-local scoring backend (None -> process default).  With
         ``return_locators`` the packed (shard, slot) payload of every hit is
-        also returned (decode with topk.unpack_shard_slot).
+        also returned (decode with topk.unpack_shard_slot).  ``trace`` is an
+        optional `repro.obs.Trace`: the SPMD dispatch (synced) is recorded
+        as one ``spmd_search`` span — shard-local stages run inside a single
+        shard_map program and cannot honestly be split further.
         """
         from repro.kernels import ops as _ops
 
@@ -394,8 +397,14 @@ class ShardedSinnamonIndex:
         step = self._step(key, lambda: make_search_step(
             self.mesh, self.spec, k=k, kprime_local=kl, budget=budget,
             score_fn=score_fn, backend=backend))
-        scores, ids, loc = step(self.state, jnp.asarray(q_idx),
-                                jnp.asarray(q_val))
+        if trace is not None:
+            with trace.span("spmd_search"):
+                scores, ids, loc = step(self.state, jnp.asarray(q_idx),
+                                        jnp.asarray(q_val))
+                jax.block_until_ready(scores)
+        else:
+            scores, ids, loc = step(self.state, jnp.asarray(q_idx),
+                                    jnp.asarray(q_val))
         ids = eng.unpack_ids64(np.asarray(ids))
         if return_locators:
             return ids, np.asarray(scores), np.asarray(loc)

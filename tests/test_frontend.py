@@ -27,7 +27,7 @@ import pytest
 
 from repro.core.engine import EngineSpec, SinnamonIndex
 from repro.data import synth
-from repro.obs import MetricsRegistry
+from repro.obs import FlightRecorder, MetricsRegistry
 from repro.obs.metrics import parse_exposition
 from repro.serving.frontend import (DeadlineExceeded, FrontendServer,
                                     Rejected, ServingFrontend, TenantQuota)
@@ -59,7 +59,7 @@ class _StubServer:
         self.gate = gate
         self.batches = []
 
-    def query_many(self, qi, qv):
+    def query_many(self, qi, qv, ctx=None):
         if self.gate is not None:
             self.gate.wait()
         if self.delay_s:
@@ -337,6 +337,184 @@ def test_http_429_with_retry_after():
             assert detail["reason"] == "queue_full"
     finally:
         fe.close(drain=False)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end request tracing + flight recorder (ISSUE 8)
+# ---------------------------------------------------------------------------
+
+def test_stage_attribution_sums_to_latency(served):
+    """An OK trace carries quota/queue/assembly/device/respond stages whose
+    durations account for the end-to-end latency, plus batch annotations
+    that join against the batch record."""
+    server, qi, qv = served
+    rec = FlightRecorder(capacity=64, sample_rate=1.0, spill=False,
+                         registry=MetricsRegistry())
+    fe = ServingFrontend(server, max_batch=4, batch_window_ms=1.0,
+                         queue_depth=32, recorder=rec)
+    try:
+        fe.query(qi[0], qv[0])                       # compile warmup
+        res = fe.query(qi[1], qv[1])
+    finally:
+        fe.close()
+    trace = rec.get(res.trace_id)
+    assert trace is not None and trace["outcome"] == "ok"
+    names = [s["stage"] for s in trace["stages"]]
+    assert {"quota", "queue", "assembly", "device", "respond"} <= set(names)
+    stage_sum = sum(s["ms"] for s in trace["stages"]
+                    if not s["stage"].startswith("device/"))
+    total = trace["total_ms"]
+    assert 0.5 * total <= stage_sum <= 1.5 * total + 1.0, (
+        f"stage sum {stage_sum:.3f}ms does not account for total "
+        f"{total:.3f}ms: {trace['stages']}")
+    # batch annotations join request <-> batch records in both directions
+    assert trace["batch_size"] >= 1
+    assert trace["width_bucket"] % fe.query_pad == 0
+    assert 0.0 <= trace["padding_fraction"] < 1.0
+    batch = rec.get_batch(trace["batch_id"])
+    assert batch is not None and res.trace_id in batch["trace_ids"]
+    assert any(s["stage"] == "device" for s in batch["stages"])
+
+
+def test_rejected_and_expired_recoverable_from_recorder():
+    """The requests an operator must explain — rejections and deadline
+    misses — are always retained, with the exception's trace_id resolving
+    to stages for exactly the pipeline they traversed."""
+    gate = threading.Event()
+    stub = _StubServer(gate=gate)
+    rec = FlightRecorder(capacity=64, sample_rate=0.0, spill=False,
+                         registry=MetricsRegistry())
+    fe = ServingFrontend(stub, max_batch=1, batch_window_ms=0.0,
+                         queue_depth=2, default_deadline_ms=60_000,
+                         recorder=rec)
+    try:
+        qi, qv = _q()
+        blocker = fe.submit(qi, qv)    # dispatcher picks this up and stalls
+        import time
+        time.sleep(0.02)
+        doomed = fe.submit(qi, qv, deadline_ms=10.0)
+        fe.submit(qi, qv)              # fills the depth-2 queue
+        with pytest.raises(Rejected) as rej:
+            fe.submit(qi, qv)
+        time.sleep(0.05)               # doomed's deadline elapses in-queue
+        gate.set()
+        blocker.result(timeout=30)
+        with pytest.raises(DeadlineExceeded) as exp:
+            doomed.result(timeout=30)
+    finally:
+        fe.close()
+    r = rec.get(rej.value.trace_id)
+    assert r is not None and r["outcome"] == "rejected_queue_full"
+    assert r["retained"] == "outcome"
+    assert r["retry_after_ms"] > 0 and r["queue_depth"] == 2
+    assert [s["stage"] for s in r["stages"]] == ["quota"]  # never queued
+    e = rec.get(exp.value.trace_id)
+    assert e is not None and e["outcome"] == "expired"
+    assert "deadline" in e["error"]
+    queue_ms = sum(s["ms"] for s in e["stages"] if s["stage"] == "queue")
+    assert queue_ms >= 10.0            # the wait that killed it is on record
+    assert [r2["outcome"] for r2 in rec.recent(outcome="rejected")] \
+        == ["rejected_queue_full"]
+
+
+def test_loadgen_outcome_accounting_matches_counters():
+    """Client-observed outcomes and the frontend counters agree exactly:
+    submitted == ok + rejected + expired (no silent drops, no double
+    counting)."""
+    gate = threading.Event()
+    stub = _StubServer(gate=gate)
+    reg = MetricsRegistry()
+    fe = ServingFrontend(stub, max_batch=4, batch_window_ms=0.0,
+                         queue_depth=8,
+                         quotas={"lim": TenantQuota(rate_qps=0.001, burst=2)},
+                         registry=reg)
+    qi, qv = _q()
+    client = {"ok": 0, "rejected": 0, "expired": 0}
+    futs, submitted = [], 0
+    import time
+
+    def try_submit(**kw):
+        nonlocal submitted
+        submitted += 1
+        try:
+            futs.append(fe.submit(qi, qv, **kw))
+        except Rejected:
+            client["rejected"] += 1
+
+    try:
+        try_submit()                   # blocker: dispatched, then stalls
+        time.sleep(0.02)
+        for _ in range(3):
+            try_submit(deadline_ms=20.0)        # will expire in-queue
+        for _ in range(3):
+            try_submit(tenant="lim")            # 2 admitted, 1 throttled
+        for _ in range(3):
+            try_submit()                        # fills the queue to 8
+        try_submit()                            # 9th -> queue_full
+        time.sleep(0.1)                # deadlines elapse while stalled
+        gate.set()
+        for f in futs:
+            try:
+                f.result(timeout=30)
+                client["ok"] += 1
+            except DeadlineExceeded:
+                client["expired"] += 1
+    finally:
+        fe.close()
+    assert submitted == 11
+    assert client == {"ok": 6, "rejected": 2, "expired": 3}
+    snap = json.loads(reg.to_json())
+    by_outcome = {}
+    for s in snap["repro_frontend_requests_total"]["series"]:
+        out = s["labels"]["outcome"]
+        by_outcome[out] = by_outcome.get(out, 0) + s["value"]
+    assert sum(by_outcome.values()) == submitted
+    assert by_outcome["ok"] == client["ok"]
+    assert by_outcome["expired"] == client["expired"]
+    assert by_outcome["rejected_throttled"] \
+        + by_outcome["rejected_queue_full"] == client["rejected"]
+
+
+def test_front_door_serves_readyz_and_debug_surfaces():
+    """The serving port itself answers /readyz (dispatcher + queue checks)
+    and the /debug/* flight-recorder surfaces."""
+    stub = _StubServer()
+    rec = FlightRecorder(capacity=64, sample_rate=1.0, spill=False,
+                         registry=MetricsRegistry())
+    fe = ServingFrontend(stub, max_batch=4, batch_window_ms=0.0,
+                         queue_depth=16, recorder=rec)
+    closed = False
+    try:
+        with FrontendServer(fe, port=0, recorder=rec) as door:
+            qi, qv = _q()
+            res = fe.query(qi, qv)
+            ready = json.loads(urllib.request.urlopen(
+                door.url + "/readyz", timeout=30).read())
+            assert ready["ready"] is True
+            assert set(ready["checks"]) == {"dispatcher", "admission_queue"}
+            doc = json.loads(urllib.request.urlopen(
+                door.url + "/debug/requests?outcome=ok", timeout=30).read())
+            assert doc["count"] >= 1
+            assert any(r["trace_id"] == res.trace_id
+                       for r in doc["requests"])
+            trace = json.loads(urllib.request.urlopen(
+                door.url + f"/debug/trace/{res.trace_id}",
+                timeout=30).read())
+            assert trace["outcome"] == "ok"
+            batches = json.loads(urllib.request.urlopen(
+                door.url + "/debug/batches", timeout=30).read())
+            assert batches["count"] >= 1
+            # a dead dispatcher flips /readyz to 503 with the reason
+            fe.close()
+            closed = True
+            with pytest.raises(urllib.error.HTTPError) as exc:
+                urllib.request.urlopen(door.url + "/readyz", timeout=30)
+            assert exc.value.code == 503
+            detail = json.loads(exc.value.read())
+            assert detail["checks"]["dispatcher"]["ok"] is False
+    finally:
+        if not closed:
+            fe.close()
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,144 @@
+"""Lint: the metric catalog in docs/observability.md matches the code.
+
+Two directions, plus naming conventions (run in the CI ``docs`` job;
+exits non-zero with one line per violation):
+
+1. every metric family registered at runtime (AST scan of ``src/`` for
+   ``counter(...)`` / ``gauge(...)`` / ``histogram(...)`` calls with a
+   literal ``repro_*`` first argument) appears in the docs catalog —
+   an undocumented metric is invisible to operators;
+2. every name in the catalog appears in the code — a stale docs row
+   sends an operator hunting for a series that no longer exists;
+3. the type recorded in the docs table matches the registration call;
+4. suffix conventions, so dashboards can infer units from names:
+   counters end ``_total``; histograms end in a unit suffix
+   (``_ms`` / ``_bytes`` / ``_docs`` / ``_size``); gauges never end
+   ``_total`` (that spelling promises a monotone counter).
+
+The scan keys on registration calls, not bare string constants, so
+strings that merely *mention* a metric (the SLO monitor reading
+existing families, tests, docstrings) can't introduce phantom names.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+DOC = os.path.join(ROOT, "docs", "observability.md")
+
+NAME_RE = re.compile(r"^repro_[a-z0-9_]+$")
+#: registration call names -> metric type ("_hist" is QueryServer's cached
+#: histogram wrapper; "gauge" also catches repro.obs.instrument's local
+#: helper, called as a plain name).
+REGISTRATION_FNS = {"counter": "counter", "gauge": "gauge",
+                    "histogram": "histogram", "_hist": "histogram"}
+HISTOGRAM_SUFFIXES = ("_ms", "_bytes", "_docs", "_size")
+#: `name{labels}` or bare `name` inside a docs table cell
+_DOC_TOKEN_RE = re.compile(r"`(repro_[a-z0-9_]+)(?:\{[^}]*\})?`")
+
+
+def scan_code(src_dir: str = SRC) -> dict:
+    """{metric_name: {types}} from registration call sites under src/."""
+    found: dict = {}
+    for dirpath, _dirs, files in os.walk(src_dir):
+        for fname in files:
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            with open(path, encoding="utf-8") as f:
+                tree = ast.parse(f.read(), filename=path)
+            for node in ast.walk(tree):
+                if not isinstance(node, ast.Call) or not node.args:
+                    continue
+                fn = node.func
+                fn_name = (fn.attr if isinstance(fn, ast.Attribute)
+                           else fn.id if isinstance(fn, ast.Name) else None)
+                mtype = REGISTRATION_FNS.get(fn_name)
+                arg = node.args[0]
+                if mtype is None or not isinstance(arg, ast.Constant) \
+                        or not isinstance(arg.value, str):
+                    continue
+                if arg.value.startswith("repro_"):
+                    found.setdefault(arg.value, set()).add(mtype)
+    return found
+
+
+def scan_docs(doc_path: str = DOC) -> dict:
+    """{metric_name: type} from the catalog tables in observability.md."""
+    found: dict = {}
+    with open(doc_path, encoding="utf-8") as f:
+        for line in f:
+            if not line.lstrip().startswith("|"):
+                continue
+            cells = [c.strip() for c in line.strip().strip("|").split("|")]
+            if len(cells) < 2:
+                continue
+            names = _DOC_TOKEN_RE.findall(cells[0])
+            if not names:
+                continue
+            mtype = cells[1].lower()
+            if mtype not in ("counter", "gauge", "histogram"):
+                continue
+            for name in names:
+                found[name] = mtype
+    return found
+
+
+def check() -> list:
+    problems = []
+    code = scan_code()
+    docs = scan_docs()
+
+    for name, types in sorted(code.items()):
+        if len(types) > 1:
+            problems.append(f"{name}: registered as multiple types "
+                            f"({', '.join(sorted(types))})")
+    for name in sorted(code):
+        if name not in docs:
+            problems.append(f"{name}: registered in src/ but missing from "
+                            f"the docs/observability.md catalog")
+    for name in sorted(docs):
+        if name not in code:
+            problems.append(f"{name}: in the docs/observability.md catalog "
+                            f"but never registered in src/")
+    for name, mtype in sorted(docs.items()):
+        types = code.get(name)
+        if types and mtype not in types:
+            problems.append(f"{name}: docs say {mtype}, code registers "
+                            f"{'/'.join(sorted(types))}")
+
+    for name, types in sorted(code.items()):
+        if not NAME_RE.match(name):
+            problems.append(f"{name}: not snake_case ascii "
+                            f"(^repro_[a-z0-9_]+$)")
+        mtype = next(iter(types)) if len(types) == 1 else None
+        if mtype == "counter" and not name.endswith("_total"):
+            problems.append(f"{name}: counters must end _total")
+        if mtype == "histogram" and not name.endswith(HISTOGRAM_SUFFIXES):
+            problems.append(f"{name}: histograms must end one of "
+                            f"{'/'.join(HISTOGRAM_SUFFIXES)}")
+        if mtype == "gauge" and name.endswith("_total"):
+            problems.append(f"{name}: gauges must not end _total "
+                            f"(reserved for counters)")
+    return problems
+
+
+def main() -> int:
+    problems = check()
+    code, docs = scan_code(), scan_docs()
+    if problems:
+        for p in problems:
+            print(f"check_metric_names: {p}", file=sys.stderr)
+        return 1
+    print(f"check_metric_names: OK — {len(code)} registered families, "
+          f"{len(docs)} documented, names/types/suffixes consistent")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
