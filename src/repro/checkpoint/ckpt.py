@@ -22,6 +22,8 @@ import jax
 import ml_dtypes
 import numpy as np
 
+from repro.fault import failpoints as _fp
+
 # numpy's npz cannot represent ml_dtypes (bfloat16, fp8): store such arrays
 # as raw uint views and record the true dtype in the manifest.
 _EXOTIC = {
@@ -67,6 +69,11 @@ def save(ckpt_dir: str, step: int, tree, keep: int = 3,
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     arrays = _flatten(tree)
+    # Failpoint sites model a save dying at each distinct hazard: while
+    # writing array bytes, while making them durable, and at the publish
+    # rename.  All three strand only .tmp/.old debris that the next
+    # save/adopt_strays clears — never the published step.
+    _fp.fire("snapshot.write")
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
     true_dtypes = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
@@ -83,9 +90,11 @@ def save(ckpt_dir: str, step: int, tree, keep: int = 3,
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
+    _fp.fire("snapshot.fsync")
     for name in ("arrays.npz", "manifest.json"):
         _fsync(os.path.join(tmp, name))
     _fsync(tmp)
+    _fp.fire("snapshot.rename")
     if os.path.exists(final):
         # Never delete the published step before its replacement is in
         # place: rename it aside, publish, then drop the old copy — so the

@@ -620,6 +620,24 @@ def search_batch(state, spec, q_idx, q_val, k, kprime, budget=None,
     return rerank_topk(state, cand_scores, cand_slots, q_idx, q_val, k)
 
 
+def search_batch_sketch(state, spec, q_idx, q_val, k, budget=None,
+                        backend: Optional[str] = None):
+    """Sketch-only batched search: Algorithm 6 with NO exact rerank.
+
+    Answers straight from the top-k sketch upper bounds — the cheapest
+    answer the index can produce (the paper's lite regime taken to its
+    limit: scores are Theorem 5.1 upper bounds, not inner products, and
+    ranking quality is whatever the sketch alone provides).  This is the
+    serving brownout lever: under overload the front door trades rerank
+    cost for availability and stamps results ``degraded``.
+    Returns (packed ids uint32[B, k, 2], upper_bounds f32[B, k],
+    slots int32[B, k]).
+    """
+    ub, slots = topk_candidates(state, spec, q_idx, q_val, k, budget,
+                                None, backend=backend)
+    return state.ids[slots], ub, slots
+
+
 # ---------------------------------------------------------------------------
 # Host wrapper: slot allocation, id mapping, growth
 # ---------------------------------------------------------------------------
@@ -698,6 +716,9 @@ class SinnamonIndex:
         self._search_many = jax.jit(
             search_batch, static_argnums=(1, 4, 5, 6),
             static_argnames=("score_fn", "backend"))
+        self._search_many_sketch = jax.jit(
+            search_batch_sketch, static_argnums=(1, 4, 5),
+            static_argnames=("backend",))
         self._compact = jax.jit(compact_state, static_argnums=(1,))
         self._slot_drift = jax.jit(slot_drift, static_argnums=(1,))
         self._obs = _WritePathMetrics()
@@ -775,6 +796,18 @@ class SinnamonIndex:
             k, kprime, budget, filter_mask, score_fn=score_fn,
             backend=self._backend(backend))
         return unpack_ids64(np.asarray(ids)), np.asarray(scores)
+
+    def search_many_sketch(self, q_idx, q_val, k: int,
+                           budget: Optional[int] = None,
+                           backend: Optional[str] = None):
+        """Batched sketch-only search (no exact rerank): the degraded
+        serving path.  Scores are sketch UPPER BOUNDS, not inner products
+        — see :func:`search_batch_sketch`."""
+        k = min(k, self.spec.capacity)
+        ids, ub, _ = self._search_many_sketch(
+            self.state, self.spec, jnp.asarray(q_idx), jnp.asarray(q_val),
+            k, budget, backend=self._backend(backend))
+        return unpack_ids64(np.asarray(ids)), np.asarray(ub)
 
     def _backend(self, backend) -> str:
         """Resolve the backend OUTSIDE jit so the default binds at call

@@ -1,0 +1,45 @@
+"""Fault injection and resilience primitives.
+
+* :mod:`repro.fault.failpoints` — deterministic seeded failpoints
+  threaded through the real WAL / snapshot / compaction / serving
+  error paths (armed via API or ``REPRO_FAILPOINTS``).
+* :mod:`repro.fault.retry` — retry with exponential backoff + jitter
+  under a deadline budget, and a closed/open/half-open circuit breaker.
+* :mod:`repro.fault.degrade` — the serving degradation ladder
+  (rerank-shrink → sketch-only → tenant shedding) with hysteresis.
+
+See docs/robustness.md for the failpoint catalog and semantics.
+"""
+
+from repro.fault.degrade import DegradationController, DegradeConfig
+from repro.fault.failpoints import (
+    FailpointRegistry,
+    InjectedError,
+    InjectedFault,
+    get_failpoints,
+    injected,
+    set_failpoints,
+)
+from repro.fault.retry import (
+    CircuitBreaker,
+    CircuitOpen,
+    RetryPolicy,
+    call_with_retry,
+    transient_oserror,
+)
+
+__all__ = [
+    "CircuitBreaker",
+    "CircuitOpen",
+    "DegradationController",
+    "DegradeConfig",
+    "FailpointRegistry",
+    "InjectedError",
+    "InjectedFault",
+    "RetryPolicy",
+    "call_with_retry",
+    "get_failpoints",
+    "injected",
+    "set_failpoints",
+    "transient_oserror",
+]

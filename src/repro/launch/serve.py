@@ -70,6 +70,23 @@ Serving front door (see docs/serving.md):
 * ``--deadline-ms T`` — default per-request deadline; queries whose budget
   elapses while queued are dropped and counted, not served late.
 
+Robustness (see docs/robustness.md):
+
+* ``--failpoints SPEC`` arms the deterministic fault-injection registry
+  (``site=mode[:arg][:prob]``, comma-separated — e.g.
+  ``wal.fsync=error:0.02,device.dispatch=stall:250ms``) for chaos drills;
+  ``--failpoint-seed`` fixes the injection schedule.  Equivalent to the
+  ``REPRO_FAILPOINTS`` / ``REPRO_FAILPOINT_SEED`` environment variables.
+* ``--degrade`` enables the front door's graceful-degradation ladder:
+  driven by SLO fast-burn and queue depth, L1 shrinks the rerank budget,
+  L2 serves sketch-only upper-bound scores (``degraded: true`` in the
+  response), L3 sheds the lowest-priority tenants with 429.  Thresholds
+  via ``--degrade-enter-burn`` / ``--degrade-exit-burn`` /
+  ``--degrade-enter-queue-frac`` / ``--degrade-exit-queue-frac`` /
+  ``--degrade-dwell-ticks`` (hysteresis).
+* ``--watchdog-timeout-s S`` fails in-flight front-door queries with 504
+  when one fused dispatch is stuck on the device longer than S seconds.
+
 Index construction goes through the ``repro.api`` facade: the flags here
 are argparse spellings of :class:`repro.api.IndexConfig` (and the ``--wal``
 family of :class:`repro.api.DurabilityConfig`), and the launcher calls
@@ -179,6 +196,34 @@ def parse_args(argv=None):
     ap.add_argument("--deadline-ms", type=float, default=1000.0, metavar="T",
                     help="front door: default per-request deadline; "
                          "requests expiring in-queue are dropped + counted")
+    ap.add_argument("--failpoints", default=None, metavar="SPEC",
+                    help="arm fault-injection failpoints: comma-separated "
+                         "site=mode[:arg][:prob] (docs/robustness.md); "
+                         "equivalent to REPRO_FAILPOINTS")
+    ap.add_argument("--failpoint-seed", type=int, default=0, metavar="N",
+                    help="seed for the failpoint injection schedule")
+    ap.add_argument("--degrade", action="store_true",
+                    help="front door: enable the graceful-degradation "
+                         "ladder (L1 shrink rerank, L2 sketch-only, "
+                         "L3 shed lowest-priority tenants)")
+    ap.add_argument("--degrade-enter-burn", type=float, default=4.0,
+                    metavar="X", help="ladder: escalate when SLO fast-burn "
+                                      ">= X")
+    ap.add_argument("--degrade-exit-burn", type=float, default=1.0,
+                    metavar="X", help="ladder: calm requires fast-burn <= X")
+    ap.add_argument("--degrade-enter-queue-frac", type=float, default=0.75,
+                    metavar="F", help="ladder: escalate when queue fill "
+                                      "fraction >= F")
+    ap.add_argument("--degrade-exit-queue-frac", type=float, default=0.25,
+                    metavar="F", help="ladder: calm requires queue fill "
+                                      "fraction <= F")
+    ap.add_argument("--degrade-dwell-ticks", type=int, default=4,
+                    metavar="N", help="ladder: consecutive calm ticks "
+                                      "before de-escalating one level")
+    ap.add_argument("--watchdog-timeout-s", type=float, default=None,
+                    metavar="S", help="front door: fail in-flight queries "
+                                      "with 504 when a fused dispatch is "
+                                      "stuck longer than S seconds")
     args = ap.parse_args(argv)
     if args.trace_every is None:
         args.trace_every = 32 if (args.metrics_port is not None
@@ -256,6 +301,13 @@ def main():
     )
     from repro.obs.instrument import install_recorder_gauges
     from repro.serving.serve import QueryServer
+
+    if args.failpoints:
+        from repro.fault import FailpointRegistry, set_failpoints
+        set_failpoints(FailpointRegistry(seed=args.failpoint_seed)
+                       .configure(args.failpoints))
+        print(f"failpoints armed: {args.failpoints} "
+              f"(seed={args.failpoint_seed})")
 
     obs_on = args.metrics_port is not None or args.serve_port is not None
     if args.event_log:
@@ -382,12 +434,22 @@ def main():
           f"p99={lat['p99']:.1f}ms", flush=True)
     frontend = front_door = None
     if args.serve_port is not None:
+        from repro.fault import DegradeConfig
         from repro.serving.frontend import FrontendServer, ServingFrontend
+        degrade_cfg = DegradeConfig(
+            enabled=args.degrade,
+            enter_burn=args.degrade_enter_burn,
+            exit_burn=args.degrade_exit_burn,
+            enter_queue_frac=args.degrade_enter_queue_frac,
+            exit_queue_frac=args.degrade_exit_queue_frac,
+            dwell_ticks=args.degrade_dwell_ticks) if args.degrade else None
         frontend = ServingFrontend(
             server, max_batch=args.max_batch,
             batch_window_ms=args.batch_window_ms,
             queue_depth=args.queue_depth,
-            default_deadline_ms=args.deadline_ms)
+            default_deadline_ms=args.deadline_ms,
+            slo=slo_monitor, degrade=degrade_cfg,
+            watchdog_timeout_s=args.watchdog_timeout_s)
         front_door = FrontendServer(
             frontend, port=args.serve_port, slo=slo_monitor,
             profile_dir=args.profile_dir)

@@ -160,6 +160,7 @@ class SLOMonitor:
         self._thread = None
         self._stop = threading.Event()
         self.ticks = 0
+        self.last_stats: Optional[dict] = None   # most recent tick() output
 
     # -- sampling ------------------------------------------------------------
     def _read(self):
@@ -224,7 +225,18 @@ class SLOMonitor:
         out["latency"]["bound_ms"] = \
             None if eff_bound == float("inf") else round(eff_bound, 6)
         self._maybe_warn(out)
+        self.last_stats = out
         return out
+
+    def fast_burn(self) -> float:
+        """Worst fast-window burn rate across objectives at the last tick
+        (0.0 before any tick).  This is the degradation ladder's pressure
+        signal — a cheap read, no fresh scrape."""
+        stats = self.last_stats
+        if not stats:
+            return 0.0
+        return max(stats[slo]["windows"]["fast"]["burn_rate"]
+                   for slo in ("latency", "availability"))
 
     @staticmethod
     def _window_base(samples, now, window_s):

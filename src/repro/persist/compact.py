@@ -25,6 +25,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.fault.retry import CircuitBreaker
 from repro.obs import events as obs_events
 from repro.obs import metrics as obs_metrics
 
@@ -123,10 +124,16 @@ def maybe_compact(index, threshold: float, registry=None) -> Optional[dict]:
 class BackgroundCompactor:
     """Daemon thread: poll drift every ``interval_s``, compact when above
     ``threshold``.  Requires a durable index (``try_compact_async``) so the
-    rebuild happens off the serving path and the WAL stays consistent."""
+    rebuild happens off the serving path and the WAL stays consistent.
+
+    Persistent failures trip a circuit breaker (``breaker_failures``
+    consecutive errors → skip ticks for ``breaker_reset_s``, then probe
+    once) so a wedged rebuild path degrades to periodic probes instead of
+    hot-looping error spam while drift monitoring keeps running."""
 
     def __init__(self, index, threshold: float, interval_s: float = 1.0,
-                 registry=None):
+                 registry=None, breaker_failures: int = 5,
+                 breaker_reset_s: float = 30.0):
         self.index = index
         self.threshold = threshold
         self.interval_s = interval_s
@@ -136,6 +143,10 @@ class BackgroundCompactor:
         self.skipped_races = 0
         self.errors = 0
         self.last_error: Optional[BaseException] = None
+        self.breaker = CircuitBreaker(failure_threshold=breaker_failures,
+                                      reset_timeout_s=breaker_reset_s,
+                                      name="compactor",
+                                      registry=self.registry)
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._run, daemon=True)
 
@@ -143,7 +154,7 @@ class BackgroundCompactor:
         return self.registry.counter(
             "repro_compactor_outcomes_total",
             "Background compactor ticks by outcome "
-            "(compacted | skipped_race | error).",
+            "(compacted | skipped_race | error | breaker_open).",
             labels={"outcome": outcome})
 
     def start(self) -> "BackgroundCompactor":
@@ -152,14 +163,19 @@ class BackgroundCompactor:
 
     def _run(self) -> None:
         while not self._stop.wait(self.interval_s):
+            if not self.breaker.allow():
+                self._outcome("breaker_open").inc()
+                continue
             # The daemon must survive transient races (e.g. a grow swapping
             # state mid-scan): record the error and retry next tick rather
             # than silently dying and letting drift grow unbounded.
             try:
                 self._tick()
+                self.breaker.record_success()
             except Exception as e:                      # noqa: BLE001
                 self.errors += 1
                 self.last_error = e
+                self.breaker.record_failure()
                 self._outcome("error").inc()
                 obs_events.emit("compactor_error", level="WARN",
                                 error=repr(e))

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine as eng
+from repro.fault import failpoints as _fp
 from repro.obs import events as obs_events
 from repro.obs import metrics as obs_metrics
 from repro.persist import snapshot as snaplib
@@ -180,6 +181,10 @@ class _DurableOps:
         if not n_dirty:
             return 0
         new_state = self._compacted_state(st)
+        # Failpoint: stall widens the optimistic-race window (a mutation
+        # lands first and the swap is skipped); error models the rebuild
+        # itself failing and takes the compactor's error path.
+        _fp.fire("compact.swap")
         with self._lock:
             if self.state is not st:
                 return None

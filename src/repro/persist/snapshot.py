@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.checkpoint import ckpt
 from repro.core import engine as eng
+from repro.fault import failpoints as _fp
 from repro.serving.sharded import ShardedSinnamonIndex, shard_state
 
 # Format history (older formats are refused with an explicit error in
@@ -165,6 +166,9 @@ def _reinsert_live(index, state, extra) -> int:
     and sharded↔single.  Returns wal_lsn.
     """
     rows_of = _live_rows(extra)
+    # Failpoint: a bad read of the raw VecStore rows during elastic
+    # restore — recovery must surface it, never silently re-insert junk.
+    _fp.fire("vecstore.read")
     indices = np.asarray(state.store.indices)
     values = np.asarray(state.store.values, np.float32)
     width = index.spec.max_nnz

@@ -28,6 +28,7 @@ beyond-horizon segments so the writer can resume cleanly.
 
 from __future__ import annotations
 
+import errno
 import io
 import os
 import struct
@@ -37,6 +38,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.fault import failpoints as _fp
+from repro.fault.retry import RetryPolicy, call_with_retry
 from repro.obs import metrics as obs_metrics
 
 MAGIC = 0x57414C31                       # "WAL1"
@@ -86,15 +89,31 @@ def _pack_record(lsn: int, kind: int, payload: bytes) -> bytes:
     return hdr + struct.pack("<I", crc) + payload
 
 
+#: Default fsync retry budget: a couple of quick backoffs for transient
+#: EINTR/EAGAIN/EIO (ENOSPC is never retried), bounded well under a
+#: request deadline so a genuinely broken disk still unwinds promptly.
+FSYNC_RETRY = RetryPolicy(attempts=3, base_delay_s=0.005,
+                          max_delay_s=0.05, deadline_s=0.25)
+
+
 class WalWriter:
-    """Appends records to one partition directory (one shard's log)."""
+    """Appends records to one partition directory (one shard's log).
+
+    Failpoint sites (docs/robustness.md): ``wal.write`` fires before the
+    record bytes are written (``torn`` mode writes a prefix of the record
+    then raises EIO — the torn-tail crash); ``wal.fsync`` fires inside
+    the fsync, which is retried per ``fsync_retry`` for transient errnos
+    before the append unwinds.
+    """
 
     def __init__(self, part_dir: str, *, fsync: bool = True,
-                 segment_bytes: int = 4 << 20, next_lsn: int = 0):
+                 segment_bytes: int = 4 << 20, next_lsn: int = 0,
+                 fsync_retry: Optional[RetryPolicy] = None):
         self.part_dir = part_dir
         self.fsync = fsync
         self.segment_bytes = segment_bytes
         self.next_lsn = next_lsn          # used when the caller doesn't pass one
+        self.fsync_retry = fsync_retry or FSYNC_RETRY
         os.makedirs(part_dir, exist_ok=True)
         if fsync:
             _fsync_dir(os.path.dirname(part_dir.rstrip(os.sep)) or ".")
@@ -148,11 +167,21 @@ class WalWriter:
         record = _pack_record(lsn, kind, payload)
         obs = self._obs()
         try:
+            act = _fp.fire("wal.write")
+            if act is not None and act.mode == "torn":
+                # Model a mid-write crash: a prefix of the record reaches
+                # the file, then the write "fails".  The unwind below must
+                # erase it; replay must never decode it.
+                self._f.write(record[:max(1, int(len(record) * act.arg))])
+                self._f.flush()
+                raise _fp.InjectedError(
+                    errno.EIO, "injected torn write at wal.write")
             self._f.write(record)
             self._f.flush()
             t_sync = time.perf_counter()
             if self.fsync:
-                os.fsync(self._f.fileno())
+                call_with_retry(self._do_fsync, policy=self.fsync_retry,
+                                op="wal.fsync")
                 obs._obs_fsync_ms.observe((time.perf_counter() - t_sync) * 1e3)
         except OSError:
             # Roll the partial bytes back: garbage mid-segment would hide
@@ -169,9 +198,19 @@ class WalWriter:
             counter.inc()
         return lsn
 
+    def _do_fsync(self) -> None:
+        _fp.fire("wal.fsync")
+        os.fsync(self._f.fileno())
+
     def _unwind(self, start: int) -> None:
         try:
             self._f.truncate(start)
+            # truncate() does not move the stream position, and the file is
+            # in append mode so writes still land correctly — but tell()
+            # (used for the NEXT append's unwind start and the rotation
+            # check) would stay past the new end, making a later unwind
+            # truncate short and strand garbage.  Re-sync it.
+            self._f.seek(start)
             self._f.flush()
             if self.fsync:
                 os.fsync(self._f.fileno())

@@ -15,19 +15,20 @@ Two levels (docs/serving.md):
 from repro.serving import loadgen
 from repro.serving.frontend import (
     DeadlineExceeded,
+    DeviceStuck,
     FrontendServer,
     Rejected,
     ServingFrontend,
     TenantQuota,
 )
 from repro.serving.results import QueryResult, new_trace_id
-from repro.serving.serve import HedgedServer, QueryServer
+from repro.serving.serve import QueryServer
 from repro.serving.sharded import ShardedSinnamonIndex
 
 __all__ = [
     "DeadlineExceeded",
+    "DeviceStuck",
     "FrontendServer",
-    "HedgedServer",
     "QueryResult",
     "QueryServer",
     "Rejected",

@@ -33,24 +33,42 @@ Shape discipline: every dispatch is padded to exactly
 bucket instead of one per (B, Lq) combination.  Padding rows/coordinates
 contribute exact zeros, which is why coalesced answers stay bit-identical.
 
+Resilience (docs/robustness.md):
+
+* the dispatcher is **supervised** — a crash restarts it (bounded times)
+  instead of silently wedging every future;
+* a **poisoned batch** is retried one query at a time, so only the
+  malformed query's future fails and healthy riders still get answers;
+* a **circuit breaker** over device dispatch fast-fails submits (429
+  "unavailable") while the device is persistently broken;
+* a **stuck-device watchdog** fails in-flight futures with
+  :class:`DeviceStuck` (HTTP 504) instead of hanging clients forever;
+* a **degradation ladder** driven by SLO fast-burn and queue depth
+  brownouts instead of blacking out: L1 shrinks the rerank budget, L2
+  serves sketch-only answers stamped ``degraded``, L3 sheds
+  lowest-priority tenants with 429 — with hysteresis auto-recovery.
+
 All queue/batch/latency/drop behaviour reports into the ``repro.obs``
 registry (metric catalog: docs/observability.md, "Serving front door").
 """
 
 from __future__ import annotations
 
+import inspect
 import json
 import math
 import threading
 import time
 from collections import deque
-from concurrent.futures import Future
+from concurrent.futures import Future, InvalidStateError
 from dataclasses import dataclass, field
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Dict, Optional
 
 import numpy as np
 
+from repro.fault.degrade import DegradationController, DegradeConfig
+from repro.fault.retry import CircuitBreaker
 from repro.obs import metrics as obs_metrics
 from repro.obs import recorder as obs_recorder
 from repro.obs import server as obs_server
@@ -60,6 +78,7 @@ from repro.serving.results import QueryResult
 
 __all__ = [
     "DeadlineExceeded",
+    "DeviceStuck",
     "FrontendServer",
     "Rejected",
     "ServingFrontend",
@@ -105,12 +124,28 @@ class DeadlineExceeded(RuntimeError):
         self.trace_id = trace_id     # resolves at /debug/trace/<id>
 
 
+class DeviceStuck(DeadlineExceeded):
+    """The stuck-device watchdog failed this in-flight request.
+
+    The dispatch it rode did not return within ``watchdog_timeout_s`` —
+    a stalled device, not a busy queue.  Subclasses
+    :class:`DeadlineExceeded` so every 504 path handles it unchanged;
+    ``queued_ms``/``deadline_ms`` carry (time stuck, watchdog timeout).
+    """
+
+
 @dataclass(frozen=True)
 class TenantQuota:
-    """Token-bucket quota: sustained ``rate_qps`` with ``burst`` headroom."""
+    """Token-bucket quota: sustained ``rate_qps`` with ``burst`` headroom.
+
+    ``priority`` orders tenants for L3 load shedding: when the degradation
+    ladder reaches its top level, tenants in the strictly-lowest priority
+    class are shed with 429 (higher number = more important; sheds only
+    when more than one distinct class exists)."""
 
     rate_qps: float
     burst: float = 0.0      # 0 -> defaults to max(rate_qps, 1)
+    priority: int = 0
 
     def resolved_burst(self) -> float:
         return self.burst if self.burst > 0 else max(self.rate_qps, 1.0)
@@ -200,7 +235,12 @@ class ServingFrontend:
                  quotas: Optional[Dict[str, TenantQuota]] = None,
                  default_quota: Optional[TenantQuota] = None,
                  query_pad: int = 32, registry=None,
-                 clock=time.monotonic, recorder=None):
+                 clock=time.monotonic, recorder=None,
+                 slo=None, degrade: Optional[DegradeConfig] = None,
+                 breaker: Optional[CircuitBreaker] = None,
+                 watchdog_timeout_s: Optional[float] = None,
+                 max_dispatcher_restarts: int = 3,
+                 degrade_tick_s: float = 0.25):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if queue_depth < 1:
@@ -223,11 +263,44 @@ class ServingFrontend:
         self._buckets_lock = threading.Lock()
         self._closed = False
         self._ewma_service_s = 0.0           # drain-rate estimate for 429s
+        # -- resilience state -------------------------------------------------
+        self.slo = slo               # SLOMonitor: the ladder's burn signal
+        # No config -> ladder off: overload answers stay pure backpressure
+        # unless the operator opts into brownouts.
+        self.degrade = DegradationController(
+            degrade if degrade is not None else DegradeConfig(enabled=False),
+            registry=self.registry)
+        self.breaker = breaker if breaker is not None else CircuitBreaker(
+            failure_threshold=5, reset_timeout_s=5.0, name="frontend",
+            clock=clock, registry=self.registry)
+        self.watchdog_timeout_s = watchdog_timeout_s
+        self.max_dispatcher_restarts = int(max_dispatcher_restarts)
+        self.dispatcher_restarts = 0
+        self._dispatcher_dead = False
+        self._degrade_tick_s = float(degrade_tick_s)
+        self._inflight = None        # (t0, live) while a dispatch is on-device
+        self._supports_degrade = self._probe_degrade(server)
         self._metrics_init()
-        self._dispatcher = threading.Thread(target=self._dispatch_loop,
+        self._dispatcher = threading.Thread(target=self._dispatch_supervised,
                                             name="frontend-dispatch",
                                             daemon=True)
         self._dispatcher.start()
+        self._hk_stop = threading.Event()
+        self._housekeeper = threading.Thread(target=self._housekeeping,
+                                             name="frontend-housekeeping",
+                                             daemon=True)
+        self._housekeeper.start()
+
+    @staticmethod
+    def _probe_degrade(server) -> bool:
+        """Does ``server.query_many`` accept the ``degrade`` kwarg?  Probed
+        once so stub servers in tests (and older QueryServers) keep working
+        without it."""
+        try:
+            return "degrade" in inspect.signature(
+                server.query_many).parameters
+        except (TypeError, ValueError):
+            return False
 
     # -- metrics -------------------------------------------------------------
     def _metrics_init(self):
@@ -273,6 +346,18 @@ class ServingFrontend:
             "End-to-end front-door latency (admission to response).",
             labels={"tenant": tenant})
 
+    def _m_shed(self, tenant: str):
+        return self.registry.counter(
+            "repro_frontend_shed_total",
+            "Requests shed at ladder L3 (lowest-priority tenants, 429).",
+            labels={"tenant": tenant})
+
+    def _m_degraded_queries(self, level: int):
+        return self.registry.counter(
+            "repro_frontend_degraded_queries_total",
+            "Requests answered while the degradation ladder was engaged.",
+            labels={"level": str(level)})
+
     # -- tracing -------------------------------------------------------------
     def _recorder(self):
         return self.recorder if self.recorder is not None \
@@ -303,6 +388,30 @@ class ServingFrontend:
         ctx = TraceContext(tenant=tenant)
         deadline_ms = (self.default_deadline_ms if deadline_ms is None
                        else float(deadline_ms))
+        if self._dispatcher_dead or not self.breaker.allow():
+            # Fast-fail while the device side is known-broken (breaker
+            # open, or the supervised dispatcher exhausted its restarts):
+            # a 429 with a honest retry hint beats queueing into a void.
+            retry_ms = (self.breaker.remaining_s() * 1e3
+                        if not self._dispatcher_dead
+                        else self.default_deadline_ms)
+            self._m_reject("unavailable").inc()
+            self._m_outcome(tenant, "rejected_unavailable").inc()
+            ctx.annotate(retry_after_ms=round(retry_ms, 3),
+                         breaker=self.breaker.state,
+                         dispatcher_dead=self._dispatcher_dead)
+            self._seal(ctx, "rejected_unavailable",
+                       (self._clock() - now) * 1e3)
+            raise Rejected("unavailable", retry_ms, tenant,
+                           trace_id=ctx.trace_id)
+        if self.degrade.level >= 3 and self._sheddable(tenant):
+            self._m_shed(tenant).inc()
+            self._m_reject("shed").inc()
+            self._m_outcome(tenant, "rejected_shed").inc()
+            ctx.annotate(retry_after_ms=1000.0,
+                         degrade_level=self.degrade.level)
+            self._seal(ctx, "rejected_shed", (self._clock() - now) * 1e3)
+            raise Rejected("shed", 1000.0, tenant, trace_id=ctx.trace_id)
         quota = self.quotas.get(tenant, self.default_quota)
         if quota is not None:
             with self._buckets_lock:
@@ -379,6 +488,63 @@ class ServingFrontend:
             self._m_depth.set(len(self._queue))
             return batch
 
+    def _sheddable(self, tenant: str) -> bool:
+        """L3 sheds only the strictly-lowest priority class, and only when
+        more than one class exists — uniform deployments never shed."""
+        prios = {q.priority for q in self.quotas.values()}
+        prios.add(self.default_quota.priority
+                  if self.default_quota is not None else 0)
+        if len(prios) <= 1:
+            return False
+        quota = self.quotas.get(tenant, self.default_quota)
+        return (quota.priority if quota is not None else 0) == min(prios)
+
+    @staticmethod
+    def _try_fail(future: Future, exc: BaseException) -> bool:
+        """Fail a future unless someone (watchdog vs dispatcher race) beat
+        us to it.  True when this call actually set the exception."""
+        try:
+            future.set_exception(exc)
+            return True
+        except InvalidStateError:
+            return False
+
+    def _server_query(self, qi, qv, ctx, level: int):
+        if self._supports_degrade and level > 0:
+            return self.server.query_many(qi, qv, ctx=ctx, degrade=level)
+        return self.server.query_many(qi, qv, ctx=ctx)
+
+    def _dispatch_supervised(self):
+        """Dispatcher crash supervisor: ``_dispatch_loop`` exiting cleanly
+        (close) ends the thread; anything escaping it — only a bug in the
+        loop itself can, batch failures are handled inside — restarts the
+        loop up to ``max_dispatcher_restarts`` times before declaring the
+        front door dead and failing everything still queued."""
+        while True:
+            try:
+                self._dispatch_loop()
+                return
+            except BaseException as e:                   # noqa: BLE001
+                if self._closed:
+                    return
+                self.dispatcher_restarts += 1
+                self.registry.counter(
+                    "repro_frontend_dispatcher_restarts_total",
+                    "Supervised dispatcher crash-restarts.").inc()
+                if self.dispatcher_restarts > self.max_dispatcher_restarts:
+                    self._dispatcher_dead = True
+                    with self._cv:
+                        pending = list(self._queue)
+                        self._queue.clear()
+                        self._m_depth.set(0)
+                    for p in pending:
+                        self._m_outcome(p.tenant, "error").inc()
+                        self._seal(p.ctx, "error",
+                                   (self._clock() - p.enqueued) * 1e3,
+                                   error=repr(e))
+                        self._try_fail(p.future, e)
+                    return
+
     def _dispatch_loop(self):
         while True:
             batch = self._take_batch()
@@ -411,24 +577,23 @@ class ServingFrontend:
             width = max(p.q_idx.shape[0] for p in live)
             width = max(self.query_pad,
                         -(-width // self.query_pad) * self.query_pad)
+            level = self.degrade.level
             t0 = self._clock()
             try:
                 qi, qv = _pad_batch(live, width, self.max_batch)
                 bctx.add_stage("assembly", (self._clock() - t0) * 1e3,
                                start_ms=0.0)
-                res = self.server.query_many(qi, qv, ctx=bctx)
+                self._inflight = (self._clock(), live)
+                try:
+                    res = self._server_query(qi, qv, bctx, level)
+                finally:
+                    tripped = self._inflight is None    # watchdog fired
+                    self._inflight = None
             except Exception as e:                       # noqa: BLE001
-                err = repr(e)
-                bctx.finish("error", error=err)
-                for p in live:
-                    self._m_outcome(p.tenant, "error").inc()
-                    for name, _start, dur in bctx.stages:
-                        p.ctx.add_stage(name, dur)
-                    self._seal(p.ctx, "error",
-                               (self._clock() - p.enqueued) * 1e3, error=err)
-                    p.future.set_exception(e)
-                self._record_batch(bctx, live, width)
+                self._fail_batch(bctx, live, width, e, level)
                 continue
+            if not tripped:
+                self.breaker.record_success()
             dt = self._clock() - t0
             a = 0.2        # smooth the drain-rate estimate for 429 hints
             self._ewma_service_s = (dt if self._ewma_service_s == 0
@@ -436,7 +601,12 @@ class ServingFrontend:
             done = self._clock()
             pad_frac = 1.0 - (sum(p.q_idx.shape[0] for p in live)
                               / float(self.max_batch * width))
+            if level > 0:
+                self._m_degraded_queries(level).inc(len(live))
+                bctx.annotate(degrade_level=level)
             for i, p in enumerate(live):
+                if p.future.done():
+                    continue        # watchdog already 504'd this rider
                 out = res.row(i, k=p.k, trace_id=p.ctx.trace_id)
                 self._m_outcome(p.tenant, "ok").inc()
                 lat_ms = (done - p.enqueued) * 1e3
@@ -449,12 +619,112 @@ class ServingFrontend:
                 p.ctx.annotate(batch_id=bctx.trace_id, batch_size=len(live),
                                width_bucket=width,
                                padding_fraction=round(pad_frac, 4))
+                if level > 0:
+                    p.ctx.annotate(degraded=True, degrade_level=level)
                 retained = self._seal(p.ctx, "ok", lat_ms)
                 self._m_latency(p.tenant).observe(
                     lat_ms, exemplar=p.ctx.trace_id if retained else None)
-                p.future.set_result(out)
+                try:
+                    p.future.set_result(out)
+                except InvalidStateError:
+                    pass            # lost the race to the watchdog
             bctx.finish("ok", total_ms=(self._clock() - t0) * 1e3)
             self._record_batch(bctx, live, width)
+
+    def _fail_batch(self, bctx: TraceContext, live, width: int,
+                    e: BaseException, level: int) -> None:
+        """A coalesced dispatch raised.  One malformed query must not fail
+        its healthy riders: with >1 live query each one is retried as its
+        own single-row dispatch (same padded shape, so no fresh jit
+        compile), and only the queries that still fail get the exception.
+        The breaker records a device failure only when nothing could be
+        served singly (a poisoned query is not a broken device)."""
+        err = repr(e)
+        bctx.finish("error", error=err)
+        recovered = 0
+        for i, p in enumerate(live):
+            if p.future.done():
+                continue
+            out = exc = None
+            if len(live) > 1:
+                sctx = TraceContext(tenant="batch", trace_id=new_batch_id())
+                try:
+                    qi, qv = _pad_batch([p], width, self.max_batch)
+                    res = self._server_query(qi, qv, sctx, level)
+                    sctx.finish("ok")
+                    out = res.row(0, k=p.k, trace_id=p.ctx.trace_id)
+                except Exception as se:                  # noqa: BLE001
+                    sctx.finish("error", error=repr(se))
+                    exc = se
+            else:
+                exc = e
+            for name, _start, dur in bctx.stages:
+                p.ctx.add_stage(name, dur)
+            lat_ms = (self._clock() - p.enqueued) * 1e3
+            if out is not None:
+                recovered += 1
+                self._m_outcome(p.tenant, "ok").inc()
+                p.ctx.annotate(batch_id=bctx.trace_id, retried_single=True)
+                retained = self._seal(p.ctx, "ok", lat_ms)
+                self._m_latency(p.tenant).observe(
+                    lat_ms, exemplar=p.ctx.trace_id if retained else None)
+                try:
+                    p.future.set_result(out)
+                except InvalidStateError:
+                    pass
+            else:
+                self._m_outcome(p.tenant, "error").inc()
+                self._seal(p.ctx, "error", lat_ms, error=repr(exc))
+                self._try_fail(p.future, exc)
+        if recovered:
+            self.breaker.record_success()
+        else:
+            self.breaker.record_failure()
+        self._record_batch(bctx, live, width)
+
+    # -- housekeeping: watchdog + degradation ladder -------------------------
+    def _housekeeping(self):
+        """Sidecar thread: the dispatcher blocks inside ``query_many``
+        during a device stall, so the watchdog and the ladder tick must
+        live on their own thread."""
+        last_tick = self._clock()
+        while not self._hk_stop.wait(0.05):
+            now = self._clock()
+            if self.watchdog_timeout_s is not None:
+                inflight = self._inflight
+                if inflight is not None:
+                    t0, live = inflight
+                    if now - t0 > self.watchdog_timeout_s:
+                        self._trip_watchdog(live, (now - t0) * 1e3)
+            if self.degrade.config.enabled \
+                    and now - last_tick >= self._degrade_tick_s:
+                last_tick = now
+                burn = self.slo.fast_burn() if self.slo is not None else 0.0
+                self.degrade.tick(
+                    burn=burn,
+                    queue_frac=len(self._queue) / self.queue_depth)
+
+    def _trip_watchdog(self, live, stalled_ms: float) -> None:
+        """Fail a stuck dispatch's futures with 504 instead of hanging the
+        clients; the dispatcher thread is still blocked on the device and
+        will skip every already-done future when (if) it returns."""
+        self._inflight = None       # fire at most once per dispatch
+        self.registry.counter(
+            "repro_frontend_watchdog_trips_total",
+            "Stuck-device watchdog activations (in-flight futures 504'd)."
+        ).inc()
+        self.breaker.record_failure()
+        timeout_ms = self.watchdog_timeout_s * 1e3
+        for p in live:
+            if p.future.done():
+                continue
+            exc = DeviceStuck(stalled_ms, timeout_ms,
+                              trace_id=p.ctx.trace_id)
+            if self._try_fail(p.future, exc):
+                self._m_outcome(p.tenant, "stuck").inc()
+                self._seal(p.ctx, "stuck",
+                           (self._clock() - p.enqueued) * 1e3,
+                           error=f"device stuck > {timeout_ms:.0f} ms")
 
     def _record_batch(self, bctx: TraceContext, live, width: int) -> None:
         """Retain one coalesced-dispatch record in the recorder's batch
@@ -489,7 +759,9 @@ class ServingFrontend:
                                  trace_id=p.ctx.trace_id))
                 self._m_depth.set(0)
             self._cv.notify_all()
+        self._hk_stop.set()
         self._dispatcher.join(timeout=30)
+        self._housekeeper.join(timeout=5)
 
     def __enter__(self):
         return self
@@ -510,9 +782,12 @@ class FrontendServer:
 
     * ``POST /v1/query`` — body ``{"indices": [...], "values": [...]}`` plus
       optional ``"k"``, ``"tenant"``, ``"deadline_ms"``; responds 200 with
-      ``{"ids", "scores", "k", "backend", "trace_id"}``, 429 +
-      ``Retry-After`` on admission rejection, 504 on in-queue deadline
-      expiry, 400 on malformed input.
+      ``{"ids", "scores", "k", "backend", "trace_id", "degraded"}``
+      (``degraded`` true when the answer was served under the degradation
+      ladder), 429 + ``Retry-After`` on admission rejection (reasons:
+      throttled, queue_full, unavailable — breaker open, shed — ladder
+      L3), 504 on in-queue deadline expiry or a watchdog-detected stuck
+      device, 400 on malformed input.
     * the standard observability endpoints (``/metrics``,
       ``/metrics.json``, ``/healthz``, ``/readyz``) plus any ``/debug/*``
       surfaces, mounted from ``repro.obs.server`` — one port serves both
@@ -631,7 +906,8 @@ class FrontendServer:
                     "ids": [int(i) for i in res.ids],
                     "scores": [float(s) for s in res.scores],
                     "k": res.k, "backend": res.backend,
-                    "trace_id": res.trace_id})
+                    "trace_id": res.trace_id,
+                    "degraded": bool(getattr(res, "degraded", False))})
 
             def log_message(self, fmt, *args):
                 pass    # request logging belongs to metrics, not stderr

@@ -52,6 +52,10 @@ class QueryResult:
     k: int
     backend: str
     trace_id: str
+    #: True when the answer was produced under the serving degradation
+    #: ladder (shrunken rerank budget or sketch-only scoring) — scores may
+    #: be upper bounds rather than exact inner products.
+    degraded: bool = False
 
     # -- legacy (ids, scores) tuple compatibility ---------------------------
     def __iter__(self):
@@ -79,4 +83,5 @@ class QueryResult:
         kk = self.k if k is None else min(int(k), self.k)
         return QueryResult(ids=self.ids[i, :kk], scores=self.scores[i, :kk],
                            k=kk, backend=self.backend,
-                           trace_id=trace_id or self.trace_id)
+                           trace_id=trace_id or self.trace_id,
+                           degraded=self.degraded)

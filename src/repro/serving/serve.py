@@ -1,31 +1,26 @@
 """Host-side serving drivers for the retrieval engine.
 
-* ``QueryServer`` — batched query serving over a (possibly sharded) Sinnamon
-  index with the paper's anytime budget as the latency lever.  ``query`` /
-  ``query_many`` return a typed :class:`repro.serving.results.QueryResult`
-  (ids, scores, k, backend, trace id) — the level-2 host surface over the
-  level-1 functional ``engine.search`` / ``search_batch`` (see
-  docs/serving.md).  Every query reports into a metrics registry
-  (`repro.obs`): latency/batch histograms per scoring backend, plus — on
-  sampled queries (``trace_every``) — a per-stage span breakdown
-  (admission → sketch scan → top-k merge → rerank) recorded by running the
-  same math as separate synced dispatches.  Concurrent-client admission,
-  dynamic batching and quotas live one level up, in
-  ``repro.serving.frontend``.
-* ``HedgedServer`` — straggler mitigation: the same query is issued to R
-  replica indexes and the first completed answer wins.  On real clusters the
-  replicas are distinct hosts; here they are distinct index objects and the
-  "race" is simulated by a per-replica latency model, which is exactly what
-  the tail-latency analysis needs (the compute results are identical —
-  hedging is a scheduling property, validated as such in tests/test_ft.py).
+``QueryServer`` — batched query serving over a (possibly sharded) Sinnamon
+index with the paper's anytime budget as the latency lever.  ``query`` /
+``query_many`` return a typed :class:`repro.serving.results.QueryResult`
+(ids, scores, k, backend, trace id) — the level-2 host surface over the
+level-1 functional ``engine.search`` / ``search_batch`` (see
+docs/serving.md).  Every query reports into a metrics registry
+(`repro.obs`): latency/batch histograms per scoring backend, plus — on
+sampled queries (``trace_every``) — a per-stage span breakdown
+(admission → sketch scan → top-k merge → rerank) recorded by running the
+same math as separate synced dispatches.  Concurrent-client admission,
+dynamic batching and quotas live one level up, in
+``repro.serving.frontend``; under overload the front door asks for
+degraded answers (``query_many(..., degrade=N)``: shrunken rerank budget,
+then sketch-only scoring — see docs/robustness.md).
 """
 
 from __future__ import annotations
 
 import time
-import warnings
 from functools import partial
-from typing import Optional, Sequence, Union
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +28,7 @@ import numpy as np
 
 from repro.core import engine as eng
 from repro.core.engine import SinnamonIndex
+from repro.fault import failpoints as _fp
 from repro.obs import events as obs_events
 from repro.obs import metrics as obs_metrics
 from repro.obs import recorder as obs_recorder
@@ -182,6 +178,7 @@ class QueryServer:
         try:
             with ctx.stage("device"):
                 t0 = time.perf_counter()
+                _fp.fire("device.dispatch")
                 ids, scores = self.index.search(
                     q_idx, q_val, k=self.k, kprime=self.kprime,
                     budget=self.budget, score_fn=self.score_fn,
@@ -195,7 +192,8 @@ class QueryServer:
                            backend=backend, trace_id=ctx.trace_id)
 
     def query_many(self, q_idx, q_val,
-                   ctx: Optional[TraceContext] = None) -> QueryResult:
+                   ctx: Optional[TraceContext] = None,
+                   degrade: int = 0) -> QueryResult:
         """Batched serving path: [B, Lq] queries in ONE device dispatch.
 
         Amortizes dispatch + (on a sharded index) the candidate merge across
@@ -207,6 +205,13 @@ class QueryServer:
         With a caller-provided ``ctx`` (the front door's batch context) the
         server only annotates it — the caller seals and records it; without
         one the server owns the context end to end.
+
+        ``degrade`` (the front door's ladder level): 1 shrinks the rerank
+        candidate pool to k'/4; ≥2 answers sketch-only when the index
+        supports it (scores become upper bounds).  Any degraded answer is
+        stamped ``degraded=True`` and annotated on the trace.  Each level
+        maps to one fixed jit specialization, so the ladder never causes
+        per-request recompiles.
         """
         bn = len(q_idx)
         backend = self._backend_label()
@@ -214,28 +219,47 @@ class QueryServer:
         if owns:
             ctx = TraceContext()
         trace = None
-        if self.trace_every > 0 and self.score_fn is None:
+        if self.trace_every > 0 and self.score_fn is None and degrade == 0:
             self._since_trace += 1
             if self._since_trace >= self.trace_every:
                 self._since_trace = 0
                 trace = Trace()
+        sketch_only = (degrade >= 2 and self.score_fn is None
+                       and hasattr(self.index, "search_many_sketch"))
         try:
             with ctx.stage("device"):
                 t0 = time.perf_counter()
+                _fp.fire("device.dispatch")
                 if trace is not None:
                     ids, scores = self._search_staged(q_idx, q_val, trace)
+                elif sketch_only:
+                    ids, scores = self.index.search_many_sketch(
+                        q_idx, q_val, k=self.k, budget=self.budget,
+                        backend=self.score_backend)
                 else:
+                    kprime = self.kprime
+                    if degrade >= 1:
+                        if kprime is None:
+                            kprime = max(5 * self.k, self.k)
+                        kprime = max(self.k, kprime // 4)
+                    # Rerank-bearing paths only: a stalled/broken rerank
+                    # is exactly what sketch-only degradation sidesteps.
+                    _fp.fire("device.rerank")
                     ids, scores = self.index.search_many(
-                        q_idx, q_val, k=self.k, kprime=self.kprime,
+                        q_idx, q_val, k=self.k, kprime=kprime,
                         budget=self.budget, score_fn=self.score_fn,
                         backend=self.score_backend)
                 dt_ms = (time.perf_counter() - t0) * 1e3
         except Exception as e:
             self._fail(ctx, owns, e)
             raise
+        if degrade > 0:
+            ctx.annotate(degraded=True, degrade_level=int(degrade),
+                         sketch_only=sketch_only)
         self._record(bn, dt_ms, backend, trace, ctx=ctx, owns=owns)
         return QueryResult(ids=ids, scores=scores, k=ids.shape[-1],
-                           backend=backend, trace_id=ctx.trace_id)
+                           backend=backend, trace_id=ctx.trace_id,
+                           degraded=degrade > 0)
 
     def _record(self, bn: int, dt_ms: float, backend: str,
                 trace: Optional[Trace] = None,
@@ -360,42 +384,3 @@ class QueryServer:
         for stage in QUERY_STAGES + ("spmd_search",):
             self._hist("repro_query_stage_ms", "",
                        labels={"stage": stage, "backend": backend}).reset()
-
-
-class HedgedServer:
-    """Issue each query to all replicas; take the first simulated finisher.
-
-    .. deprecated::
-        Straggler mitigation now belongs to the async front door
-        (``repro.serving.frontend``): hedging is an admission/scheduling
-        concern, and the front door owns admission.  ``HedgedServer`` keeps
-        working (and now returns :class:`QueryResult` like every serving
-        path) but will be removed once a replicated front end lands
-        (ROADMAP item 5).
-    """
-
-    def __init__(self, replicas: Sequence[QueryServer], seed: int = 0,
-                 straggler_prob: float = 0.1, straggler_mult: float = 10.0):
-        warnings.warn(
-            "HedgedServer is deprecated: use the async serving front door "
-            "(repro.serving.frontend.ServingFrontend) for tail-latency "
-            "control; see docs/serving.md", DeprecationWarning, stacklevel=2)
-        self.replicas = list(replicas)
-        self.gen = np.random.Generator(np.random.Philox(key=seed))
-        self.straggler_prob = straggler_prob
-        self.straggler_mult = straggler_mult
-        self.effective_latency_ms: list = []
-
-    def query(self, q_idx, q_val) -> QueryResult:
-        finish = []
-        answers = []
-        for rep in self.replicas:
-            res = rep.query(q_idx, q_val)
-            base = rep.last_latency_ms
-            if self.gen.random() < self.straggler_prob:
-                base *= self.straggler_mult
-            finish.append(base)
-            answers.append(res)
-        win = int(np.argmin(finish))
-        self.effective_latency_ms.append(min(finish))
-        return answers[win]

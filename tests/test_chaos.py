@@ -1,0 +1,324 @@
+"""ISSUE 9 chaos contracts: injected storage faults never lose acked writes.
+
+* Torn-write invariant, per record kind: a ``wal.write`` fault injected
+  mid-append (torn prefix, EIO, ENOSPC, fsync ENOSPC) leaves the segment
+  byte-identical to its pre-append state — no decodable partial record,
+  no torn tail — and the writer keeps appending once the fault clears.
+* Transient fsync EIO is absorbed by the retry policy: the append
+  succeeds and the record is durable.
+* Multi-shard batches stay all-or-nothing ON DISK: when the second of a
+  batch's per-shard appends fails, the first (already durable) record is
+  unappended, every partition returns to its pre-batch byte length, and
+  replay sees only whole batches (subprocess: forced 2-device host).
+* Seeded crash/recover schedules: random op streams with probabilistic
+  failpoints armed; ops that raised were never acked and must not
+  mutate the live index; recovery after the "crash" must reproduce the
+  live (acked-only) index byte-for-byte — zero acked-write loss.
+
+The same invariants run at larger scale in ``benchmarks/chaos.py``.
+"""
+
+import os
+import random
+import subprocess
+import sys
+import textwrap
+from contextlib import contextmanager
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.engine import EngineSpec
+from repro.data import synth
+from repro.fault import failpoints as fp
+from repro.obs import MetricsRegistry
+from repro.persist import wal
+from repro.persist.durable import DurableSinnamonIndex
+
+DS = synth.SparseDatasetSpec("t", n=300, psi_doc=16, psi_query=8,
+                             value_dist="gaussian")
+
+
+def _spec(capacity=96):
+    return EngineSpec(n=DS.n, m=12, capacity=capacity, max_nnz=32, h=2,
+                      seed=3, value_dtype="float32")
+
+
+def _assert_state_equal(a, b):
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), a, b)
+
+
+@contextmanager
+def _installed(reg):
+    """Make ``reg`` the process-global failpoint registry for the scope."""
+    prev = fp.set_failpoints(reg)
+    try:
+        yield reg
+    finally:
+        fp.set_failpoints(prev)
+
+
+def _partition_bytes(part_dir):
+    return {name: os.path.getsize(os.path.join(part_dir, name))
+            for name in sorted(os.listdir(part_dir))}
+
+
+def _arrays(kind):
+    """A representative payload for each WAL record kind."""
+    if kind == wal.KIND_INSERT:
+        return {"ext_ids": np.arange(4, dtype=np.int64),
+                "idx": np.full((4, 8), -1, np.int32),
+                "val": np.zeros((4, 8), np.float32)}
+    if kind == wal.KIND_INSERT_ONE:
+        return {"ext_ids": np.asarray([7], np.int64),
+                "idx": np.full((1, 8), -1, np.int32),
+                "val": np.ones((1, 8), np.float32)}
+    if kind == wal.KIND_DELETE:
+        return {"ext_ids": np.asarray([1, 2], np.int64)}
+    if kind == wal.KIND_GROW:
+        return {"capacity": np.asarray(128, np.int64)}
+    return {}                                              # KIND_COMPACT
+
+
+# ---------------------------------------------------------------------------
+# torn-write invariants, per record kind
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", sorted(wal.KIND_NAMES),
+                         ids=lambda k: wal.KIND_NAMES[k])
+def test_torn_write_never_leaves_decodable_partial(tmp_path, kind):
+    """Tear the record at several fractions — including mid-header and
+    mid-payload cuts — and require an exact byte-level rollback."""
+    w = wal.writer_for(str(tmp_path), 0)
+    w.append(kind, _arrays(kind))                          # one good record
+    part = os.path.join(str(tmp_path), wal.partition_name(0))
+    base_recs, _ = wal.scan_partition(part)
+    base_bytes = _partition_bytes(part)
+
+    for frac in (0.01, 0.3, 0.5, 0.9, 0.99):
+        reg = fp.FailpointRegistry(registry=MetricsRegistry())
+        reg.set("wal.write", "torn", arg=frac, count=1)
+        with _installed(reg):
+            with pytest.raises(OSError):
+                w.append(kind, _arrays(kind))
+        assert reg.hits("wal.write") == 1                  # fault landed
+        recs, torn = wal.scan_partition(part)
+        assert recs == base_recs                   # no new decodable record
+        assert not torn                            # no garbage tail either
+        assert _partition_bytes(part) == base_bytes    # exact byte rollback
+
+    # faults cleared: the writer resumes at the SAME lsn, no gap
+    lsn = w.append(kind, _arrays(kind))
+    recs, torn = wal.scan_partition(part)
+    assert [r[0] for r in recs] == [lsn - 1, lsn] and not torn
+    w.close()
+
+
+@pytest.mark.parametrize("site,mode", [
+    ("wal.write", "error"),        # write fails before any byte lands
+    ("wal.write", "enospc"),       # disk full at the write
+    ("wal.fsync", "enospc"),       # record fully written, then fsync ENOSPC
+])
+def test_injected_append_failure_unwinds_exactly(tmp_path, site, mode):
+    w = wal.writer_for(str(tmp_path), 0)
+    w.append(wal.KIND_INSERT, _arrays(wal.KIND_INSERT))
+    part = os.path.join(str(tmp_path), wal.partition_name(0))
+    base_recs, _ = wal.scan_partition(part)
+    base_bytes = _partition_bytes(part)
+
+    reg = fp.FailpointRegistry(registry=MetricsRegistry())
+    reg.set(site, mode, count=1)
+    with _installed(reg):
+        with pytest.raises(OSError):
+            w.append(wal.KIND_INSERT, _arrays(wal.KIND_INSERT))
+    # the fsync case is the sharp one: the record bytes DID reach the file
+    # and must be truncated away, else replay acks a write that never
+    # finished its durability barrier.
+    recs, torn = wal.scan_partition(part)
+    assert recs == base_recs and not torn
+    assert _partition_bytes(part) == base_bytes
+    assert w.append(wal.KIND_COMPACT, {}) == base_recs[-1][0] + 1
+    w.close()
+
+
+def test_transient_fsync_eio_is_retried_through(tmp_path):
+    """EIO at fsync is transient per FSYNC_RETRY: one injected failure is
+    absorbed and the append still succeeds + is decodable."""
+    w = wal.writer_for(str(tmp_path), 0)
+    reg = fp.FailpointRegistry(registry=MetricsRegistry())
+    reg.set("wal.fsync", "error", count=1)
+    with _installed(reg):
+        lsn = w.append(wal.KIND_INSERT, _arrays(wal.KIND_INSERT))
+    assert reg.hits("wal.fsync") == 1
+    part = os.path.join(str(tmp_path), wal.partition_name(0))
+    recs, torn = wal.scan_partition(part)
+    assert [r[0] for r in recs] == [lsn] and not torn
+    w.close()
+
+
+# ---------------------------------------------------------------------------
+# durable index: a failed op is not acked and must not mutate anything
+# ---------------------------------------------------------------------------
+
+def test_durable_index_fault_leaves_state_untouched(tmp_path):
+    idx, val = synth.make_corpus(3, DS, 64, pad=32)
+    live = DurableSinnamonIndex.open(_spec(), wal_dir=str(tmp_path / "wal"))
+    live.insert_many(list(range(32)), idx[:32], val[:32])
+    ids_before = dict(live._id2slot)
+    state_before = live.state
+    lsn_before = live._next_lsn
+
+    reg = fp.FailpointRegistry(registry=MetricsRegistry())
+    reg.set("wal.write", "torn", arg=0.6, count=1)
+    with _installed(reg):
+        with pytest.raises(OSError):
+            live.insert_many([100], idx[32:33], val[32:33])
+    assert live._id2slot == ids_before          # nothing applied in memory
+    assert live.state is state_before
+    assert live._next_lsn == lsn_before         # lsn not burned
+
+    # the caller's retry (fault cleared) succeeds, and recovery equals the
+    # live index: the failed attempt left no trace on disk either.
+    live.insert_many([100], idx[32:33], val[32:33])
+    rec = DurableSinnamonIndex.open(_spec(), wal_dir=str(tmp_path / "wal"))
+    assert rec._id2slot == live._id2slot
+    assert rec._free == live._free
+    _assert_state_equal(rec.state, live.state)
+
+
+# ---------------------------------------------------------------------------
+# seeded crash/recover schedules — zero acked-write loss
+# ---------------------------------------------------------------------------
+
+# Distinct sites so every hazard is armed at once; probabilities high
+# enough that every seed's schedule takes multiple hits.
+_CHAOS_SPEC = ("wal.write=torn:0.35:0.3,wal.fsync=enospc:0.15,"
+               "snapshot.write=error:0.5,snapshot.rename=error:0.5")
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_seeded_crash_recover_schedule(tmp_path, seed):
+    """Random op stream under probabilistic faults; after the crash,
+    recovery must reproduce the acked-only live index byte-for-byte."""
+    rng = random.Random(seed)
+    idx, val = synth.make_corpus(seed, DS, 200, pad=32)
+    wd, sd = str(tmp_path / "wal"), str(tmp_path / "snap")
+    live = DurableSinnamonIndex.open(_spec(), wal_dir=wd, snapshot_dir=sd)
+    acked = set()
+    next_id = 0
+    faults = 0
+
+    reg = fp.FailpointRegistry(seed=seed,
+                               registry=MetricsRegistry()).configure(
+                                   _CHAOS_SPEC)
+    with _installed(reg):
+        for _ in range(40):
+            roll = rng.random()
+            try:
+                if roll < 0.55 or not acked:
+                    k = rng.randint(1, 4)
+                    ids = list(range(next_id, next_id + k))
+                    rows = [i % 200 for i in ids]
+                    live.insert_many(ids, idx[rows], val[rows])
+                    acked.update(ids)
+                    next_id += k
+                elif roll < 0.80:
+                    e = rng.choice(sorted(acked))
+                    live.delete(e)
+                    acked.discard(e)
+                elif roll < 0.92:
+                    live.snapshot()
+                else:
+                    live.compact()
+            except OSError as e:
+                assert isinstance(e, fp.InjectedFault)   # only OUR faults
+                faults += 1
+    assert faults >= 1                      # the schedule actually injected
+
+    # "crash": abandon `live` without closing and recover from disk.
+    rec = DurableSinnamonIndex.open(_spec(), wal_dir=wd, snapshot_dir=sd)
+    assert set(rec._id2slot) == acked       # zero acked-write loss
+    assert rec._id2slot == live._id2slot
+    assert rec._free == live._free
+    _assert_state_equal(rec.state, live.state)
+
+
+# ---------------------------------------------------------------------------
+# multi-shard batches are all-or-nothing on disk
+# ---------------------------------------------------------------------------
+
+MULTI = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import numpy as np
+    from repro.core.engine import EngineSpec
+    from repro.data import synth
+    from repro.distributed import mesh as meshlib
+    from repro.fault import failpoints as fp
+    from repro.persist import wal
+    from repro.persist.durable import DurableShardedSinnamonIndex
+
+    wd = os.path.join(os.environ["CHAOS_TMP"], "wal")
+    ds = synth.SparseDatasetSpec("t", n=300, psi_doc=16, psi_query=8,
+                                 value_dist="gaussian")
+    spec = EngineSpec(n=ds.n, m=12, capacity=96, max_nnz=32, h=2, seed=3)
+    idx, val = synth.make_corpus(0, ds, 32, pad=32)
+    mesh = meshlib.make_mesh((1, 2), ("data", "model"))
+    index = DurableShardedSinnamonIndex.open(spec, mesh, wal_dir=wd)
+    index.insert_many(list(range(16)), idx[:16], val[:16])
+
+    def part_bytes():
+        return {p: sorted((s, os.path.getsize(os.path.join(wd, p, s)))
+                          for s in os.listdir(os.path.join(wd, p)))
+                for p in wal.partitions(wd)}
+
+    assert len(wal.partitions(wd)) == 2          # batch really spans shards
+    before_bytes = part_bytes()
+    before_lsns = [lsn for lsn, _, _ in wal.read_ops(wd)]
+    before_next = index._next_lsn
+    ids_before = dict(index._id2slot)
+
+    # seed 10 @ prob 0.5: first roll misses, second fires — so the batch's
+    # FIRST per-shard append (highest lsn) lands durably, then the second
+    # fails, exercising the unappend rollback of the durable record.
+    reg = fp.FailpointRegistry(seed=10)
+    reg.configure("wal.write=error:0.5")
+    fp.set_failpoints(reg)
+    try:
+        index.insert_many(list(range(16, 32)), idx[16:], val[16:])
+        raise SystemExit("expected an injected append failure")
+    except OSError:
+        pass
+    fp.set_failpoints(None)
+    assert reg.hits("wal.write") == 1, reg.hits("wal.write")
+
+    # every partition is byte-identical to its pre-batch state: the
+    # durable higher-lsn record was rolled back, not stranded.
+    assert part_bytes() == before_bytes, (part_bytes(), before_bytes)
+    assert [lsn for lsn, _, _ in wal.read_ops(wd)] == before_lsns
+    assert index._next_lsn == before_next        # batch lsns not burned
+    assert dict(index._id2slot) == ids_before    # nothing applied in memory
+
+    # retry with faults cleared; recovery then equals the live index.
+    index.insert_many(list(range(16, 32)), idx[16:], val[16:])
+    rec = DurableShardedSinnamonIndex.open(spec, mesh, wal_dir=wd)
+    assert rec._id2slot == index._id2slot
+    import jax
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), rec.state, index.state)
+    print("CHAOS_MULTI_OK")
+""")
+
+
+@pytest.mark.distributed
+def test_multi_shard_torn_batch_rolls_back(tmp_path):
+    env = dict(os.environ, PYTHONPATH="src", CHAOS_TMP=str(tmp_path))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", MULTI], env=env,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))),
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "CHAOS_MULTI_OK" in out.stdout

@@ -1,0 +1,302 @@
+"""ISSUE 9 unit contracts: the fault-injection + recovery primitives.
+
+* Failpoint spec grammar parses exactly the documented forms and rejects
+  the rest; armed sites fire deterministically under a seed, count their
+  hits, and publish ``repro_fault_injected_total``.
+* ``call_with_retry`` retries transient OSErrors with backoff under a
+  deadline budget, never retries ENOSPC, and counts retries.
+* ``CircuitBreaker`` walks closed → open → half-open → closed/open with
+  exactly one half-open probe.
+* ``DegradationController`` escalates immediately when hot, holds level
+  in-between, and de-escalates only after the dwell (hysteresis).
+
+All clocks/sleeps/randomness are injected — no wall-clock sleeps here.
+"""
+
+import errno
+import json
+
+import pytest
+
+from repro.fault import failpoints as fp
+from repro.fault.degrade import DegradationController, DegradeConfig
+from repro.fault.retry import (CircuitBreaker, RetryPolicy, call_with_retry,
+                               transient_oserror)
+from repro.obs import MetricsRegistry
+
+
+# ---------------------------------------------------------------------------
+# failpoint grammar + firing
+# ---------------------------------------------------------------------------
+
+def test_spec_grammar_parses_documented_forms():
+    reg = fp.FailpointRegistry(seed=0).configure(
+        "wal.fsync=error:0.25, snapshot.write=enospc,"
+        "wal.write=torn:0.3:0.5, device.dispatch=stall:250ms:0.1,"
+        "compact.swap=eio")
+    sites = reg.sites()
+    assert sites == {
+        "wal.fsync": "error:0:0.25",
+        "snapshot.write": "enospc:0:1",
+        "wal.write": "torn:0.3:0.5",
+        "device.dispatch": "stall:250:0.1",
+        "compact.swap": "eio:0:1",
+    }
+    assert reg.active
+    reg.clear("wal.fsync")
+    assert "wal.fsync" not in reg.sites()
+    reg.clear()
+    assert not reg.active
+
+
+@pytest.mark.parametrize("bad", [
+    "no_equals_sign",
+    "site=unknownmode",
+    "site=stall",              # stall needs a duration
+    "site=stall:250",          # ...with the ms suffix
+    "site=torn:1.5",           # torn fraction must be < 1
+    "site=error:0",            # probability must be > 0
+    "site=error:1.5",          # ...and <= 1
+    "site=error:0.5:extra",    # trailing junk
+])
+def test_spec_grammar_rejects_malformed(bad):
+    with pytest.raises(ValueError):
+        fp.FailpointRegistry().configure(bad)
+
+
+def test_fire_modes_raise_stall_and_tear():
+    sleeps = []
+    reg = fp.FailpointRegistry(seed=0, registry=MetricsRegistry(),
+                               sleep=sleeps.append)
+    reg.configure("a=error,b=enospc,c=stall:50ms,d=torn:0.25")
+    with pytest.raises(fp.InjectedError) as e:
+        reg.fire("a")
+    assert e.value.errno == errno.EIO
+    assert isinstance(e.value, OSError)          # real error paths catch it
+    assert isinstance(e.value, fp.InjectedFault)  # chaos can tell it apart
+    with pytest.raises(fp.InjectedError) as e:
+        reg.fire("b")
+    assert e.value.errno == errno.ENOSPC
+    act = reg.fire("c")
+    assert act.mode == "stall" and sleeps == [0.05]
+    act = reg.fire("d")
+    assert act.mode == "torn" and act.arg == 0.25
+    assert reg.fire("unarmed.site") is None
+    assert reg.hits("a") == reg.hits("b") == reg.hits("c") == 1
+
+
+def test_probability_is_seeded_and_deterministic():
+    def schedule(seed):
+        reg = fp.FailpointRegistry(seed=seed, registry=MetricsRegistry())
+        reg.configure("x=torn:0.5:0.3")
+        return [reg.fire("x") is not None for _ in range(64)]
+
+    a, b = schedule(7), schedule(7)
+    assert a == b                          # same seed -> same fault schedule
+    assert 0 < sum(a) < 64                 # it actually rolls dice
+    assert schedule(8) != a                # different seed -> different run
+
+
+def test_count_limits_fires_then_disarms():
+    reg = fp.FailpointRegistry(registry=MetricsRegistry())
+    reg.set("wal.fsync", "error", count=2)
+    for _ in range(2):
+        with pytest.raises(fp.InjectedError):
+            reg.fire("wal.fsync")
+    assert reg.fire("wal.fsync") is None   # auto-disarmed
+    assert reg.hits("wal.fsync") == 2
+    assert not reg.active
+
+
+def test_fires_publish_injected_total():
+    mreg = MetricsRegistry()
+    reg = fp.FailpointRegistry(registry=mreg).configure("s=torn")
+    reg.fire("s")
+    reg.fire("s")
+    snap = json.loads(mreg.to_json())
+    series = snap["repro_fault_injected_total"]["series"]
+    assert [(s["labels"]["site"], s["labels"]["mode"], s["value"])
+            for s in series] == [("s", "torn", 2)]
+
+
+def test_injected_contextmanager_scopes_the_global():
+    before = fp.get_failpoints()
+    with fp.injected("x.y=error", registry=MetricsRegistry()) as reg:
+        assert fp.get_failpoints() is reg
+        with pytest.raises(fp.InjectedError):
+            fp.fire("x.y")
+        assert fp.fire("other") is None
+    assert fp.get_failpoints() is before
+    assert fp.fire("x.y") is None          # disarmed once scope exits
+
+
+# ---------------------------------------------------------------------------
+# retry with backoff under a deadline budget
+# ---------------------------------------------------------------------------
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+        self.sleeps = []
+
+    def __call__(self):
+        return self.t
+
+    def sleep(self, d):
+        self.sleeps.append(d)
+        self.t += d
+
+
+def test_retry_recovers_from_transient_errors():
+    clk = _FakeClock()
+    mreg = MetricsRegistry()
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise OSError(errno.EIO, "transient")
+        return "ok"
+
+    out = call_with_retry(flaky, policy=RetryPolicy(attempts=3),
+                          op="t", clock=clk, sleep=clk.sleep,
+                          rand=lambda: 0.0, registry=mreg)
+    assert out == "ok" and len(calls) == 3
+    # full backoff (jitter rand=0 -> no reduction): base, base*mult
+    assert clk.sleeps == [0.01, 0.02]
+    snap = json.loads(mreg.to_json())
+    assert snap["repro_fault_retries_total"]["series"][0]["value"] == 2
+
+
+def test_retry_exhausts_attempts_and_reraises():
+    clk = _FakeClock()
+
+    def broken():
+        raise OSError(errno.EIO, "still broken")
+
+    with pytest.raises(OSError):
+        call_with_retry(broken, policy=RetryPolicy(attempts=3),
+                        clock=clk, sleep=clk.sleep, rand=lambda: 0.0,
+                        registry=MetricsRegistry())
+    assert len(clk.sleeps) == 2            # attempts-1 backoffs then raise
+
+
+def test_enospc_is_never_retried():
+    calls = []
+
+    def disk_full():
+        calls.append(1)
+        raise OSError(errno.ENOSPC, "disk full")
+
+    assert not transient_oserror(OSError(errno.ENOSPC, "x"))
+    with pytest.raises(OSError) as e:
+        call_with_retry(disk_full, policy=RetryPolicy(attempts=5),
+                        registry=MetricsRegistry())
+    assert e.value.errno == errno.ENOSPC and len(calls) == 1
+
+
+def test_retry_respects_deadline_budget():
+    clk = _FakeClock()
+
+    def slow_fail():
+        clk.t += 0.2                       # each attempt burns 200ms of work
+        raise OSError(errno.EIO, "transient")
+
+    with pytest.raises(OSError):
+        call_with_retry(slow_fail,
+                        policy=RetryPolicy(attempts=10, base_delay_s=0.5,
+                                           deadline_s=0.3),
+                        clock=clk, sleep=clk.sleep, rand=lambda: 0.0,
+                        registry=MetricsRegistry())
+    # first attempt ends at t=0.2 (0.1 left): delay clamped to the budget;
+    # second attempt ends past the deadline: re-raise with no more sleeps.
+    assert clk.sleeps == [pytest.approx(0.1)]
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker
+# ---------------------------------------------------------------------------
+
+def test_breaker_closed_open_halfopen_cycle():
+    clk = _FakeClock()
+    mreg = MetricsRegistry()
+    br = CircuitBreaker(failure_threshold=3, reset_timeout_s=10.0,
+                        name="t", clock=clk, registry=mreg)
+    assert br.state == "closed" and br.allow()
+    for _ in range(2):
+        br.record_failure()
+    assert br.state == "closed"            # below threshold
+    br.record_failure()
+    assert br.state == "open" and not br.allow()
+    assert br.remaining_s() == pytest.approx(10.0)
+    clk.t = 4.0
+    assert not br.allow() and br.remaining_s() == pytest.approx(6.0)
+    clk.t = 10.0
+    assert br.state == "half_open"
+    assert br.allow()                      # the single probe
+    assert not br.allow()                  # everyone else keeps fast-failing
+    br.record_success()
+    assert br.state == "closed" and br.allow()
+    snap = json.loads(mreg.to_json())
+    assert snap["repro_fault_breaker_open_total"]["series"][0]["value"] == 1
+    assert snap["repro_fault_breaker_state"]["series"][0]["value"] == 0.0
+
+
+def test_breaker_halfopen_failure_reopens():
+    clk = _FakeClock()
+    br = CircuitBreaker(failure_threshold=1, reset_timeout_s=5.0,
+                        clock=clk, registry=MetricsRegistry())
+    br.record_failure()
+    clk.t = 5.0
+    assert br.allow()                      # half-open probe
+    br.record_failure()                    # probe failed
+    assert br.state == "open" and not br.allow()
+    assert br.remaining_s() == pytest.approx(5.0)   # timer restarted
+    assert br.snapshot() == ("open", 2)    # both failures on record
+
+
+def test_breaker_success_resets_consecutive_count():
+    br = CircuitBreaker(failure_threshold=2, registry=MetricsRegistry())
+    br.record_failure()
+    br.record_success()
+    br.record_failure()                    # 1 consecutive, not 2
+    assert br.state == "closed"
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder hysteresis
+# ---------------------------------------------------------------------------
+
+def test_ladder_escalates_hot_holds_between_recovers_after_dwell():
+    mreg = MetricsRegistry()
+    c = DegradationController(DegradeConfig(dwell_ticks=3), registry=mreg)
+    assert c.tick(burn=5.0, queue_frac=0.0) == 1     # burn-hot escalates
+    assert c.tick(burn=0.0, queue_frac=0.9) == 2     # queue-hot escalates
+    assert c.tick(burn=2.0, queue_frac=0.5) == 2     # in-between holds
+    for i in range(2):
+        assert c.tick(burn=0.5, queue_frac=0.1) == 2  # calm, inside dwell
+    assert c.tick(burn=0.5, queue_frac=0.1) == 1     # 3rd calm tick -> down
+    # an in-between reading resets the dwell counter
+    c.tick(burn=0.5, queue_frac=0.1)
+    c.tick(burn=0.5, queue_frac=0.1)
+    assert c.tick(burn=2.0, queue_frac=0.5) == 1     # hold + reset dwell
+    for i in range(2):
+        assert c.tick(burn=0.5, queue_frac=0.1) == 1
+    assert c.tick(burn=0.5, queue_frac=0.1) == 0     # full dwell again
+    snap = json.loads(mreg.to_json())
+    trans = {s["labels"]["direction"]: s["value"] for s in
+             snap["repro_frontend_degraded_transitions_total"]["series"]}
+    assert trans == {"up": 2, "down": 2}
+    assert snap["repro_frontend_degraded_level"]["series"][0]["value"] == 0.0
+
+
+def test_ladder_clamps_at_max_level_and_disabled_is_inert():
+    c = DegradationController(DegradeConfig(max_level=3),
+                              registry=MetricsRegistry())
+    for _ in range(6):
+        c.tick(burn=100.0, queue_frac=1.0)
+    assert c.level == 3
+    off = DegradationController(DegradeConfig(enabled=False),
+                                registry=MetricsRegistry())
+    for _ in range(6):
+        assert off.tick(burn=100.0, queue_frac=1.0) == 0

@@ -1,0 +1,400 @@
+"""ISSUE 9 tentpole contracts: the front door under failure and overload.
+
+* A poisoned batch fails ONLY its own future — healthy riders are retried
+  singly and answered, and the dispatcher thread survives (the blanket
+  except-and-die regression).
+* The supervised dispatcher restarts on a loop bug, and after exhausting
+  its restart budget declares the front door dead: queued futures fail and
+  new submits fast-fail with 429 "unavailable".
+* The circuit breaker opens on persistent device failure and fast-fails
+  submits with an honest retry hint.
+* The stuck-device watchdog 504s in-flight futures with ``DeviceStuck``
+  instead of hanging clients.
+* The degradation ladder threads ``degrade=N`` to the server, stamps
+  results ``degraded``, sheds only the strictly-lowest priority class at
+  L3, and auto-recovers.
+* End to end on the real engine: L1 shrinks the rerank pool, L2 answers
+  sketch-only with Theorem 5.1 upper-bound scores.
+"""
+
+import json
+import threading
+import time
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core.engine import EngineSpec, SinnamonIndex
+from repro.data import synth
+from repro.fault.degrade import DegradeConfig
+from repro.fault.retry import CircuitBreaker
+from repro.obs import MetricsRegistry
+from repro.serving.frontend import (DeadlineExceeded, DeviceStuck,
+                                    FrontendServer, Rejected,
+                                    ServingFrontend, TenantQuota)
+from repro.serving.results import QueryResult
+from repro.serving.serve import QueryServer
+
+DS = synth.SparseDatasetSpec("fr", n=400, psi_doc=20, psi_query=10,
+                             value_dist="gaussian")
+
+POISON = 12345.0        # marker value: a malformed query the device rejects
+
+
+def _q(seed=0, nnz=8, poison=False):
+    rng = np.random.default_rng(seed)
+    qi = rng.choice(DS.n, nnz, replace=False).astype(np.int32)
+    qv = rng.random(nnz, np.float32)
+    if poison:
+        qv[0] = POISON
+    return qi, qv
+
+
+class _StubServer:
+    """Degrade-aware device stand-in: rejects poisoned rows, records the
+    ladder level of every dispatch, optional stall gate."""
+
+    def __init__(self, k=4, gate: threading.Event = None):
+        self.k = k
+        self.gate = gate
+        self.calls = []          # (batch_rows, degrade_level)
+
+    def query_many(self, qi, qv, ctx=None, degrade=0):
+        if self.gate is not None:
+            self.gate.wait()
+        self.calls.append((qi.shape[0], degrade))
+        if np.any(qv == POISON):
+            raise ValueError("malformed query rejected by device")
+        B = qi.shape[0]
+        ids = np.tile(np.arange(self.k, dtype=np.int64), (B, 1))
+        return QueryResult(ids=ids, scores=np.zeros((B, self.k), np.float32),
+                           k=self.k, backend="stub", trace_id="q-stub",
+                           degraded=degrade > 0)
+
+
+class _LoopBug(BaseException):
+    """Escapes the batch-level ``except Exception`` — models a bug in the
+    dispatch loop itself, which only the supervisor can catch."""
+
+
+class _BuggyServer(_StubServer):
+    def query_many(self, qi, qv, ctx=None, degrade=0):
+        raise _LoopBug("dispatch loop bug")
+
+
+# ---------------------------------------------------------------------------
+# poisoned batch (satellite: the blanket-except regression)
+# ---------------------------------------------------------------------------
+
+def test_poisoned_batch_fails_only_its_own_future():
+    gate = threading.Event()
+    stub = _StubServer(gate=gate)
+    reg = MetricsRegistry()
+    fe = ServingFrontend(stub, max_batch=8, batch_window_ms=5.0,
+                         queue_depth=32, registry=reg)
+    try:
+        healthy = [fe.submit(*_q(seed=s)) for s in range(3)]
+        bad = fe.submit(*_q(seed=9, poison=True))
+        gate.set()                        # release one coalesced batch
+        for f in healthy:
+            out = f.result(timeout=30)    # riders answered via single retry
+            assert out.ids.shape == (4,)
+        with pytest.raises(ValueError, match="malformed"):
+            bad.result(timeout=30)
+        # the dispatcher survived: a fresh query still gets served
+        assert fe.query(*_q(seed=5)).ids.shape == (4,)
+        assert fe.dispatcher_restarts == 0
+        assert fe._dispatcher.is_alive()
+        # a poisoned query is not a broken device: breaker stays closed
+        assert fe.breaker.state == "closed"
+    finally:
+        fe.close()
+    coalesced = max(rows for rows, _ in stub.calls)
+    assert coalesced > 1, f"batch never coalesced: {stub.calls}"
+    snap = json.loads(reg.to_json())
+    by_outcome = {}
+    for s in snap["repro_frontend_requests_total"]["series"]:
+        out = s["labels"]["outcome"]
+        by_outcome[out] = by_outcome.get(out, 0) + s["value"]
+    assert by_outcome["ok"] == 4 and by_outcome["error"] == 1
+
+
+def test_single_query_batch_fails_directly_without_retry():
+    stub = _StubServer()
+    fe = ServingFrontend(stub, max_batch=4, batch_window_ms=0.0,
+                         queue_depth=8, registry=MetricsRegistry())
+    try:
+        with pytest.raises(ValueError):
+            fe.query(*_q(poison=True))
+        assert len(stub.calls) == 1       # no pointless single-row retry
+        assert fe.query(*_q()).ids.shape == (4,)
+    finally:
+        fe.close()
+
+
+# ---------------------------------------------------------------------------
+# supervised dispatcher
+# ---------------------------------------------------------------------------
+
+def test_dispatcher_exhausts_restarts_then_fast_fails():
+    reg = MetricsRegistry()
+    fe = ServingFrontend(_BuggyServer(), max_batch=1, batch_window_ms=0.0,
+                         queue_depth=8, registry=reg,
+                         max_dispatcher_restarts=1)
+    try:
+        fe.submit(*_q(seed=0))            # crash 1: restart
+        time.sleep(0.05)
+        fe.submit(*_q(seed=1))            # crash 2: budget exhausted -> dead
+        deadline = time.time() + 5
+        while not fe._dispatcher_dead and time.time() < deadline:
+            time.sleep(0.01)
+        assert fe._dispatcher_dead
+        assert fe.dispatcher_restarts == 2
+        with pytest.raises(Rejected) as exc:
+            fe.submit(*_q(seed=2))
+        assert exc.value.reason == "unavailable"
+        assert exc.value.retry_after_ms > 0
+        snap = json.loads(reg.to_json())
+        assert snap["repro_frontend_dispatcher_restarts_total"][
+            "series"][0]["value"] == 2
+    finally:
+        fe.close()
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker fast-fail
+# ---------------------------------------------------------------------------
+
+def test_breaker_opens_on_persistent_device_failure():
+    class _Broken(_StubServer):
+        def query_many(self, qi, qv, ctx=None, degrade=0):
+            raise RuntimeError("device on fire")
+
+    reg = MetricsRegistry()
+    br = CircuitBreaker(failure_threshold=1, reset_timeout_s=60.0,
+                        name="frontend", registry=reg)
+    fe = ServingFrontend(_Broken(), max_batch=1, batch_window_ms=0.0,
+                         queue_depth=8, registry=reg, breaker=br)
+    try:
+        with pytest.raises(RuntimeError, match="on fire"):
+            fe.query(*_q())
+        assert br.state == "open"
+        with pytest.raises(Rejected) as exc:      # fast-fail, no queueing
+            fe.submit(*_q())
+        assert exc.value.reason == "unavailable"
+        assert 0 < exc.value.retry_after_ms <= 60_000
+        snap = json.loads(reg.to_json())
+        rej = {s["labels"]["reason"]: s["value"] for s in
+               snap["repro_frontend_rejected_total"]["series"]}
+        assert rej == {"unavailable": 1}
+        assert snap["repro_fault_breaker_open_total"][
+            "series"][0]["value"] == 1
+    finally:
+        fe.close()
+
+
+# ---------------------------------------------------------------------------
+# stuck-device watchdog
+# ---------------------------------------------------------------------------
+
+def test_watchdog_504s_inflight_futures_on_stall():
+    gate = threading.Event()              # never set while the query waits
+    stub = _StubServer(gate=gate)
+    reg = MetricsRegistry()
+    fe = ServingFrontend(stub, max_batch=4, batch_window_ms=0.0,
+                         queue_depth=8, registry=reg,
+                         watchdog_timeout_s=0.15)
+    try:
+        fut = fe.submit(*_q())
+        with pytest.raises(DeviceStuck) as exc:
+            fut.result(timeout=30)
+        assert isinstance(exc.value, DeadlineExceeded)   # same 504 path
+        assert exc.value.queued_ms >= 150.0              # time stuck
+        assert exc.value.deadline_ms == pytest.approx(150.0)
+        snap = json.loads(reg.to_json())
+        assert snap["repro_frontend_watchdog_trips_total"][
+            "series"][0]["value"] == 1
+        outcomes = {s["labels"]["outcome"]: s["value"] for s in
+                    snap["repro_frontend_requests_total"]["series"]}
+        assert outcomes.get("stuck") == 1
+        assert fe.breaker.snapshot()[1] >= 1             # failure recorded
+    finally:
+        gate.set()                        # unblock the dispatcher for close
+        fe.close()
+    # the dispatch eventually returned; its set_result lost the race
+    # cleanly (no InvalidStateError escaped the dispatcher).
+    assert fe.dispatcher_restarts == 0
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder through the front door
+# ---------------------------------------------------------------------------
+
+def _force_level(fe, level):
+    for _ in range(level):
+        fe.degrade.tick(burn=100.0, queue_frac=1.0)
+    assert fe.degrade.level == level
+
+
+def test_ladder_threads_degrade_level_to_server():
+    stub = _StubServer()
+    reg = MetricsRegistry()
+    fe = ServingFrontend(stub, max_batch=4, batch_window_ms=0.0,
+                         queue_depth=8, registry=reg,
+                         degrade=DegradeConfig(dwell_ticks=1),
+                         degrade_tick_s=3600.0)   # ticks only via test
+    try:
+        assert fe.query(*_q()).degraded is False
+        _force_level(fe, 2)
+        res = fe.query(*_q())
+        assert res.degraded is True
+        assert stub.calls[-1][1] == 2              # server saw the level
+        snap = json.loads(reg.to_json())
+        deg = {s["labels"]["level"]: s["value"] for s in
+               snap["repro_frontend_degraded_queries_total"]["series"]}
+        assert deg == {"2": 1}
+    finally:
+        fe.close()
+
+
+def test_l3_sheds_only_lowest_priority_class_and_recovers():
+    stub = _StubServer()
+    fe = ServingFrontend(
+        stub, max_batch=4, batch_window_ms=0.0, queue_depth=8,
+        quotas={"gold": TenantQuota(rate_qps=1e6, priority=1),
+                "bronze": TenantQuota(rate_qps=1e6, priority=0)},
+        registry=MetricsRegistry(),
+        degrade=DegradeConfig(dwell_ticks=1), degrade_tick_s=3600.0)
+    try:
+        _force_level(fe, 3)
+        with pytest.raises(Rejected) as exc:
+            fe.submit(*_q(), tenant="bronze")
+        assert exc.value.reason == "shed"
+        assert fe.query(*_q(), tenant="gold").ids.shape == (4,)   # untouched
+        # hysteresis recovery: calm ticks walk the ladder back down
+        for _ in range(3):
+            fe.degrade.tick(burn=0.0, queue_frac=0.0)
+        assert fe.degrade.level == 0
+        assert fe.query(*_q(), tenant="bronze").ids.shape == (4,)
+    finally:
+        fe.close()
+
+
+def test_uniform_priorities_never_shed():
+    stub = _StubServer()
+    fe = ServingFrontend(stub, max_batch=4, batch_window_ms=0.0,
+                         queue_depth=8, registry=MetricsRegistry(),
+                         degrade=DegradeConfig(dwell_ticks=1),
+                         degrade_tick_s=3600.0)
+    try:
+        _force_level(fe, 3)
+        # one priority class only: L3 must not black out the whole tenant
+        # population, it just keeps L2 behaviour
+        res = fe.query(*_q())
+        assert res.degraded is True
+    finally:
+        fe.close()
+
+
+def test_stub_without_degrade_kwarg_still_serves():
+    class _Legacy:
+        k = 4
+
+        def query_many(self, qi, qv, ctx=None):      # no degrade param
+            B = qi.shape[0]
+            ids = np.tile(np.arange(4, dtype=np.int64), (B, 1))
+            return QueryResult(ids=ids, scores=np.zeros((B, 4), np.float32),
+                               k=4, backend="stub", trace_id="q-stub")
+
+    fe = ServingFrontend(_Legacy(), max_batch=4, batch_window_ms=0.0,
+                         queue_depth=8, registry=MetricsRegistry(),
+                         degrade=DegradeConfig(dwell_ticks=1),
+                         degrade_tick_s=3600.0)
+    try:
+        _force_level(fe, 2)
+        assert fe.query(*_q()).ids.shape == (4,)     # served, undegraded
+    finally:
+        fe.close()
+
+
+def test_http_response_carries_degraded_flag():
+    stub = _StubServer()
+    fe = ServingFrontend(stub, max_batch=4, batch_window_ms=0.0,
+                         queue_depth=8, registry=MetricsRegistry(),
+                         degrade=DegradeConfig(dwell_ticks=1),
+                         degrade_tick_s=3600.0)
+    try:
+        with FrontendServer(fe, port=0) as door:
+            qi, qv = _q()
+            body = json.dumps({"indices": qi.tolist(),
+                               "values": qv.tolist()}).encode()
+
+            def post():
+                req = urllib.request.Request(door.url + "/v1/query",
+                                             data=body, method="POST")
+                return json.loads(urllib.request.urlopen(
+                    req, timeout=30).read())
+
+            assert post()["degraded"] is False
+            _force_level(fe, 1)
+            assert post()["degraded"] is True
+    finally:
+        fe.close()
+
+
+# ---------------------------------------------------------------------------
+# degraded answers on the real engine
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served():
+    idx, val = synth.make_corpus(0, DS, 96, pad=32)
+    qi, qv = synth.make_queries(1, DS, 8, pad=16)
+    index = SinnamonIndex(EngineSpec(n=DS.n, m=12, capacity=128, max_nnz=32,
+                                     h=2, seed=3, value_dtype="float32"))
+    index.insert_many(list(range(96)), idx, val)
+    return QueryServer(index, k=10, kprime=40), qi, qv
+
+
+def test_engine_degrade_levels(served):
+    server, qi, qv = served
+    full = server.query_many(qi, qv)
+    l1 = server.query_many(qi, qv, degrade=1)
+    l2 = server.query_many(qi, qv, degrade=2)
+    assert full.degraded is False
+    assert l1.degraded is True and l2.degraded is True
+    assert l1.ids.shape == full.ids.shape == l2.ids.shape
+    # L1 still reranks: scores are exact inner products, so the top score
+    # can only drop when the candidate pool shrinks
+    assert np.all(l1.scores[:, 0] <= full.scores[:, 0] + 1e-5)
+    # L2 is sketch-only: Theorem 5.1 makes every sketch score an upper
+    # bound, so the best sketch score dominates the best exact score
+    assert np.all(l2.scores[:, 0] >= full.scores[:, 0] - 1e-4)
+
+
+def test_engine_degraded_front_door_identity(served):
+    """A degraded front-door answer equals the same degrade level asked
+    directly — the ladder changes fidelity, never correctness."""
+    server, qi, qv = served
+    fe = ServingFrontend(server, max_batch=4, batch_window_ms=0.0,
+                         queue_depth=8, registry=MetricsRegistry(),
+                         degrade=DegradeConfig(dwell_ticks=1),
+                         degrade_tick_s=3600.0)
+    try:
+        fe.query(qi[0], qv[0])            # compile warmup
+        _force_level(fe, 2)
+        got = fe.query(qi[1], qv[1])
+    finally:
+        fe.close()
+    # reproduce the frontend's exact padded rectangle (max_batch x pad)
+    padded_i = np.full((4, 32), -1, np.int32)
+    padded_v = np.zeros((4, 32), np.float32)
+    L = qi.shape[1]
+    padded_i[0, :L], padded_v[0, :L] = qi[1], qv[1]
+    expect = server.query_many(padded_i, padded_v, degrade=2)
+    np.testing.assert_array_equal(np.asarray(got.ids),
+                                  np.asarray(expect.ids)[0])
+    np.testing.assert_array_equal(np.asarray(got.scores),
+                                  np.asarray(expect.scores)[0])
+    assert got.degraded is True
