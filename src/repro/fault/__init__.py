@@ -25,6 +25,7 @@ from repro.fault.retry import (
     CircuitOpen,
     RetryPolicy,
     call_with_retry,
+    fsync_transient,
     transient_oserror,
 )
 
@@ -38,6 +39,7 @@ __all__ = [
     "InjectedFault",
     "RetryPolicy",
     "call_with_retry",
+    "fsync_transient",
     "get_failpoints",
     "injected",
     "set_failpoints",

@@ -10,15 +10,21 @@ the budget is clamped or skipped.  Retries are observable via
 machine: after ``failure_threshold`` consecutive failures the circuit
 opens and ``allow()`` returns False (callers fast-fail) until
 ``reset_timeout_s`` elapses; then exactly one probe is let through
-(half-open) and its outcome closes or re-opens the circuit.  State is
-exported as ``repro_fault_breaker_state{name}`` (0=closed, 1=open,
-2=half-open) and each trip counts in
+(half-open) and its outcome closes or re-opens the circuit.  A probe
+whose outcome is never reported (the holder got wedged, or the probed
+request was dropped before reaching the dependency) is reclaimed after
+``probe_timeout_s`` so a lost probe cannot fast-fail everyone forever.
+State is exported as ``repro_fault_breaker_state{name}`` (0=closed,
+1=open, 2=half-open) and each trip counts in
 ``repro_fault_breaker_open_total{name}``.
 
-Adopters in this repo: ``WalWriter`` retries transient fsync errors
-before unwinding; ``BackgroundCompactor`` circuit-breaks instead of
-hot-looping on persistent errors; ``ServingFrontend`` fast-fails
-submits while its dispatch breaker is open.  Semantics are documented
+Adopters in this repo: ``WalWriter`` retries interrupted fsyncs
+(:func:`fsync_transient`: EINTR/EAGAIN only — an fsync EIO is fatal,
+see the fsyncgate note there); ``BackgroundCompactor`` circuit-breaks
+instead of hot-looping on persistent errors; ``ServingFrontend``
+fast-fails submits while its dispatch breaker is open and consumes the
+half-open probe at *dispatch* time, so an admission-rejected or
+queue-expired request can never strand it.  Semantics are documented
 in docs/robustness.md.
 """
 
@@ -37,6 +43,7 @@ __all__ = [
     "CircuitOpen",
     "RetryPolicy",
     "call_with_retry",
+    "fsync_transient",
     "transient_oserror",
 ]
 
@@ -44,11 +51,26 @@ __all__ = [
 #: ENOSPC is deliberately absent — a full disk does not heal on retry.
 _TRANSIENT_ERRNOS = (errno.EINTR, errno.EAGAIN, errno.EIO)
 
+#: errnos safe to retry at a durability barrier: pure interruptions only.
+_FSYNC_TRANSIENT_ERRNOS = (errno.EINTR, errno.EAGAIN)
+
 
 def transient_oserror(exc: BaseException) -> bool:
     """Default ``should_retry`` for filesystem ops: retry EINTR/EAGAIN/EIO,
     never ENOSPC or non-OSErrors."""
     return isinstance(exc, OSError) and exc.errno in _TRANSIENT_ERRNOS
+
+
+def fsync_transient(exc: BaseException) -> bool:
+    """``should_retry`` for fsync call sites: EINTR/EAGAIN only.
+
+    EIO is deliberately NOT retried here (fsyncgate): on Linux a failed
+    fsync clears the kernel error state and marks the dirty pages clean,
+    so a retried fsync can report success without the bytes ever reaching
+    the disk.  A durability barrier that fails with EIO must be treated
+    as fatal for the write it was meant to persist.
+    """
+    return isinstance(exc, OSError) and exc.errno in _FSYNC_TRANSIENT_ERRNOS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,11 +168,18 @@ class CircuitBreaker:
     """
 
     def __init__(self, *, failure_threshold: int = 5,
-                 reset_timeout_s: float = 30.0, name: str = "breaker",
+                 reset_timeout_s: float = 30.0,
+                 probe_timeout_s: Optional[float] = None,
+                 name: str = "breaker",
                  clock: Callable[[], float] = time.monotonic,
                  registry=None):
         self.failure_threshold = int(failure_threshold)
         self.reset_timeout_s = float(reset_timeout_s)
+        # How long a half-open probe may stay unreported before its token
+        # is reclaimed (a holder that dies without calling record_* must
+        # not wedge the breaker).  Defaults to the reset timeout.
+        self.probe_timeout_s = (self.reset_timeout_s if probe_timeout_s
+                                is None else float(probe_timeout_s))
         self.name = name
         self._clock = clock
         self._registry = registry
@@ -159,6 +188,7 @@ class CircuitBreaker:
         self._state = "closed"
         self._opened_at = 0.0
         self._probing = False
+        self._probe_started = 0.0
         self._publish()
 
     def _reg(self):
@@ -183,6 +213,13 @@ class CircuitBreaker:
             self._state = "half_open"
             self._probing = False
             self._publish()
+        # Reclaim a stale probe: if the holder never reported an outcome
+        # (wedged, crashed, or the probed request was dropped upstream),
+        # the next caller gets a fresh probe instead of everyone
+        # fast-failing forever.
+        if self._state == "half_open" and self._probing and \
+                self._clock() - self._probe_started >= self.probe_timeout_s:
+            self._probing = False
 
     def allow(self) -> bool:
         """True if a call may proceed.  While half-open, exactly one
@@ -193,6 +230,7 @@ class CircuitBreaker:
                 return True
             if self._state == "half_open" and not self._probing:
                 self._probing = True
+                self._probe_started = self._clock()
                 return True
             return False
 

@@ -39,7 +39,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.fault import failpoints as _fp
-from repro.fault.retry import RetryPolicy, call_with_retry
+from repro.fault.retry import RetryPolicy, call_with_retry, fsync_transient
 from repro.obs import metrics as obs_metrics
 
 MAGIC = 0x57414C31                       # "WAL1"
@@ -89,9 +89,12 @@ def _pack_record(lsn: int, kind: int, payload: bytes) -> bytes:
     return hdr + struct.pack("<I", crc) + payload
 
 
-#: Default fsync retry budget: a couple of quick backoffs for transient
-#: EINTR/EAGAIN/EIO (ENOSPC is never retried), bounded well under a
-#: request deadline so a genuinely broken disk still unwinds promptly.
+#: Default fsync retry budget: a couple of quick backoffs for pure
+#: interruptions (EINTR/EAGAIN — see ``fsync_transient``), bounded well
+#: under a request deadline.  EIO and ENOSPC are never retried at the
+#: durability barrier: after a failed fsync the kernel may have marked
+#: the dirty pages clean (fsyncgate), so a retried "success" proves
+#: nothing about the bytes on disk — the append unwinds instead.
 FSYNC_RETRY = RetryPolicy(attempts=3, base_delay_s=0.005,
                           max_delay_s=0.05, deadline_s=0.25)
 
@@ -102,8 +105,10 @@ class WalWriter:
     Failpoint sites (docs/robustness.md): ``wal.write`` fires before the
     record bytes are written (``torn`` mode writes a prefix of the record
     then raises EIO — the torn-tail crash); ``wal.fsync`` fires inside
-    the fsync, which is retried per ``fsync_retry`` for transient errnos
-    before the append unwinds.
+    the fsync, which is retried per ``fsync_retry`` for interruptions
+    (EINTR/EAGAIN) only — an fsync EIO/ENOSPC is fatal: the append
+    unwinds and the segment is abandoned (fsyncgate: a post-failure
+    fsync on the same fd can report durability that never happened).
     """
 
     def __init__(self, part_dir: str, *, fsync: bool = True,
@@ -178,17 +183,35 @@ class WalWriter:
                     errno.EIO, "injected torn write at wal.write")
             self._f.write(record)
             self._f.flush()
-            t_sync = time.perf_counter()
-            if self.fsync:
-                call_with_retry(self._do_fsync, policy=self.fsync_retry,
-                                op="wal.fsync")
-                obs._obs_fsync_ms.observe((time.perf_counter() - t_sync) * 1e3)
         except OSError:
             # Roll the partial bytes back: garbage mid-segment would hide
             # every later acknowledged record in this segment from replay.
             obs._obs_errors.inc()
             self._unwind(start)
             raise
+        if self.fsync:
+            t_sync = time.perf_counter()
+            try:
+                call_with_retry(self._do_fsync, policy=self.fsync_retry,
+                                should_retry=fsync_transient,
+                                op="wal.fsync")
+            except OSError:
+                # The durability barrier itself failed.  fsyncgate: the
+                # kernel may now consider the dirty pages clean, so neither
+                # a retried fsync nor any later one on this fd can be
+                # trusted to have persisted the record.  Unwind the bytes
+                # and abandon the segment — the next append lands on a
+                # fresh file whose first fsync tells the truth.
+                obs._obs_errors.inc()
+                self._unwind(start)
+                if self._f is not None:
+                    try:
+                        self._f.close()
+                    except OSError:
+                        pass
+                    self._f = None
+                raise
+            obs._obs_fsync_ms.observe((time.perf_counter() - t_sync) * 1e3)
         self.next_lsn = lsn + 1
         self._last_append = start
         obs._obs_append_ms.observe((time.perf_counter() - t0) * 1e3)

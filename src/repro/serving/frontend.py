@@ -40,7 +40,9 @@ Resilience (docs/robustness.md):
 * a **poisoned batch** is retried one query at a time, so only the
   malformed query's future fails and healthy riders still get answers;
 * a **circuit breaker** over device dispatch fast-fails submits (429
-  "unavailable") while the device is persistently broken;
+  "unavailable") while the device is persistently broken; the half-open
+  probe token is consumed by the dispatcher at dispatch time (never at
+  admission), so a throttled/queue-full/expired request cannot strand it;
 * a **stuck-device watchdog** fails in-flight futures with
   :class:`DeviceStuck` (HTTP 504) instead of hanging clients forever;
 * a **degradation ladder** driven by SLO fast-burn and queue depth
@@ -279,6 +281,8 @@ class ServingFrontend:
         self._dispatcher_dead = False
         self._degrade_tick_s = float(degrade_tick_s)
         self._inflight = None        # (t0, live) while a dispatch is on-device
+        self._inflight_lock = threading.Lock()   # dispatcher/watchdog CAS
+        self._live_batch = None      # batch the dispatch loop is holding
         self._supports_degrade = self._probe_degrade(server)
         self._metrics_init()
         self._dispatcher = threading.Thread(target=self._dispatch_supervised,
@@ -388,10 +392,14 @@ class ServingFrontend:
         ctx = TraceContext(tenant=tenant)
         deadline_ms = (self.default_deadline_ms if deadline_ms is None
                        else float(deadline_ms))
-        if self._dispatcher_dead or not self.breaker.allow():
+        if self._dispatcher_dead or self.breaker.state == "open":
             # Fast-fail while the device side is known-broken (breaker
             # open, or the supervised dispatcher exhausted its restarts):
             # a 429 with a honest retry hint beats queueing into a void.
+            # Deliberately a state CHECK, not allow(): the half-open probe
+            # token is consumed by the dispatcher at dispatch time, so a
+            # request that is throttled, queue-full, or expires in queue
+            # can never strand the probe and wedge the breaker.
             retry_ms = (self.breaker.remaining_s() * 1e3
                         if not self._dispatcher_dead
                         else self.default_deadline_ms)
@@ -525,6 +533,19 @@ class ServingFrontend:
                 self._dispatch_loop()
                 return
             except BaseException as e:                   # noqa: BLE001
+                # Whatever crashed the loop, the batch it was holding must
+                # not leak: query() blocks on these futures with no timeout,
+                # so an unfailed future is a client hung forever — exactly
+                # the wedge this supervisor exists to prevent.
+                batch, self._live_batch = self._live_batch, None
+                for p in (batch or ()):
+                    if p.future.done():
+                        continue
+                    self._m_outcome(p.tenant, "error").inc()
+                    self._seal(p.ctx, "error",
+                               (self._clock() - p.enqueued) * 1e3,
+                               error=repr(e))
+                    self._try_fail(p.future, e)
                 if self._closed:
                     return
                 self.dispatcher_restarts += 1
@@ -552,6 +573,7 @@ class ServingFrontend:
                 if self._closed:
                     return
                 continue
+            self._live_batch = batch    # supervisor fails these on a crash
             now = self._clock()
             live = []
             for p in batch:
@@ -568,6 +590,17 @@ class ServingFrontend:
                 else:
                     live.append(p)
             if not live:
+                self._live_batch = None
+                continue
+            if not self.breaker.allow():
+                # The breaker opened after these requests were admitted
+                # (or the half-open probe dispatch is already in flight):
+                # fast-fail instead of burning a known-broken device.  The
+                # probe token is consumed HERE, by an actual dispatch whose
+                # outcome is always recorded below — never by a request
+                # that might be rejected or expire before reaching us.
+                self._fail_unavailable(live)
+                self._live_batch = None
                 continue
             self._m_wait.observe(
                 (now - min(p.enqueued for p in live)) * 1e3)
@@ -583,14 +616,21 @@ class ServingFrontend:
                 qi, qv = _pad_batch(live, width, self.max_batch)
                 bctx.add_stage("assembly", (self._clock() - t0) * 1e3,
                                start_ms=0.0)
-                self._inflight = (self._clock(), live)
+                inflight = (self._clock(), live)
+                with self._inflight_lock:
+                    self._inflight = inflight
                 try:
                     res = self._server_query(qi, qv, bctx, level)
                 finally:
-                    tripped = self._inflight is None    # watchdog fired
-                    self._inflight = None
+                    with self._inflight_lock:
+                        # Identity compare: the watchdog clears exactly the
+                        # tuple it tripped on, so a trip can never be
+                        # mistaken for (or clobber) a different dispatch.
+                        tripped = self._inflight is not inflight
+                        self._inflight = None
             except Exception as e:                       # noqa: BLE001
                 self._fail_batch(bctx, live, width, e, level)
+                self._live_batch = None
                 continue
             if not tripped:
                 self.breaker.record_success()
@@ -630,6 +670,25 @@ class ServingFrontend:
                     pass            # lost the race to the watchdog
             bctx.finish("ok", total_ms=(self._clock() - t0) * 1e3)
             self._record_batch(bctx, live, width)
+            self._live_batch = None
+
+    def _fail_unavailable(self, live) -> None:
+        """Fast-fail already-admitted requests while the breaker is open:
+        the same 429 "unavailable" answer :meth:`submit` gives new traffic,
+        minus the admission work."""
+        retry_ms = (self.breaker.remaining_s() * 1e3
+                    or self.default_deadline_ms)
+        for p in live:
+            if p.future.done():
+                continue
+            self._m_reject("unavailable").inc()
+            self._m_outcome(p.tenant, "rejected_unavailable").inc()
+            p.ctx.annotate(retry_after_ms=round(retry_ms, 3),
+                           breaker=self.breaker.state)
+            self._seal(p.ctx, "rejected_unavailable",
+                       (self._clock() - p.enqueued) * 1e3)
+            self._try_fail(p.future, Rejected(
+                "unavailable", retry_ms, p.tenant, trace_id=p.ctx.trace_id))
 
     def _fail_batch(self, bctx: TraceContext, live, width: int,
                     e: BaseException, level: int) -> None:
@@ -686,29 +745,48 @@ class ServingFrontend:
     def _housekeeping(self):
         """Sidecar thread: the dispatcher blocks inside ``query_many``
         during a device stall, so the watchdog and the ladder tick must
-        live on their own thread."""
+        live on their own thread.  The body is exception-guarded: a bug in
+        the SLO signal or a metrics call must not silently kill the
+        watchdog and the ladder, so failures are counted and the loop
+        keeps running."""
         last_tick = self._clock()
         while not self._hk_stop.wait(0.05):
-            now = self._clock()
-            if self.watchdog_timeout_s is not None:
-                inflight = self._inflight
-                if inflight is not None:
-                    t0, live = inflight
-                    if now - t0 > self.watchdog_timeout_s:
-                        self._trip_watchdog(live, (now - t0) * 1e3)
-            if self.degrade.config.enabled \
-                    and now - last_tick >= self._degrade_tick_s:
-                last_tick = now
-                burn = self.slo.fast_burn() if self.slo is not None else 0.0
-                self.degrade.tick(
-                    burn=burn,
-                    queue_frac=len(self._queue) / self.queue_depth)
+            try:
+                now = self._clock()
+                if self.watchdog_timeout_s is not None:
+                    inflight = self._inflight
+                    if inflight is not None:
+                        t0, _live = inflight
+                        if now - t0 > self.watchdog_timeout_s:
+                            self._trip_watchdog(inflight, (now - t0) * 1e3)
+                if self.degrade.config.enabled \
+                        and now - last_tick >= self._degrade_tick_s:
+                    last_tick = now
+                    burn = (self.slo.fast_burn() if self.slo is not None
+                            else 0.0)
+                    self.degrade.tick(
+                        burn=burn,
+                        queue_frac=len(self._queue) / self.queue_depth)
+            except Exception:                            # noqa: BLE001
+                self.registry.counter(
+                    "repro_frontend_housekeeping_errors_total",
+                    "Exceptions swallowed by the housekeeping loop "
+                    "(watchdog + degradation ladder kept alive).").inc()
 
-    def _trip_watchdog(self, live, stalled_ms: float) -> None:
+    def _trip_watchdog(self, inflight, stalled_ms: float) -> None:
         """Fail a stuck dispatch's futures with 504 instead of hanging the
         clients; the dispatcher thread is still blocked on the device and
-        will skip every already-done future when (if) it returns."""
-        self._inflight = None       # fire at most once per dispatch
+        will skip every already-done future when (if) it returns.
+        Compare-and-clear on the exact snapshot: if the stalled dispatch
+        returned (and the dispatcher possibly started the next one)
+        between the housekeeping check and this call, the trip is a no-op
+        instead of 504'ing a healthy dispatch and mis-recording a breaker
+        failure for one that completed."""
+        _t0, live = inflight
+        with self._inflight_lock:
+            if self._inflight is not inflight:
+                return              # the stalled dispatch already returned
+            self._inflight = None   # fire at most once per dispatch
         self.registry.counter(
             "repro_frontend_watchdog_trips_total",
             "Stuck-device watchdog activations (in-flight futures 504'd)."

@@ -4,8 +4,9 @@
   mid-append (torn prefix, EIO, ENOSPC, fsync ENOSPC) leaves the segment
   byte-identical to its pre-append state — no decodable partial record,
   no torn tail — and the writer keeps appending once the fault clears.
-* Transient fsync EIO is absorbed by the retry policy: the append
-  succeeds and the record is durable.
+* EIO at the fsync barrier is fatal, never retried (fsyncgate: a failed
+  fsync can mark dirty pages clean, so a retried "success" proves
+  nothing): the append unwinds exactly and the segment is abandoned.
 * Multi-shard batches stay all-or-nothing ON DISK: when the second of a
   batch's per-shard appends fails, the first (already durable) record is
   unappended, every partition returns to its pre-batch byte length, and
@@ -143,18 +144,35 @@ def test_injected_append_failure_unwinds_exactly(tmp_path, site, mode):
     w.close()
 
 
-def test_transient_fsync_eio_is_retried_through(tmp_path):
-    """EIO at fsync is transient per FSYNC_RETRY: one injected failure is
-    absorbed and the append still succeeds + is decodable."""
+def test_fsync_eio_is_fatal_not_retried(tmp_path):
+    """EIO at the fsync barrier is fatal (fsyncgate: on Linux a failed
+    fsync clears the error and marks dirty pages clean, so a retried
+    fsync can "succeed" without the bytes being durable): the append must
+    unwind exactly, never be acked, and never be retried — then resume
+    cleanly on a fresh segment once the fault clears."""
     w = wal.writer_for(str(tmp_path), 0)
-    reg = fp.FailpointRegistry(registry=MetricsRegistry())
-    reg.set("wal.fsync", "error", count=1)
-    with _installed(reg):
-        lsn = w.append(wal.KIND_INSERT, _arrays(wal.KIND_INSERT))
-    assert reg.hits("wal.fsync") == 1
+    w.append(wal.KIND_INSERT, _arrays(wal.KIND_INSERT))
     part = os.path.join(str(tmp_path), wal.partition_name(0))
+    base_recs, _ = wal.scan_partition(part)
+    base_bytes = _partition_bytes(part)
+
+    reg = fp.FailpointRegistry(registry=MetricsRegistry())
+    reg.set("wal.fsync", "error", count=3)     # would survive any retries
+    with _installed(reg):
+        with pytest.raises(OSError):
+            w.append(wal.KIND_INSERT, _arrays(wal.KIND_INSERT))
+    assert reg.hits("wal.fsync") == 1          # fired once: NO retry
     recs, torn = wal.scan_partition(part)
-    assert [r[0] for r in recs] == [lsn] and not torn
+    assert recs == base_recs and not torn      # unwound, never acked
+    assert _partition_bytes(part) == base_bytes
+
+    # fault cleared: the writer resumes at the SAME lsn on a fresh segment
+    # (the suspect fd was abandoned), and replay sees a gap-free stream.
+    lsn = w.append(wal.KIND_INSERT, _arrays(wal.KIND_INSERT))
+    assert lsn == base_recs[-1][0] + 1
+    recs, torn = wal.scan_partition(part)
+    assert [r[0] for r in recs] == [lsn - 1, lsn] and not torn
+    assert len(wal._segments(part)) == 2       # abandoned + fresh segment
     w.close()
 
 

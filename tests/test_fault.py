@@ -21,7 +21,7 @@ import pytest
 from repro.fault import failpoints as fp
 from repro.fault.degrade import DegradationController, DegradeConfig
 from repro.fault.retry import (CircuitBreaker, RetryPolicy, call_with_retry,
-                               transient_oserror)
+                               fsync_transient, transient_oserror)
 from repro.obs import MetricsRegistry
 
 
@@ -195,6 +195,29 @@ def test_enospc_is_never_retried():
     assert e.value.errno == errno.ENOSPC and len(calls) == 1
 
 
+def test_fsync_transient_retries_interruptions_only():
+    """At a durability barrier only pure interruptions are retryable;
+    EIO is fatal (fsyncgate: a failed fsync may mark dirty pages clean,
+    so a retried "success" proves nothing)."""
+    assert fsync_transient(OSError(errno.EINTR, "interrupted"))
+    assert fsync_transient(OSError(errno.EAGAIN, "again"))
+    assert not fsync_transient(OSError(errno.EIO, "io error"))
+    assert not fsync_transient(OSError(errno.ENOSPC, "disk full"))
+    assert not fsync_transient(ValueError("not an OSError"))
+
+    calls = []
+
+    def eio_fsync():
+        calls.append(1)
+        raise OSError(errno.EIO, "lost page writeback")
+
+    with pytest.raises(OSError) as e:
+        call_with_retry(eio_fsync, policy=RetryPolicy(attempts=5),
+                        should_retry=fsync_transient,
+                        registry=MetricsRegistry())
+    assert e.value.errno == errno.EIO and len(calls) == 1
+
+
 def test_retry_respects_deadline_budget():
     clk = _FakeClock()
 
@@ -253,6 +276,26 @@ def test_breaker_halfopen_failure_reopens():
     assert br.state == "open" and not br.allow()
     assert br.remaining_s() == pytest.approx(5.0)   # timer restarted
     assert br.snapshot() == ("open", 2)    # both failures on record
+
+
+def test_breaker_stale_halfopen_probe_is_reclaimed():
+    """A probe holder that never reports an outcome (wedged, or the probed
+    request was dropped upstream) must not wedge the breaker: after
+    ``probe_timeout_s`` the token is reclaimed for the next caller."""
+    clk = _FakeClock()
+    br = CircuitBreaker(failure_threshold=1, reset_timeout_s=5.0,
+                        probe_timeout_s=2.0, clock=clk,
+                        registry=MetricsRegistry())
+    br.record_failure()
+    clk.t = 5.0
+    assert br.allow()                      # probe granted at t=5...
+    assert not br.allow()                  # ...and held
+    clk.t = 6.9
+    assert not br.allow()                  # still within the probe window
+    clk.t = 7.0                            # holder never reported: reclaim
+    assert br.allow()
+    br.record_success()
+    assert br.state == "closed"
 
 
 def test_breaker_success_resets_consecutive_count():

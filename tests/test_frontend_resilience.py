@@ -194,6 +194,142 @@ def test_breaker_opens_on_persistent_device_failure():
         fe.close()
 
 
+def test_halfopen_probe_survives_admission_and_expiry():
+    """Regression: the half-open probe token must be consumed at dispatch
+    time, not admission.  Under the old code a request that expired in
+    queue (or was throttled/queue-full) consumed the probe in submit()
+    and never reported an outcome, wedging the breaker into 429
+    "unavailable" forever even after the device recovered."""
+
+    class _FailOnce(_StubServer):
+        def __init__(self, **kw):
+            super().__init__(**kw)
+            self.fail_next = True
+
+        def query_many(self, qi, qv, ctx=None, degrade=0):
+            if self.fail_next:
+                self.fail_next = False
+                raise RuntimeError("transient device fault")
+            return super().query_many(qi, qv, ctx=ctx, degrade=degrade)
+
+    reg = MetricsRegistry()
+    br = CircuitBreaker(failure_threshold=1, reset_timeout_s=0.05,
+                        name="frontend", registry=reg)
+    fe = ServingFrontend(_FailOnce(), max_batch=1, batch_window_ms=0.0,
+                         queue_depth=8, registry=reg, breaker=br)
+    try:
+        with pytest.raises(RuntimeError, match="transient"):
+            fe.query(*_q())
+        assert br.state == "open"
+        time.sleep(0.08)                   # reset elapsed -> half-open
+        # a request that expires in-queue must not strand the probe
+        fut = fe.submit(*_q(), deadline_ms=0.0)
+        with pytest.raises(DeadlineExceeded):
+            fut.result(timeout=30)
+        # the device healed: the next real dispatch IS the probe, and its
+        # recorded success closes the breaker
+        assert fe.query(*_q()).ids.shape == (4,)
+        assert br.state == "closed"
+    finally:
+        fe.close()
+
+
+def test_queued_requests_fast_fail_when_breaker_opens():
+    """Requests admitted before the breaker opened are 429'd by the
+    dispatcher instead of being burned on a known-broken device."""
+
+    class _GatedBroken(_StubServer):
+        def query_many(self, qi, qv, ctx=None, degrade=0):
+            if self.gate is not None:
+                self.gate.wait()
+            raise RuntimeError("device on fire")
+
+    gate = threading.Event()
+    reg = MetricsRegistry()
+    br = CircuitBreaker(failure_threshold=1, reset_timeout_s=60.0,
+                        name="frontend", registry=reg)
+    fe = ServingFrontend(_GatedBroken(gate=gate), max_batch=1,
+                         batch_window_ms=0.0, queue_depth=8,
+                         registry=reg, breaker=br)
+    try:
+        futs = [fe.submit(*_q(seed=s)) for s in range(3)]
+        gate.set()             # first dispatch fails -> breaker opens
+        with pytest.raises(RuntimeError, match="on fire"):
+            futs[0].result(timeout=30)
+        for f in futs[1:]:     # already-queued riders fast-fail
+            with pytest.raises(Rejected) as exc:
+                f.result(timeout=30)
+            assert exc.value.reason == "unavailable"
+            assert exc.value.retry_after_ms > 0
+    finally:
+        fe.close()
+
+
+def test_loop_crash_fails_inflight_batch_futures():
+    """Regression: a crash in the post-dispatch path (outside the batch
+    try/except) restarts the loop via the supervisor — but the popped
+    batch's futures must fail with the escaping error, not hang clients
+    blocked in query() forever."""
+
+    class _BadRow:
+        def row(self, i, k=None, trace_id=None):
+            raise RuntimeError("post-dispatch result decode bug")
+
+    class _BadRowOnce(_StubServer):
+        def __init__(self, **kw):
+            super().__init__(**kw)
+            self.poisoned = True
+
+        def query_many(self, qi, qv, ctx=None, degrade=0):
+            if self.poisoned:
+                self.poisoned = False
+                return _BadRow()
+            return super().query_many(qi, qv, ctx=ctx, degrade=degrade)
+
+    reg = MetricsRegistry()
+    fe = ServingFrontend(_BadRowOnce(), max_batch=4, batch_window_ms=0.0,
+                         queue_depth=8, registry=reg)
+    try:
+        fut = fe.submit(*_q())
+        with pytest.raises(RuntimeError, match="decode bug"):
+            fut.result(timeout=30)         # fails fast instead of hanging
+        assert fe.query(*_q()).ids.shape == (4,)   # restarted loop serves
+        assert fe.dispatcher_restarts == 1
+        assert fe._dispatcher.is_alive()
+    finally:
+        fe.close()
+
+
+def test_housekeeping_survives_slo_exception():
+    """A bug in the SLO signal must not silently kill the housekeeping
+    thread (it carries the watchdog AND the ladder): the exception is
+    counted and the loop keeps ticking."""
+
+    class _BurningSLO:
+        def fast_burn(self):
+            raise KeyError("windows")
+
+    reg = MetricsRegistry()
+    fe = ServingFrontend(_StubServer(), max_batch=4, batch_window_ms=0.0,
+                         queue_depth=8, registry=reg, slo=_BurningSLO(),
+                         degrade=DegradeConfig(dwell_ticks=1),
+                         degrade_tick_s=0.01)
+    try:
+        def errors():
+            snap = json.loads(reg.to_json())
+            fam = snap.get("repro_frontend_housekeeping_errors_total")
+            return fam["series"][0]["value"] if fam else 0
+
+        deadline = time.time() + 5
+        while errors() < 2 and time.time() < deadline:
+            time.sleep(0.01)
+        assert errors() >= 2               # kept ticking after the first
+        assert fe._housekeeper.is_alive()
+        assert fe.query(*_q()).ids.shape == (4,)
+    finally:
+        fe.close()
+
+
 # ---------------------------------------------------------------------------
 # stuck-device watchdog
 # ---------------------------------------------------------------------------
