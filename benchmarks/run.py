@@ -36,12 +36,12 @@ def _git_sha() -> str:
 
 def main() -> None:
     from benchmarks import (chaos, obs_overhead, paper, persist, query_path,
-                            recall, serving, streaming)
+                            recall, serving, streaming, tiering)
 
     args = parse_args()
     fns = [fn for fn in paper.ALL + streaming.ALL + persist.ALL
            + query_path.ALL + recall.ALL + obs_overhead.ALL + serving.ALL
-           + chaos.ALL
+           + chaos.ALL + tiering.ALL
            if not args.only or args.only in fn.__name__]
     if not fns:
         print(f"no benchmark matches {args.only!r}", file=sys.stderr)

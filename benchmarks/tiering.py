@@ -1,0 +1,177 @@
+"""Hot/cold tiered-store benchmark (the ISSUE 10 acceptance gate).
+
+One entry, emitted as ``run.py`` rows (``--json`` writes BENCH_tiering.json):
+
+* ``tiering_serving`` — serves a clustered corpus whose raw rows are >= 4x
+  the device budget from a :class:`TieredSinnamonIndex` and from the
+  resident baseline, driving both with the SAME zipf-hot query stream
+  (queries concentrate on a few hot chunks, the realistic regime tiering
+  is built for).  Reports and gates:
+
+  - **bit identity** — tiered ids AND scores match the resident index
+    exactly on spot-check batches (tiering must be invisible);
+  - **hit rate** — unique-chunk cache hit rate over the measured stream
+    must be >= 0.80 (the LFU-with-aging cache keeps the zipf head
+    resident);
+  - **latency** — tiered p99 batch latency must be <= 3x resident p99
+    (the price of the host gather + promotion on the miss tail);
+  - **promotion/demotion throughput** — chunks/s and MB/s through a
+    deliberately thrashing cache (every access promotes + evicts).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_CHUNK_SLOTS = 64
+_CHUNKS = 64                    # corpus = 4096 slots
+_N = 2048
+_MAX_NNZ = 48
+_DOC_NNZ = 24
+_M = 128
+_ZIPF_A = 1.6
+_K, _KPRIME = 10, 32
+_BATCH = 8
+_WARM, _MEASURE = 8, 48
+_BUDGET_FRACTION = 4            # corpus raw bytes >= 4x device budget
+_HIT_RATE_GATE = 0.80
+_P99_GATE = 3.0
+
+
+def _clustered_corpus(rng):
+    """Padded-CSR corpus where each chunk owns a disjoint coordinate band,
+    so a query about one cluster finds its candidates in one chunk —
+    document locality is what makes a corpus *tierable* in practice."""
+    cap = _CHUNK_SLOTS * _CHUNKS
+    band = _N // _CHUNKS
+    idx = np.full((cap, _MAX_NNZ), -1, np.int32)
+    val = np.zeros((cap, _MAX_NNZ), np.float32)
+    for c in range(_CHUNKS):
+        base = c * band
+        for s in range(_CHUNK_SLOTS):
+            r = c * _CHUNK_SLOTS + s
+            idx[r, :_DOC_NNZ] = rng.choice(band, _DOC_NNZ,
+                                           replace=False) + base
+            val[r, :_DOC_NNZ] = np.abs(rng.standard_normal(_DOC_NNZ)) + 0.1
+    return idx, val
+
+
+def _zipf_queries(rng, batches, idx, val):
+    """[batches][B, P] query stream: each query re-asks about a document
+    sampled zipf-hot over chunks (hot chunks scattered over slot space so
+    residency comes from the cache policy, not slot order)."""
+    ranks = np.arange(1, _CHUNKS + 1, dtype=np.float64)
+    p = ranks ** -_ZIPF_A
+    p /= p.sum()
+    perm = rng.permutation(_CHUNKS)
+    out = []
+    for _ in range(batches):
+        chunks = perm[rng.choice(_CHUNKS, size=_BATCH, p=p)]
+        rows = chunks * _CHUNK_SLOTS + rng.integers(0, _CHUNK_SLOTS, _BATCH)
+        out.append((idx[rows].copy(), val[rows].copy()))
+    return out
+
+
+def tiering_serving():
+    import time
+
+    import repro.core.engine as eng
+    from repro.storage.tiered import TieredVecStore, chunk_bytes
+
+    rng = np.random.default_rng(0)
+    cap = _CHUNK_SLOTS * _CHUNKS
+    spec = eng.EngineSpec(capacity=cap, n=_N, m=_M, max_nnz=_MAX_NNZ)
+    idx, val = _clustered_corpus(rng)
+
+    host_bytes = cap * _MAX_NNZ * (4 + 2)          # int32 idx + bf16 val
+    budget = host_bytes // _BUDGET_FRACTION
+    resident = eng.SinnamonIndex(spec)
+    tiered = eng.TieredSinnamonIndex(spec, tier_chunk_slots=_CHUNK_SLOTS,
+                                     device_budget_bytes=budget)
+    assert tiered.tiered.host_bytes() >= _BUDGET_FRACTION * budget
+    ids = list(range(cap))
+    for lo in range(0, cap, 512):
+        resident.insert_many(ids[lo:lo + 512], idx[lo:lo + 512],
+                             val[lo:lo + 512])
+        tiered.insert_many(ids[lo:lo + 512], idx[lo:lo + 512],
+                           val[lo:lo + 512])
+
+    stream = _zipf_queries(rng, _WARM + _MEASURE, idx, val)
+
+    # -- bit-identity spot check (tiering must be invisible) -------------------
+    for qi, qv in stream[:4]:
+        ri, rs = resident.search_many(qi, qv, _K, kprime=_KPRIME)
+        ti, ts = tiered.search_many(qi, qv, _K, kprime=_KPRIME)
+        if not (np.array_equal(ri, ti) and np.array_equal(rs, ts)):
+            raise AssertionError("tiered results diverge from resident "
+                                 "baseline (ids or scores)")
+
+    # -- latency + hit rate over the zipf stream ------------------------------
+    for qi, qv in stream[:_WARM]:                  # compile + cache warmup
+        resident.search_many(qi, qv, _K, kprime=_KPRIME)
+        tiered.search_many(qi, qv, _K, kprime=_KPRIME)
+    before = tiered.tiered.stats()
+    lat_r, lat_t = [], []
+    for qi, qv in stream[_WARM:]:
+        t0 = time.perf_counter()
+        resident.search_many(qi, qv, _K, kprime=_KPRIME)
+        lat_r.append((time.perf_counter() - t0) * 1e3)
+        t0 = time.perf_counter()
+        tiered.search_many(qi, qv, _K, kprime=_KPRIME)
+        lat_t.append((time.perf_counter() - t0) * 1e3)
+    after = tiered.tiered.stats()
+    hits = after["hits"] - before["hits"]
+    misses = after["misses"] - before["misses"]
+    hit_rate = hits / max(1, hits + misses)
+    p50_r, p99_r = np.percentile(lat_r, [50, 99])
+    p50_t, p99_t = np.percentile(lat_t, [50, 99])
+
+    # -- promotion/demotion throughput (forced thrash) ------------------------
+    store = TieredVecStore(cap, _MAX_NNZ, chunk_slots=_CHUNK_SLOTS,
+                           cache_chunks=2)
+    store.load_rows(idx, val.astype(np.float32))
+    t0 = time.perf_counter()
+    for c in range(_CHUNKS):
+        r = store.gather_rows(np.arange(c * _CHUNK_SLOTS,
+                                        c * _CHUNK_SLOTS + 4))
+        r[0].block_until_ready()
+    dt = time.perf_counter() - t0
+    st = store.stats()
+    promo_per_s = st["promotions"] / dt
+    promo_mb_s = promo_per_s * chunk_bytes(_CHUNK_SLOTS, _MAX_NNZ,
+                                           "bfloat16") / 2**20
+
+    rows = [
+        ("tiering_corpus_over_budget",
+         round(tiered.tiered.host_bytes() / budget, 2),
+         f"raw rows {tiered.tiered.host_bytes()}B vs device budget "
+         f"{budget}B (gate >= {_BUDGET_FRACTION})"),
+        ("tiering_bit_identity", 1,
+         "tiered ids+scores == resident on spot-check batches"),
+        ("tiering_hit_rate", round(hit_rate, 4),
+         f"{hits} hits / {misses} misses on the zipf stream "
+         f"(gate >= {_HIT_RATE_GATE})"),
+        ("tiering_p50_ms", round(p50_t, 3),
+         f"resident p50 {p50_r:.3f} ms"),
+        ("tiering_p99_ms", round(p99_t, 3),
+         f"resident p99 {p99_r:.3f} ms (gate <= {_P99_GATE}x)"),
+        ("tiering_p99_vs_resident", round(p99_t / max(p99_r, 1e-9), 2),
+         "tiered p99 / resident p99"),
+        ("tiering_promotions_per_s", round(promo_per_s, 1),
+         f"{promo_mb_s:.1f} MB/s host->device through a thrashing "
+         f"2-chunk cache ({st['evictions']} demotions)"),
+        ("tiering_resident_chunks", after["resident_chunks"],
+         f"of {after['cache_chunks']} cache / {after['num_chunks']} total"),
+    ]
+    if hit_rate < _HIT_RATE_GATE:
+        raise AssertionError(
+            f"tiering gate: hit rate {hit_rate:.3f} < {_HIT_RATE_GATE} on "
+            f"the zipf stream")
+    if p99_t > _P99_GATE * p99_r:
+        raise AssertionError(
+            f"tiering gate: tiered p99 {p99_t:.2f} ms > {_P99_GATE}x "
+            f"resident {p99_r:.2f} ms")
+    return rows
+
+
+ALL = [tiering_serving]

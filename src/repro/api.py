@@ -99,6 +99,12 @@ class IndexConfig:
       mesh (pass an explicit ``mesh`` to :func:`open_index` for real
       topologies).
     * ``durability`` — optional :class:`DurabilityConfig` block.
+    * ``device_budget_mb`` — cap on the PER-DEVICE bytes of raw vector
+      rows; setting it serves the hot/cold tiered index (sketches stay
+      fully resident, raw CSR rows page between a device chunk cache and
+      host RAM — see docs/tiering.md).  Results are bit-identical to the
+      resident index.  ``tier_chunk_slots`` is the paging granularity in
+      slots per chunk.
     """
 
     n: int
@@ -116,6 +122,8 @@ class IndexConfig:
     shards: int = 1
     update_block: int = 32
     durability: Optional[DurabilityConfig] = None
+    device_budget_mb: Optional[float] = None   # per-device raw-store budget
+    tier_chunk_slots: int = 256                # slots per tiering chunk
 
     def __post_init__(self):
         if self.shards < 1:
@@ -125,6 +133,12 @@ class IndexConfig:
         if self.backend is not None:
             from repro.kernels import ops as _ops
             _ops.resolve_backend(self.backend)     # validate eagerly
+        if self.device_budget_mb is not None and self.device_budget_mb <= 0:
+            raise ValueError(f"device_budget_mb must be positive, "
+                             f"got {self.device_budget_mb}")
+        if self.tier_chunk_slots < 1:
+            raise ValueError(f"tier_chunk_slots must be >= 1, "
+                             f"got {self.tier_chunk_slots}")
 
     @property
     def local_capacity(self) -> int:
@@ -177,6 +191,11 @@ def open_index(config: IndexConfig, *, mesh=None):
     set        >1 or mesh   ``DurableShardedSinnamonIndex.open``
     ========== ============ ==========================================
 
+    With ``device_budget_mb`` set, each row routes to its Tiered* twin
+    (``TieredSinnamonIndex`` / ``TieredShardedSinnamonIndex`` /
+    ``DurableTieredSinnamonIndex``); durable + sharded + tiered is not
+    implemented yet and raises ``NotImplementedError``.
+
     ``mesh`` overrides the host-local mesh that ``shards > 1`` would build
     (and forces the sharded path even for one shard — the 1×1 mesh runs the
     same shard_map program as production).  The returned index carries
@@ -185,14 +204,29 @@ def open_index(config: IndexConfig, *, mesh=None):
     """
     spec = config.engine_spec()
     sharded = mesh is not None or config.shards > 1
+    tiered = config.device_budget_mb is not None
+    if sharded and tiered and config.durability is not None:
+        raise NotImplementedError(
+            "durability + shards + device_budget_mb is not supported yet: "
+            "drop one of the three (tiered sharded serving is available "
+            "without durability)")
     if sharded and mesh is None:
         mesh = _host_mesh(config.shards)
+    tkw = dict(tier_chunk_slots=config.tier_chunk_slots,
+               device_budget_bytes=int(config.device_budget_mb * (1 << 20))
+               ) if tiered else {}
 
     if config.durability is None:
-        if sharded:
+        if sharded and tiered:
+            from repro.serving.sharded import TieredShardedSinnamonIndex
+            index = TieredShardedSinnamonIndex(
+                spec, mesh, update_block=config.update_block, **tkw)
+        elif sharded:
             from repro.serving.sharded import ShardedSinnamonIndex
             index = ShardedSinnamonIndex(spec, mesh,
                                          update_block=config.update_block)
+        elif tiered:
+            index = eng.TieredSinnamonIndex(spec, **tkw)
         else:
             index = eng.SinnamonIndex(spec)
     else:
@@ -201,6 +235,9 @@ def open_index(config: IndexConfig, *, mesh=None):
             from repro.persist import DurableShardedSinnamonIndex
             index = DurableShardedSinnamonIndex.open(
                 spec, mesh, update_block=config.update_block, **dkw)
+        elif tiered:
+            from repro.persist.durable import DurableTieredSinnamonIndex
+            index = DurableTieredSinnamonIndex.open(spec, **dkw, **tkw)
         else:
             from repro.persist import DurableSinnamonIndex
             index = DurableSinnamonIndex.open(spec, **dkw)

@@ -152,7 +152,12 @@ _EMPTY_ID = np.uint32(0xFFFFFFFF)    # both words of a packed -1
 # Functional core
 # ---------------------------------------------------------------------------
 
-def init(spec: EngineSpec) -> SinnamonState:
+def init(spec: EngineSpec, *, store_rows: Optional[int] = None) -> SinnamonState:
+    """Fresh state.  ``store_rows=0`` allocates a zero-row VecStore
+    placeholder — the tiered index keeps raw rows in a host-side
+    TieredVecStore and every batched mutation's ``mode="drop"`` scatter is an
+    exact no-op on the empty placeholder, so the functional core needs no
+    tiering branches."""
     mappings = jnp.asarray(sketch.make_mappings(spec.seed, spec.n, spec.m, spec.h))
     u = jnp.zeros((spec.m, spec.capacity), dtype=spec.sketch_spec.jdtype)
     l = None if spec.upper_only else jnp.zeros_like(u)
@@ -161,7 +166,8 @@ def init(spec: EngineSpec) -> SinnamonState:
         u=u,
         l=l,
         bits=bitindex.empty(spec.index_buckets or spec.n, spec.capacity),
-        store=vecstore.empty(spec.capacity, spec.max_nnz,
+        store=vecstore.empty(spec.capacity if store_rows is None
+                             else store_rows, spec.max_nnz,
                              dtype=jnp.dtype(spec.value_dtype)),
         active=jnp.zeros((spec.capacity,), jnp.bool_),
         ids=jnp.full((spec.capacity, 2), _EMPTY_ID, jnp.uint32),
@@ -308,11 +314,22 @@ def delete_batch_masked(state: SinnamonState, spec: EngineSpec, slots: Array,
                         mask: Array) -> SinnamonState:
     """Vectorized masked batch delete; the shard_map-body twin of delete.
 
+    Reads the deleted documents' coordinate rows from the resident VecStore;
+    the tiered index supplies them from its host backing instead via
+    :func:`delete_batch_rows`.
+    """
+    return delete_batch_rows(state, spec, slots, state.store.indices[slots],
+                             mask)
+
+
+def delete_batch_rows(state: SinnamonState, spec: EngineSpec, slots: Array,
+                      idx: Array, mask: Array) -> SinnamonState:
+    """Masked batch delete with the coordinate rows ``idx`` [B, P] passed in.
+
     Bit-clearing is a scatter-SUBTRACT of the same per-coordinate word masks
     the insert scatter added: each targeted bit is guaranteed set (the slot's
     stored document set exactly these rows), so subtraction borrows nothing.
     """
-    idx = state.store.indices[slots]                       # [B, P]
     rows, words, bitm = _bit_scatter_operands(state, spec, slots, idx, mask)
     bits = state.bits.at[rows, words].add(jnp.uint32(0) - bitm, mode="drop")
 
@@ -399,13 +416,14 @@ def grow_state(state: SinnamonState, spec: EngineSpec,
     shard-local shard_map body where each shard grows its own slot range.
     """
     c = spec.capacity
-    st = init(new_spec)
+    placeholder = state.store.indices.shape[0] == 0    # tiered: stays empty
+    st = init(new_spec, store_rows=0 if placeholder else None)
     return SinnamonState(
         mappings=state.mappings,
         u=st.u.at[:, :c].set(state.u),
         l=None if state.l is None else st.l.at[:, :c].set(state.l),
         bits=st.bits.at[:, : c // 32].set(state.bits),
-        store=vecstore.VecStore(
+        store=st.store if placeholder else vecstore.VecStore(
             indices=st.store.indices.at[:c].set(state.store.indices),
             values=st.store.values.at[:c].set(state.store.values)),
         active=st.active.at[:c].set(state.active),
@@ -466,6 +484,51 @@ def slot_drift(state: SinnamonState, spec: EngineSpec) -> Array:
                          axis=0)
         over = jnp.maximum(over, over_l)
     return jnp.where(state.active, over, 0.0)
+
+
+def compact_slots_rows(state: SinnamonState, spec: EngineSpec, slots: Array,
+                       idx_rows: Array, val_rows: Array,
+                       mask: Array) -> SinnamonState:
+    """Rebuild the sketch columns of ``slots`` from their raw rows.
+
+    The rows-based twin of :func:`compact_state` for stores whose raw rows
+    live off-device (TieredVecStore): the host reads the dirty slots' rows
+    from the backing store and passes them in; masked-off entries are exact
+    no-ops.  Encoding matches :func:`fresh_sketch` cell-for-cell (erased
+    rows encode to zero columns), so compacting the dirty set this way is
+    bit-identical to :func:`compact_state`.
+    """
+    u_cols, l_cols = sketch.encode_batch(
+        state.mappings, spec.m, idx_rows, val_rows.astype(jnp.float32),
+        dtype=spec.dtype, positive_only=spec.upper_only)
+    cap = state.active.shape[0]
+    safe = jnp.where(mask, slots, cap)                     # OOB -> dropped
+    u = state.u.at[:, safe].set(u_cols.T.astype(state.u.dtype), mode="drop")
+    l = None if state.l is None else state.l.at[:, safe].set(
+        l_cols.T.astype(state.l.dtype), mode="drop")
+    dirty = state.dirty.at[safe].set(False, mode="drop")
+    return state._replace(u=u, l=l, dirty=dirty)
+
+
+def slot_drift_rows(state: SinnamonState, spec: EngineSpec, slots: Array,
+                    idx_rows: Array, val_rows: Array) -> Array:
+    """Sketch overestimate of ``slots`` given their raw rows.  f32[len(slots)].
+
+    Same per-slot math as :func:`slot_drift`, fed from host-read rows instead
+    of the resident VecStore (the tiered index only evaluates dirty slots —
+    clean slots report 0 by definition there).
+    """
+    u_cols, l_cols = sketch.encode_batch(
+        state.mappings, spec.m, idx_rows, val_rows.astype(jnp.float32),
+        dtype=spec.dtype, positive_only=spec.upper_only)
+    over = jnp.max(jnp.clip(state.u[:, slots].astype(jnp.float32)
+                            - u_cols.T.astype(jnp.float32), 0.0, None), axis=0)
+    if state.l is not None:
+        over_l = jnp.max(jnp.clip(l_cols.T.astype(jnp.float32)
+                                  - state.l[:, slots].astype(jnp.float32),
+                                  0.0, None), axis=0)
+        over = jnp.maximum(over, over_l)
+    return jnp.where(state.active[slots], over, 0.0)
 
 
 def _sorted_query(q_idx: Array, q_val: Array) -> Tuple[Array, Array]:
@@ -606,6 +669,43 @@ def rerank_topk(state, cand_scores, cand_slots, q_idx, q_val, k):
     return state.ids[slots], top_scores, slots
 
 
+def rerank_topk_rows(state, cand_scores, cand_slots, rows_idx, rows_val,
+                     q_idx, q_val, k):
+    """:func:`rerank_topk` with the candidate CSR rows passed in directly.
+
+    The tiered path: ``TieredVecStore.gather_rows`` supplies
+    ``rows_idx``/``rows_val`` as flat ``[B*k', P]`` (or ``[B, k', P]``)
+    arrays and the exact scores go through the same
+    ``vecstore.exact_scores_rows`` primitive the resident rerank uses, so
+    both paths produce bit-identical (ids, scores, slots).
+    """
+    B, kp = cand_slots.shape
+    Pw = rows_idx.shape[-1]
+    ri = rows_idx.reshape(B, kp, Pw)
+    rv = rows_val.reshape(B, kp, Pw)
+    exact = jax.vmap(vecstore.exact_scores_rows)(ri, rv, q_idx, q_val)
+    exact = jnp.where(jnp.isneginf(cand_scores), -jnp.inf, exact)
+    top_scores, pos = jax.lax.top_k(exact, k)
+    slots = jnp.take_along_axis(cand_slots, pos, axis=-1)
+    return state.ids[slots], top_scores, slots
+
+
+def rerank_single_rows(state, cand_scores, cand_slots, rows_idx, rows_val,
+                       q_idx, q_val, k):
+    """:func:`search`'s single-query rerank tail with the rows passed in.
+
+    The unbatched rerank sums in a different (shape-dependent) order than
+    the vmapped one, so the tiered single-query path must mirror
+    :func:`search` exactly — not go through the batched rerank — to stay
+    bit-identical to the resident ``SinnamonIndex.search``.
+    """
+    exact = vecstore.exact_scores_rows(rows_idx, rows_val, q_idx, q_val)
+    exact = jnp.where(jnp.isneginf(cand_scores), -jnp.inf, exact)
+    top_scores, pos = jax.lax.top_k(exact, k)
+    slots = cand_slots[pos]
+    return state.ids[slots], top_scores, slots
+
+
 def search_batch(state, spec, q_idx, q_val, k, kprime, budget=None,
                  filter_mask=None, score_fn=None,
                  backend: Optional[str] = None):
@@ -704,7 +804,7 @@ class SinnamonIndex:
     def __init__(self, spec: EngineSpec):
         self.spec = spec
         self.default_backend: Optional[str] = None  # repro.api facade sets this
-        self.state = init(spec)
+        self.state = self._init_state()
         self._free = list(range(spec.capacity - 1, -1, -1))  # pop() -> slot 0 first
         self._id2slot: dict[int, int] = {}
         self._insert = jax.jit(insert, static_argnums=(1,))
@@ -722,6 +822,11 @@ class SinnamonIndex:
         self._compact = jax.jit(compact_state, static_argnums=(1,))
         self._slot_drift = jax.jit(slot_drift, static_argnums=(1,))
         self._obs = _WritePathMetrics()
+
+    def _init_state(self) -> SinnamonState:
+        """Fresh device state; the tiered subclass swaps in a placeholder
+        store here."""
+        return init(self.spec)
 
     # -- streaming updates ---------------------------------------------------
     def insert(self, ext_id: int, idx, val) -> None:
@@ -875,6 +980,215 @@ class SinnamonIndex:
         }
         out["index_total"] = out["sketch"] + out["inverted_index"]
         return out
+
+
+class TieredSinnamonIndex(SinnamonIndex):
+    """SinnamonIndex whose raw VecStore is hot/cold tiered.
+
+    The sketch (and bit index, active, ids, dirty) stays fully
+    device-resident; ``state.store`` is a zero-row placeholder and the raw
+    CSR rows live in a :class:`repro.storage.tiered.TieredVecStore` — host
+    RAM backing behind a bounded device-side chunk cache — so the corpus can
+    outgrow the device budget.  Search runs as two dispatches: sketch-only
+    candidate generation, then a host sync of the ``[B, k']`` candidate
+    slots drives chunk promotion (candidate-driven prefetch) before the
+    rows-based exact rerank.  Every rerank flows through the same
+    ``exact_scores_rows`` primitive as the resident baseline, so results
+    are bit-identical (tests/test_tiered_store.py enforces this, churn and
+    all).  Maintenance (compact / slot_drift) reads dirty rows from the
+    host backing in fixed-size blocks; ``slot_drift`` reports 0 for clean
+    slots (the resident path also reports value-dtype quantization noise
+    there — tiering only ever evaluates the dirty set).
+    """
+
+    _MAINT_BLOCK = 256           # dirty-slot rows per maintenance dispatch
+
+    def __init__(self, spec: EngineSpec, *, tier_chunk_slots: int = 256,
+                 device_budget_bytes: Optional[int] = None,
+                 cache_chunks: Optional[int] = None):
+        from repro.storage import tiered as tiered_mod
+        self.tiered = tiered_mod.TieredVecStore(
+            spec.capacity, spec.max_nnz, value_dtype=spec.value_dtype,
+            chunk_slots=tier_chunk_slots,
+            device_budget_bytes=device_budget_bytes,
+            cache_chunks=cache_chunks)
+        super().__init__(spec)
+        self._cand = jax.jit(topk_candidates, static_argnums=(1, 4, 5),
+                             static_argnames=("score_fn", "backend"))
+        self._rerank_rows = jax.jit(rerank_topk_rows, static_argnums=(7,))
+        self._rerank1 = jax.jit(rerank_single_rows, static_argnums=(7,))
+        self._delete_rows = jax.jit(delete_batch_rows, static_argnums=(1,))
+        self._compact_rows = jax.jit(compact_slots_rows, static_argnums=(1,))
+        self._drift_rows = jax.jit(slot_drift_rows, static_argnums=(1,))
+
+    def _init_state(self) -> SinnamonState:
+        return init(self.spec, store_rows=0)
+
+    def _placeholder_store(self) -> vecstore.VecStore:
+        return vecstore.empty(0, self.spec.max_nnz,
+                              dtype=jnp.dtype(self.spec.value_dtype))
+
+    # -- streaming updates ---------------------------------------------------
+    def insert(self, ext_id: int, idx, val) -> None:
+        i, v = pad_sparse(idx, val, self.spec.max_nnz)
+        self.insert_many([ext_id], np.asarray(i)[None], np.asarray(v)[None])
+
+    def insert_many(self, ext_ids, idx_batch, val_batch) -> None:
+        t0 = time.perf_counter()
+        ext_ids = [int(e) for e in ext_ids]
+        if len(set(ext_ids)) != len(ext_ids):
+            # Sequential overwrite semantics (same as the resident index):
+            # only the LAST occurrence of a duplicated id survives.
+            last = {e: pos for pos, e in enumerate(ext_ids)}
+            keep = sorted(last.values())
+            ext_ids = [ext_ids[p] for p in keep]
+            idx_batch = np.asarray(idx_batch)[keep]
+            val_batch = np.asarray(val_batch)[keep]
+        for e in ext_ids:
+            if e in self._id2slot:      # overwrite: drop the stale copy
+                self.delete(e)
+        bn = len(ext_ids)
+        while len(self._free) < bn:
+            self.grow(self.spec.capacity * 2)
+        slots = np.array([self._free.pop() for _ in range(bn)], np.int32)
+        idx_np = _pad_rows(np.asarray(idx_batch, np.int32),
+                           self.spec.max_nnz, -1)
+        val_np = _pad_rows(np.asarray(val_batch, np.float32),
+                           self.spec.max_nnz, 0)
+        # Host backing first (write-through), chunks pinned until the
+        # device-side sketch/bit update for this in-flight batch is issued.
+        chunks = self.tiered.write_rows(slots, idx_np, val_np, pin=True)
+        try:
+            self.state = self._insert_batch(
+                self.state, self.spec, jnp.asarray(slots),
+                jnp.asarray(pack_ids64(ext_ids)),
+                jnp.asarray(idx_np), jnp.asarray(val_np))
+        finally:
+            self.tiered.unpin(chunks)
+        for eid, slot in zip(ext_ids, slots):
+            self._id2slot[int(eid)] = int(slot)
+        self._obs.record("insert_many", t0, bn)
+
+    def delete(self, ext_id: int) -> None:
+        t0 = time.perf_counter()
+        slot = self._id2slot.pop(int(ext_id))
+        row = self.tiered.read_indices(np.array([slot]))
+        self.state = self._delete_rows(
+            self.state, self.spec, jnp.asarray(np.array([slot], np.int32)),
+            jnp.asarray(row), jnp.ones((1,), jnp.bool_))
+        self.tiered.erase_rows(np.array([slot]))
+        self._free.append(slot)
+        self._obs.record("delete", t0, 1)
+
+    # -- retrieval -----------------------------------------------------------
+    def search(self, q_idx, q_val, k: int, kprime: Optional[int] = None,
+               budget: Optional[int] = None, filter_mask=None, score_fn=None,
+               backend: Optional[str] = None):
+        kprime = kprime if kprime is not None else max(5 * k, k)
+        kprime = min(kprime, self.spec.capacity)
+        k = min(k, kprime)
+        qi, qv = jnp.asarray(q_idx), jnp.asarray(q_val)
+        ub, slots = self._cand(self.state, self.spec, qi[None], qv[None],
+                               kprime, budget, filter_mask, score_fn=score_fn,
+                               backend=self._backend(backend))
+        ub, slots = ub[0], slots[0]
+        ridx, rval = self.tiered.gather_rows(np.asarray(slots))
+        ids, scores, _ = self._rerank1(self.state, ub, slots, ridx, rval,
+                                       qi, qv, k)
+        return unpack_ids64(np.asarray(ids)), np.asarray(scores)
+
+    def search_many(self, q_idx, q_val, k: int, kprime: Optional[int] = None,
+                    budget: Optional[int] = None, filter_mask=None,
+                    score_fn=None, backend: Optional[str] = None):
+        """Two dispatches: sketch-scan candidates, then rows-based rerank
+        fed by the chunk cache (the ``[B, k']`` slot sync between them is
+        what drives promotion)."""
+        kprime = kprime if kprime is not None else max(5 * k, k)
+        kprime = min(kprime, self.spec.capacity)
+        k = min(k, kprime)
+        qi, qv = jnp.asarray(q_idx), jnp.asarray(q_val)
+        ub, slots = self._cand(self.state, self.spec, qi, qv, kprime, budget,
+                               filter_mask, score_fn=score_fn,
+                               backend=self._backend(backend))
+        ridx, rval = self.tiered.gather_rows(np.asarray(slots).reshape(-1))
+        ids, scores, _ = self._rerank_rows(self.state, ub, slots, ridx, rval,
+                                           qi, qv, k)
+        return unpack_ids64(np.asarray(ids)), np.asarray(scores)
+
+    # -- capacity / maintenance ----------------------------------------------
+    def grow(self, new_capacity: int) -> None:
+        super().grow(new_capacity)          # grow_state keeps the placeholder
+        self.tiered.grow(new_capacity)
+
+    def _maint_blocks(self):
+        """Yield (slots[B], mask[B], n_real) fixed-size blocks of dirty slots."""
+        dirty = np.flatnonzero(np.asarray(self.state.dirty))
+        B = self._MAINT_BLOCK
+        for i in range(0, dirty.size, B):
+            blk = dirty[i:i + B]
+            slots = np.zeros((B,), np.int32)
+            mask = np.zeros((B,), bool)
+            slots[:blk.size] = blk
+            mask[:blk.size] = True
+            yield slots, mask, blk.size
+
+    def compact(self) -> int:
+        t0 = time.perf_counter()
+        total = 0
+        for slots, mask, n in self._maint_blocks():
+            ridx, rval = self.tiered.read_rows(slots)
+            self.state = self._compact_rows(
+                self.state, self.spec, jnp.asarray(slots), jnp.asarray(ridx),
+                jnp.asarray(rval), jnp.asarray(mask))
+            total += n
+        self._obs.record("compact", t0)
+        return total
+
+    def slot_drift(self) -> np.ndarray:
+        out = np.zeros((self.spec.capacity,), np.float32)
+        for slots, mask, n in self._maint_blocks():
+            ridx, rval = self.tiered.read_rows(slots)
+            d = np.asarray(self._drift_rows(self.state, self.spec,
+                                            jnp.asarray(slots),
+                                            jnp.asarray(ridx),
+                                            jnp.asarray(rval)))
+            out[slots[:n]] = d[:n]
+        return out
+
+    def memory_bytes(self) -> dict:
+        out = super().memory_bytes()
+        out["storage"] = self.tiered.device_bytes()       # device-resident
+        out["storage_host"] = self.tiered.host_bytes()    # cold backing
+        return out
+
+    # -- persistence hooks (repro.persist.snapshot) --------------------------
+    def logical_state(self) -> SinnamonState:
+        """The state with the FULL raw store materialized (host arrays) —
+        what snapshots serialize, so tiered and resident snapshots are one
+        interchangeable format."""
+        idx, val = self.tiered.to_arrays()
+        return self.state._replace(
+            store=vecstore.VecStore(indices=idx, values=val))
+
+    def adopt_logical_state(self, state: SinnamonState) -> None:
+        """Install a restored logical state: raw rows go to the host
+        backing (tiering state resets to access-free defaults), everything
+        else to device with the placeholder store."""
+        self.tiered.load_rows(np.asarray(state.store.indices),
+                              np.asarray(state.store.values))
+        self.state = jax.tree.map(
+            jnp.asarray, state._replace(store=self._placeholder_store()))
+
+
+def _pad_rows(arr: np.ndarray, width: int, fill) -> np.ndarray:
+    """Pad [B, L] update rows to the fixed CSR width [B, width]."""
+    if arr.shape[1] > width:
+        raise ValueError(f"document nnz {arr.shape[1]} > max_nnz {width}")
+    if arr.shape[1] == width:
+        return arr
+    out = np.full((arr.shape[0], width), fill, arr.dtype)
+    out[:, :arr.shape[1]] = arr
+    return out
 
 
 def pad_sparse(idx, val, width: int):

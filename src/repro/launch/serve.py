@@ -133,6 +133,15 @@ def parse_args(argv=None):
                          "the fused tiled-top-k kernel)")
     ap.add_argument("--shards", type=int, default=1,
                     help=">1: sharded streaming index on a host-local mesh")
+    ap.add_argument("--device-budget-mb", type=float, default=None,
+                    metavar="MB",
+                    help="per-device byte budget for raw vector rows; "
+                         "enables the hot/cold tiered store (sketches stay "
+                         "resident, rows page between a device chunk cache "
+                         "and host RAM — docs/tiering.md); results are "
+                         "bit-identical to the resident index")
+    ap.add_argument("--tier-chunk-slots", type=int, default=256, metavar="S",
+                    help="tiered store paging granularity in slots per chunk")
     ap.add_argument("--query-batch", type=int, default=16)
     ap.add_argument("--dataset", default="splade_like")
     ap.add_argument("--wal", default=None, metavar="DIR",
@@ -236,6 +245,10 @@ def parse_args(argv=None):
     if args.snapshot_every is not None and args.snapshot_dir is None:
         ap.error("--snapshot-every requires --snapshot-dir "
                  "(periodic snapshots need somewhere to go)")
+    if (args.device_budget_mb is not None and args.wal is not None
+            and args.shards > 1):
+        ap.error("--device-budget-mb with both --wal and --shards > 1 is "
+                 "not supported yet; drop one of the three")
     if args.auto_tune and args.wal is not None:
         ap.error("--auto-tune is incompatible with --wal: durable runs pin "
                  "their spec to the WAL dir; tune first, then launch with "
@@ -385,7 +398,9 @@ def main():
         positive_only=ds.nonneg, index_buckets=args.index_buckets,
         sketch_kind=sketch_kind, cell_dtype=cell_dtype,
         backend=args.score_backend, shards=args.shards,
-        durability=durability)
+        durability=durability,
+        device_budget_mb=args.device_budget_mb,
+        tier_chunk_slots=args.tier_chunk_slots)
     index = open_index(config)
     recovered = index.size
     if recovered:

@@ -97,14 +97,31 @@ def _publish(registry, ix, labels):
         else:
             gauge("repro_engine_free_slots", "Free (recyclable) slots.").set(len(free))
 
+    # Tiered indexes: one TieredVecStore (single-device `.tiered`) or one
+    # per corpus shard (sharded `.tiers`); the placeholder state.store is
+    # zero-row, so `storage` below reports the device chunk cache instead.
+    tiers = ([ix.tiered] if hasattr(ix, "tiered")
+             else list(getattr(ix, "tiers", ())))
+    if tiers:
+        gauge("repro_tier_resident_bytes",
+              "Device bytes of raw rows resident in the tier chunk caches.",
+              ).set(sum(t.device_bytes() for t in tiers))
+        gauge("repro_tier_resident_chunks",
+              "Chunks currently resident across all tier caches.",
+              ).set(sum(t.resident_chunks() for t in tiers))
+        gauge("repro_tier_host_bytes",
+              "Host-RAM bytes of the cold raw-row backing store.",
+              ).set(sum(t.host_bytes() for t in tiers))
+
     state = getattr(ix, "state", None)
     if state is not None:
         mem = {
             "sketch": state.u.size * state.u.dtype.itemsize
                       + (0 if state.l is None else state.l.size * state.l.dtype.itemsize),
             "inverted_index": state.bits.size * state.bits.dtype.itemsize,
-            "storage": state.store.indices.size * state.store.indices.dtype.itemsize
-                       + state.store.values.size * state.store.values.dtype.itemsize,
+            "storage": (sum(t.device_bytes() for t in tiers) if tiers else
+                        state.store.indices.size * state.store.indices.dtype.itemsize
+                        + state.store.values.size * state.store.values.dtype.itemsize),
         }
         for component, nbytes in mem.items():
             gauge("repro_engine_bytes", "Measured device bytes by component.",

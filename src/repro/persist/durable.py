@@ -544,3 +544,56 @@ class DurableShardedSinnamonIndex(_DurableOps, ShardedSinnamonIndex):
                 self._append(0, wal.KIND_GROW, {
                     "capacity": np.asarray(new_c, np.int64)})
             super().grow(new_c)
+
+
+class DurableTieredSinnamonIndex(DurableSinnamonIndex,
+                                 eng.TieredSinnamonIndex):
+    """WAL + snapshot durability over the tiered single-device index.
+
+    The WAL logs *logical* operations only, so the log is byte-identical to
+    the resident index's: tiering is invisible to the durability layer.
+    Snapshots go through ``logical_state()`` (the full raw store spliced
+    back in) and restores through ``adopt_logical_state()`` (rows to the
+    host backing, chunk-cache heat reset to access-free defaults) — both
+    directions interchange freely with resident-index snapshots.
+    """
+
+    def __init__(self, spec: eng.EngineSpec, *, wal_dir: str,
+                 snapshot_dir: Optional[str] = None,
+                 tier_chunk_slots: int = 256,
+                 device_budget_bytes: Optional[int] = None,
+                 cache_chunks: Optional[int] = None,
+                 fsync: bool = True, segment_bytes: int = 4 << 20,
+                 snapshot_every: Optional[int] = None,
+                 compact_threshold: Optional[float] = None,
+                 compact_check_every: int = 64,
+                 snapshot_keep: int = 3):
+        eng.TieredSinnamonIndex.__init__(
+            self, spec, tier_chunk_slots=tier_chunk_slots,
+            device_budget_bytes=device_budget_bytes,
+            cache_chunks=cache_chunks)
+        self._init_durable(wal_dir=wal_dir, snapshot_dir=snapshot_dir,
+                           fsync=fsync, segment_bytes=segment_bytes,
+                           snapshot_every=snapshot_every,
+                           compact_threshold=compact_threshold,
+                           compact_check_every=compact_check_every,
+                           snapshot_keep=snapshot_keep)
+
+    def _compacted_state(self, state):
+        """Rows-based twin of the resident optimistic compaction: rebuild
+        ``state``'s dirty columns from the host backing WITHOUT touching
+        ``self.state`` (try_compact_async swaps the result in only if no
+        mutation raced the rebuild)."""
+        dirty = np.flatnonzero(np.asarray(state.dirty))
+        B = self._MAINT_BLOCK
+        for i in range(0, dirty.size, B):
+            blk = dirty[i:i + B]
+            slots = np.zeros((B,), np.int32)
+            mask = np.zeros((B,), bool)
+            slots[:blk.size] = blk
+            mask[:blk.size] = True
+            ridx, rval = self.tiered.read_rows(slots)
+            state = self._compact_rows(state, self.spec, jnp.asarray(slots),
+                                       jnp.asarray(ridx), jnp.asarray(rval),
+                                       jnp.asarray(mask))
+        return state

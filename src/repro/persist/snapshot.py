@@ -60,7 +60,12 @@ def save(snap_dir: str, index, wal_lsn: int, keep: int = 3) -> str:
     zero-op snapshot is still representable).
     """
     sharded = isinstance(index, ShardedSinnamonIndex)
-    state = jax.device_get(index.state)       # gathers the global arrays
+    # Tiered indexes keep the raw store host-side behind a zero-row
+    # placeholder; logical_state() splices the full store back in, so every
+    # snapshot is one interchangeable format regardless of tiering.
+    state = (index.logical_state() if hasattr(index, "logical_state")
+             else index.state)
+    state = jax.device_get(state)             # gathers the global arrays
     extra = {
         "format": FORMAT,
         "kind": "sharded" if sharded else "single",
@@ -199,7 +204,10 @@ def apply_single(index: eng.SinnamonIndex, state, extra) -> int:
     if extra["kind"] != "single":
         return _reinsert_live(index, state, extra)
     index.spec = _spec_from(extra["spec"])
-    index.state = jax.tree.map(jnp.asarray, state)
+    if hasattr(index, "adopt_logical_state"):
+        index.adopt_logical_state(state)      # tiered: store → host backing
+    else:
+        index.state = jax.tree.map(jnp.asarray, state)
     index._id2slot = {int(k): int(v) for k, v in extra["id2slot"].items()}
     index._free = [int(s) for s in extra["free"]]
     return int(extra["wal_lsn"])
@@ -217,7 +225,10 @@ def apply_sharded(index: ShardedSinnamonIndex, state, extra, mesh) -> int:
             or index.n_shards != int(extra["n_shards"])):
         return _reinsert_live(index, state, extra)
     index.spec = _spec_from(extra["spec"])
-    index.state = shard_state(jax.tree.map(jnp.asarray, state), mesh)
+    if hasattr(index, "adopt_logical_state"):
+        index.adopt_logical_state(state)      # tiered: store → host backing
+    else:
+        index.state = shard_state(jax.tree.map(jnp.asarray, state), mesh)
     index._free = [[int(s) for s in f] for f in extra["free"]]
     index._id2slot = {int(k): (int(v[0]), int(v[1]))
                       for k, v in extra["id2slot"].items()}

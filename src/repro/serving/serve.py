@@ -40,6 +40,12 @@ from repro.serving.sharded import ShardedSinnamonIndex
 #: Stage names of the staged (traced) single-device query path, in order.
 QUERY_STAGES = ("admission", "sketch_scan", "topk_merge", "rerank")
 
+#: Stage names of the staged path over a tiered index: the candidate/rerank
+#: split is real (two dispatches with a host slot sync between them), and
+#: the device/prefetch stage — chunk-cache promotion of the candidates'
+#: cold chunks — gets its own span.
+TIERED_QUERY_STAGES = ("admission", "sketch_scan", "prefetch", "rerank")
+
 
 # -- staged query pieces ------------------------------------------------------
 # The production path is ONE fused jit program (engine.search_batch); these
@@ -306,6 +312,8 @@ class QueryServer:
 
     # -- staged (traced) path ------------------------------------------------
     def _search_staged(self, q_idx, q_val, trace: Trace):
+        if isinstance(self.index, eng.TieredSinnamonIndex):
+            return self._staged_tiered(q_idx, q_val, trace)
         if isinstance(self.index, SinnamonIndex):
             return self._staged_single(q_idx, q_val, trace)
         return self._staged_generic(q_idx, q_val, trace)
@@ -346,6 +354,35 @@ class QueryServer:
             out_scores = np.asarray(top_scores)
         return out_ids, out_scores
 
+    def _staged_tiered(self, q_idx, q_val, trace: Trace):
+        """Tiered single-device index (see TIERED_QUERY_STAGES): reuses the
+        index's own jitted candidate/rerank programs, so staged results are
+        bit-identical to ``index.search_many``."""
+        index = self.index
+        with trace.span("admission"):
+            spec = index.spec
+            state = index.state
+            kprime = self.kprime if self.kprime is not None \
+                else max(5 * self.k, self.k)
+            kprime = min(kprime, spec.capacity)
+            k = min(self.k, kprime)
+            q_idx = jnp.asarray(q_idx)
+            q_val = jnp.asarray(q_val)
+        with trace.span("sketch_scan"):
+            ub, slots = index._cand(state, spec, q_idx, q_val, kprime,
+                                    self.budget, None, score_fn=None,
+                                    backend=index._backend(self.score_backend))
+            slots_np = np.asarray(slots)             # host sync
+        with trace.span("prefetch"):
+            ridx, rval = index.tiered.gather_rows(slots_np.reshape(-1))
+            jax.block_until_ready((ridx, rval))
+        with trace.span("rerank"):
+            ids, scores, _ = index._rerank_rows(state, ub, slots, ridx, rval,
+                                                q_idx, q_val, k)
+            out_ids = eng.unpack_ids64(np.asarray(ids))
+            out_scores = np.asarray(scores)
+        return out_ids, out_scores
+
     def _staged_generic(self, q_idx, q_val, trace: Trace):
         """Sharded (or unknown) index: shard-local stages live inside one
         shard_map program, so the finest honest split is admission vs the
@@ -381,6 +418,6 @@ class QueryServer:
         self.stats["queries"] = 0
         self.last_trace = None
         self._latency_hist(backend).reset()
-        for stage in QUERY_STAGES + ("spmd_search",):
+        for stage in QUERY_STAGES + TIERED_QUERY_STAGES + ("spmd_search",):
             self._hist("repro_query_stage_ms", "",
                        labels={"stage": stage, "backend": backend}).reset()

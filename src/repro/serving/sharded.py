@@ -67,6 +67,25 @@ def state_shardings(mesh: Mesh, positive_only: bool = False):
                         is_leaf=lambda x: isinstance(x, P))
 
 
+def _merge_local_exact(mesh: Mesh, corpus, state: eng.SinnamonState,
+                       exact, slots, k: int):
+    """Shared tail of every sharded search: package shard-local exact scores
+    into (gid lo/hi, locator) payloads and run the hierarchical top-k merge.
+    Factored out so the tiered rows-based rerank step merges bit-identically
+    with the resident fused step."""
+    gids = state.ids[slots]                              # [b, kl, 2]
+    shard = meshlib.linear_index(mesh, corpus)
+    loc = topk.pack_shard_slot(shard, slots)
+    payload = (gids[..., 0], gids[..., 1], loc)
+    if corpus:
+        vals, (lo, hi, loc) = topk.merge_over_axes(exact, payload, corpus, k)
+        return vals, jnp.stack([lo, hi], axis=-1), loc
+    vals, pos = jax.lax.top_k(exact, k)
+    take = lambda p: jnp.take_along_axis(p, pos, axis=-1)
+    return (vals, jnp.stack([take(payload[0]), take(payload[1])],
+                            axis=-1), take(loc))
+
+
 def make_search_step(mesh: Mesh, local_spec: eng.EngineSpec, *,
                      k: int, kprime_local: int,
                      budget: Optional[int] = None,
@@ -111,18 +130,7 @@ def make_search_step(mesh: Mesh, local_spec: eng.EngineSpec, *,
             lambda s, i, v: vecstore.exact_scores_sparse(state.store, s, i, v)
         )(slots, q_idx, q_val)                               # [b, kl]
         exact = jnp.where(jnp.isneginf(ub), -jnp.inf, exact)
-        gids = state.ids[slots]                              # [b, kl, 2]
-        shard = meshlib.linear_index(mesh, corpus)
-        loc = topk.pack_shard_slot(shard, slots)
-        payload = (gids[..., 0], gids[..., 1], loc)
-        if corpus:
-            vals, (lo, hi, loc) = topk.merge_over_axes(
-                exact, payload, corpus, k)
-            return vals, jnp.stack([lo, hi], axis=-1), loc
-        vals, pos = jax.lax.top_k(exact, k)
-        take = lambda p: jnp.take_along_axis(p, pos, axis=-1)
-        return (vals, jnp.stack([take(payload[0]), take(payload[1])],
-                                axis=-1), take(loc))
+        return _merge_local_exact(mesh, corpus, state, exact, slots, k)
 
     sharded = shard_map(
         local_search, mesh=mesh,
@@ -228,6 +236,137 @@ def shard_state(state: eng.SinnamonState, mesh: Mesh):
 
 
 # ---------------------------------------------------------------------------
+# Tiered-store SPMD steps (split search + rows-based mutation/maintenance)
+# ---------------------------------------------------------------------------
+# The tiered sharded index keeps raw CSR rows in per-shard host-backed
+# TieredVecStores; ``state.store`` is a zero-row placeholder, so every step
+# that used to read it gets a rows-based twin whose row inputs arrive as
+# [S, ...] rectangles (leading axis sharded over the corpus axes).  Search
+# splits in two: a candidates step (sketch-only), a host-side per-shard
+# chunk-cache gather, then a rerank step that reuses _merge_local_exact so
+# the merge is bit-identical to make_search_step.
+
+def _block_spec(mesh: Mesh):
+    """PartitionSpec for [S, B, ...] blocks: S over corpus, B over data."""
+    c = _corpus_spec(mesh)
+    bax = meshlib.batch_axes(mesh)
+    return P(c, bax[0]) if bax else P(c)
+
+
+def make_candidates_step(mesh: Mesh, local_spec: eng.EngineSpec, *,
+                         kprime_local: int, budget: Optional[int] = None,
+                         backend: Optional[str] = None):
+    """``step(state, q_idx[B, Lq], q_val[B, Lq])
+    -> (ub f32[S, B, kl], slots int32[S, B, kl])`` — the sketch-only front
+    half of a tiered sharded search (leading axis sharded over corpus)."""
+    from repro.kernels import ops as _ops
+
+    qspec = P("data") if "data" in mesh.axis_names else P()
+    bspec = _block_spec(mesh)
+    backend = _ops.resolve_backend(backend)
+
+    def local_cand(state, q_idx, q_val):
+        kl = min(kprime_local, local_spec.capacity)
+        ub, slots = eng.topk_candidates(state, local_spec, q_idx, q_val, kl,
+                                        budget, backend=backend)
+        return ub[None], slots[None]
+
+    sharded = shard_map(
+        local_cand, mesh=mesh,
+        in_specs=(state_pspecs(mesh, local_spec.upper_only), qspec, qspec),
+        out_specs=(bspec, bspec), check_rep=False)
+    return jax.jit(sharded)
+
+
+def make_rerank_rows_step(mesh: Mesh, local_spec: eng.EngineSpec, *, k: int):
+    """``step(state, ub[S, B, kl], slots[S, B, kl], ridx[S, B, kl, P],
+    rval[S, B, kl, P], q_idx, q_val) -> (scores[B, k], ids[B, k, 2],
+    locators[B, k])`` — the rows-fed exact rerank + hierarchical merge."""
+    corpus = meshlib.corpus_axes(mesh)
+    qspec = P("data") if "data" in mesh.axis_names else P()
+    bspec = _block_spec(mesh)
+    sspec = state_pspecs(mesh, local_spec.upper_only)
+
+    def local_rerank(state, ub, slots, ridx, rval, q_idx, q_val):
+        ub, slots = ub[0], slots[0]                      # [b, kl]
+        exact = jax.vmap(vecstore.exact_scores_rows)(ridx[0], rval[0],
+                                                     q_idx, q_val)
+        exact = jnp.where(jnp.isneginf(ub), -jnp.inf, exact)
+        return _merge_local_exact(mesh, corpus, state, exact, slots, k)
+
+    sharded = shard_map(
+        local_rerank, mesh=mesh,
+        in_specs=(sspec, bspec, bspec, bspec, bspec, qspec, qspec),
+        out_specs=(qspec, qspec, qspec), check_rep=False)
+    return jax.jit(sharded)
+
+
+def make_delete_rows_step(mesh: Mesh, local_spec: eng.EngineSpec):
+    """``step(state, slots[S,B], idx[S,B,P], mask[S,B])`` → state — the
+    delete step with the bit-clear coordinate rows supplied by the host."""
+    c = _corpus_spec(mesh)
+    sspec = state_pspecs(mesh, local_spec.upper_only)
+    uspec = P(c)
+
+    def local_delete(state, slots, idx, mask):
+        return eng.delete_batch_rows(state, local_spec, slots[0], idx[0],
+                                     mask[0])
+
+    sharded = shard_map(
+        local_delete, mesh=mesh,
+        in_specs=(sspec, uspec, uspec, uspec),
+        out_specs=sspec, check_rep=False)
+    return jax.jit(sharded)
+
+
+def make_compact_rows_step(mesh: Mesh, local_spec: eng.EngineSpec):
+    """``step(state, slots[S,B], idx[S,B,P], val[S,B,P], mask[S,B])`` →
+    state with the masked slots' sketch columns rebuilt from the rows."""
+    c = _corpus_spec(mesh)
+    sspec = state_pspecs(mesh, local_spec.upper_only)
+    uspec = P(c)
+
+    def local_compact(state, slots, idx, val, mask):
+        return eng.compact_slots_rows(state, local_spec, slots[0], idx[0],
+                                      val[0], mask[0])
+
+    sharded = shard_map(
+        local_compact, mesh=mesh,
+        in_specs=(sspec, uspec, uspec, uspec, uspec),
+        out_specs=sspec, check_rep=False)
+    return jax.jit(sharded)
+
+
+def make_drift_rows_step(mesh: Mesh, local_spec: eng.EngineSpec):
+    """``step(state, slots[S,B], idx[S,B,P], val[S,B,P])`` → f32[S, B]."""
+    c = _corpus_spec(mesh)
+    sspec = state_pspecs(mesh, local_spec.upper_only)
+    uspec = P(c)
+
+    def local_drift(state, slots, idx, val):
+        return eng.slot_drift_rows(state, local_spec, slots[0], idx[0],
+                                   val[0])[None]
+
+    sharded = shard_map(
+        local_drift, mesh=mesh,
+        in_specs=(sspec, uspec, uspec, uspec),
+        out_specs=P(c), check_rep=False)
+    return jax.jit(sharded)
+
+
+def _corpus_shard_devices(mesh: Mesh) -> list:
+    """One owning device per corpus shard (first device when replicated)."""
+    S = meshlib.n_shards(mesh, meshlib.corpus_axes(mesh))
+    sh = NamedSharding(mesh, P(_corpus_spec(mesh)))
+    out = [None] * S
+    for dev, idx in sh.devices_indices_map((S,)).items():
+        start = idx[0].start or 0
+        if out[start] is None:
+            out[start] = dev
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Host wrapper
 # ---------------------------------------------------------------------------
 
@@ -253,12 +392,17 @@ class ShardedSinnamonIndex:
         self.update_block = update_block
         global_spec = dataclasses.replace(
             spec, capacity=spec.capacity * self.n_shards)
-        self.state = shard_state(eng.init(global_spec), mesh)
+        self.state = shard_state(self._init_state(global_spec), mesh)
         self._free = [list(range(spec.capacity - 1, -1, -1))
                       for _ in range(self.n_shards)]
         self._id2slot: dict[int, tuple[int, int]] = {}
         self._steps: dict = {}
         self._obs = eng._WritePathMetrics()
+
+    def _init_state(self, global_spec: eng.EngineSpec) -> eng.SinnamonState:
+        """Fresh host-built global state; the tiered subclass swaps in a
+        zero-row placeholder store here."""
+        return eng.init(global_spec)
 
     # -- routing ------------------------------------------------------------
     def route(self, ext_id: int) -> int:
@@ -300,8 +444,6 @@ class ShardedSinnamonIndex:
                   for s in range(self.n_shards)):
             self.grow()
 
-        step = self._step("insert", lambda: make_insert_step(self.mesh,
-                                                             self.spec))
         S, B, Pw = self.n_shards, self.update_block, self.spec.max_nnz
         packed = eng.pack_ids64(np.asarray(ext_ids, np.int64))
         offsets = [0] * S
@@ -322,10 +464,15 @@ class ShardedSinnamonIndex:
                     vals[s, b] = val_batch[pos]
                     mask[s, b] = True
                     self._id2slot[ext_ids[pos]] = (s, slot)
-            self.state = step(self.state, jnp.asarray(slots),
-                              jnp.asarray(eids), jnp.asarray(idxs),
-                              jnp.asarray(vals), jnp.asarray(mask))
+            self._apply_insert_block(slots, eids, idxs, vals, mask)
         self._obs.record("insert_many", t0, len(ext_ids))
+
+    def _apply_insert_block(self, slots, eids, idxs, vals, mask) -> None:
+        step = self._step("insert", lambda: make_insert_step(self.mesh,
+                                                             self.spec))
+        self.state = step(self.state, jnp.asarray(slots),
+                          jnp.asarray(eids), jnp.asarray(idxs),
+                          jnp.asarray(vals), jnp.asarray(mask))
 
     def delete(self, ext_id: int) -> None:
         self.delete_many([ext_id])
@@ -341,8 +488,6 @@ class ShardedSinnamonIndex:
         for e in ext_ids:
             s, slot = self._id2slot.pop(e)
             per_shard[s].append(slot)
-        step = self._step("delete", lambda: make_delete_step(self.mesh,
-                                                             self.spec))
         S, B = self.n_shards, self.update_block
         offsets = [0] * S
         while any(offsets[s] < len(per_shard[s]) for s in range(S)):
@@ -353,11 +498,15 @@ class ShardedSinnamonIndex:
                 offsets[s] += len(take)
                 slots[s, :len(take)] = take
                 mask[s, :len(take)] = True
-            self.state = step(self.state, jnp.asarray(slots),
-                              jnp.asarray(mask))
+            self._apply_delete_block(slots, mask)
         for s in range(S):
             self._free[s].extend(reversed(per_shard[s]))
         self._obs.record("delete_many", t0, len(ext_ids))
+
+    def _apply_delete_block(self, slots, mask) -> None:
+        step = self._step("delete", lambda: make_delete_step(self.mesh,
+                                                             self.spec))
+        self.state = step(self.state, jnp.asarray(slots), jnp.asarray(mask))
 
     # -- retrieval ----------------------------------------------------------
     def search(self, q_idx, q_val, k: int, kprime: Optional[int] = None,
@@ -470,3 +619,237 @@ class ShardedSinnamonIndex:
         out = np.full((arr.shape[0], w), fill, arr.dtype)
         out[:, :arr.shape[1]] = arr
         return out
+
+
+class TieredShardedSinnamonIndex(ShardedSinnamonIndex):
+    """ShardedSinnamonIndex with per-shard hot/cold tiered raw stores.
+
+    ``state.store`` is a zero-row placeholder; each corpus shard owns a
+    :class:`repro.storage.tiered.TieredVecStore` committed to that shard's
+    device (``device_budget_bytes`` is PER SHARD).  Search runs as two SPMD
+    dispatches — sketch-only candidates, then (after a host sync of the
+    ``[S, B, k']`` candidate slots drives per-shard chunk promotion) a
+    rows-fed rerank step that reuses the exact same hierarchical merge as
+    the resident step, so results are bit-identical to
+    :class:`ShardedSinnamonIndex`.  ``score_fn`` (the legacy custom-scorer
+    hook) is not supported here.
+    """
+
+    def __init__(self, spec: eng.EngineSpec, mesh: Mesh, *,
+                 update_block: int = 32, tier_chunk_slots: int = 256,
+                 device_budget_bytes: Optional[int] = None,
+                 cache_chunks: Optional[int] = None):
+        from repro.storage.tiered import TieredVecStore
+        super().__init__(spec, mesh, update_block=update_block)
+        devices = _corpus_shard_devices(mesh)
+        self.tiers = [
+            TieredVecStore(spec.capacity, spec.max_nnz,
+                           value_dtype=spec.value_dtype,
+                           chunk_slots=tier_chunk_slots,
+                           device_budget_bytes=device_budget_bytes,
+                           cache_chunks=cache_chunks,
+                           device=devices[s])
+            for s in range(self.n_shards)]
+
+    def _init_state(self, global_spec: eng.EngineSpec) -> eng.SinnamonState:
+        return eng.init(global_spec, store_rows=0)
+
+    # -- streaming updates ---------------------------------------------------
+    def _apply_insert_block(self, slots, eids, idxs, vals, mask) -> None:
+        pinned = []
+        for s in range(self.n_shards):
+            m = mask[s]
+            if m.any():
+                pinned.append((s, self.tiers[s].write_rows(
+                    slots[s][m], idxs[s][m], vals[s][m], pin=True)))
+        try:
+            super()._apply_insert_block(slots, eids, idxs, vals, mask)
+        finally:
+            for s, chunks in pinned:
+                self.tiers[s].unpin(chunks)
+
+    def _apply_delete_block(self, slots, mask) -> None:
+        S, B = slots.shape
+        idxs = np.full((S, B, self.spec.max_nnz), -1, np.int32)
+        for s in range(S):
+            m = mask[s]
+            if m.any():
+                idxs[s, m] = self.tiers[s].read_indices(slots[s][m])
+        step = self._step("delete_rows", lambda: make_delete_rows_step(
+            self.mesh, self.spec))
+        self.state = step(self.state, jnp.asarray(slots), jnp.asarray(idxs),
+                          jnp.asarray(mask))
+        for s in range(S):
+            if mask[s].any():
+                self.tiers[s].erase_rows(slots[s][mask[s]])
+
+    # -- retrieval -----------------------------------------------------------
+    def search_many(self, q_idx, q_val, k: int,
+                    kprime: Optional[int] = None,
+                    budget: Optional[int] = None, score_fn=None,
+                    backend: Optional[str] = None,
+                    return_locators: bool = False, trace=None):
+        """Two SPMD dispatches with a candidate-driven per-shard prefetch in
+        between; with ``trace`` the stages are recorded as separate
+        ``spmd_candidates`` / ``prefetch`` / ``spmd_rerank`` spans."""
+        from repro.kernels import ops as _ops
+
+        if score_fn is not None:
+            raise NotImplementedError(
+                "score_fn is not supported on the tiered sharded index")
+        kprime = kprime if kprime is not None else max(5 * k, k)
+        kl = min(kprime, self.spec.capacity)
+        k = min(k, kl * self.n_shards)
+        if backend is None:
+            backend = self.default_backend
+        backend = _ops.resolve_backend(backend)
+        cstep = self._step(("tiered_cand", kl, budget, backend),
+                           lambda: make_candidates_step(
+                               self.mesh, self.spec, kprime_local=kl,
+                               budget=budget, backend=backend))
+        rstep = self._step(("tiered_rerank", k, kl),
+                           lambda: make_rerank_rows_step(self.mesh, self.spec,
+                                                         k=k))
+        qi, qv = jnp.asarray(q_idx), jnp.asarray(q_val)
+        if trace is None:
+            ub, slots = cstep(self.state, qi, qv)
+            ridx, rval = self._gather_global(np.asarray(slots))
+            scores, ids, loc = rstep(self.state, ub, slots, ridx, rval,
+                                     qi, qv)
+        else:
+            with trace.span("spmd_candidates"):
+                ub, slots = cstep(self.state, qi, qv)
+                slots_np = np.asarray(slots)             # sync
+            with trace.span("prefetch"):
+                ridx, rval = self._gather_global(slots_np)
+                jax.block_until_ready((ridx, rval))
+            with trace.span("spmd_rerank"):
+                scores, ids, loc = rstep(self.state, ub, slots, ridx, rval,
+                                         qi, qv)
+                jax.block_until_ready(scores)
+        ids = eng.unpack_ids64(np.asarray(ids))
+        if return_locators:
+            return ids, np.asarray(scores), np.asarray(loc)
+        return ids, np.asarray(scores)
+
+    def _gather_global(self, slots_np: np.ndarray):
+        """Per-shard chunk-cache gathers assembled into global [S, B, kl, P]
+        arrays sharded over the corpus axes.  Fast path: each shard's rows
+        are already on its own device, so the global array is assembled
+        without host round-trips; falls back to a host stack + device_put
+        when the batch is data-sharded."""
+        S, B, kl = slots_np.shape
+        Pw = self.spec.max_nnz
+        pieces = [self.tiers[s].gather_rows(slots_np[s].reshape(-1))
+                  for s in range(S)]
+        sh = NamedSharding(self.mesh, _block_spec(self.mesh))
+        shape = (S, B, kl, Pw)
+        try:
+            if any(self.mesh.shape[a] != 1
+                   for a in meshlib.batch_axes(self.mesh)):
+                raise ValueError("data-sharded batch needs the host path")
+            ridx = jax.make_array_from_single_device_arrays(
+                shape, sh, [p[0].reshape(1, B, kl, Pw) for p in pieces])
+            rval = jax.make_array_from_single_device_arrays(
+                shape, sh, [p[1].reshape(1, B, kl, Pw) for p in pieces])
+        except Exception:                                  # noqa: BLE001
+            ridx = jax.device_put(
+                np.stack([np.asarray(p[0]).reshape(B, kl, Pw)
+                          for p in pieces]), sh)
+            rval = jax.device_put(
+                np.stack([np.asarray(p[1]).reshape(B, kl, Pw)
+                          for p in pieces]), sh)
+        return ridx, rval
+
+    # -- capacity / maintenance ----------------------------------------------
+    def grow(self, new_local_capacity: Optional[int] = None) -> None:
+        super().grow(new_local_capacity)
+        for t in self.tiers:
+            t.grow(self.spec.capacity)
+
+    def _maint_blocks(self):
+        """Yield (slots[S,B], idx[S,B,P], val[S,B,P], mask[S,B]) blocks of
+        dirty slots with their host-read rows, shard-local numbering."""
+        dirty = np.asarray(self.state.dirty)
+        cap = self.spec.capacity
+        per_shard = [np.flatnonzero(dirty[s * cap:(s + 1) * cap])
+                     for s in range(self.n_shards)]
+        S, B, Pw = self.n_shards, max(self.update_block, 32), self.spec.max_nnz
+        vdt = self.tiers[0].value_dtype
+        offsets = [0] * S
+        while any(offsets[s] < per_shard[s].size for s in range(S)):
+            slots = np.zeros((S, B), np.int32)
+            mask = np.zeros((S, B), bool)
+            idxs = np.full((S, B, Pw), -1, np.int32)
+            vals = np.zeros((S, B, Pw), vdt)
+            for s in range(S):
+                take = per_shard[s][offsets[s]:offsets[s] + B]
+                offsets[s] += take.size
+                if take.size:
+                    slots[s, :take.size] = take
+                    mask[s, :take.size] = True
+                    ri, rv = self.tiers[s].read_rows(take)
+                    idxs[s, :take.size] = ri
+                    vals[s, :take.size] = rv
+            yield slots, idxs, vals, mask
+
+    def compact(self) -> int:
+        t0 = time.perf_counter()
+        total = 0
+        step = None
+        for slots, idxs, vals, mask in self._maint_blocks():
+            if step is None:
+                step = self._step("tiered_compact",
+                                  lambda: make_compact_rows_step(self.mesh,
+                                                                 self.spec))
+            self.state = step(self.state, jnp.asarray(slots),
+                              jnp.asarray(idxs), jnp.asarray(vals),
+                              jnp.asarray(mask))
+            total += int(mask.sum())
+        self._obs.record("compact", t0)
+        return total
+
+    def slot_drift(self) -> np.ndarray:
+        out = np.zeros((self.spec.capacity * self.n_shards,), np.float32)
+        cap = self.spec.capacity
+        step = None
+        for slots, idxs, vals, mask in self._maint_blocks():
+            if step is None:
+                step = self._step("tiered_drift",
+                                  lambda: make_drift_rows_step(self.mesh,
+                                                               self.spec))
+            d = np.asarray(step(self.state, jnp.asarray(slots),
+                                jnp.asarray(idxs), jnp.asarray(vals)))
+            for s in range(self.n_shards):
+                out[s * cap + slots[s][mask[s]]] = d[s][mask[s]]
+        return out
+
+    # -- persistence hooks ----------------------------------------------------
+    def logical_state(self) -> eng.SinnamonState:
+        """Global state with the full raw store spliced back in, so tiered
+        snapshots are byte-interchangeable with resident ones."""
+        cap, Pw = self.spec.capacity, self.spec.max_nnz
+        idx = np.full((cap * self.n_shards, Pw), -1, np.int32)
+        val = np.zeros((cap * self.n_shards, Pw), self.tiers[0].value_dtype)
+        for s, t in enumerate(self.tiers):
+            hi, hv = t.to_arrays()
+            idx[s * cap:(s + 1) * cap] = hi
+            val[s * cap:(s + 1) * cap] = hv
+        return self.state._replace(store=vecstore.VecStore(
+            indices=idx, values=val))
+
+    def adopt_logical_state(self, state: eng.SinnamonState) -> None:
+        """Restore from a full-store global state: raw rows land in the
+        per-shard host backings (tiering heat resets to access-free
+        defaults), the device state keeps the zero-row placeholder."""
+        cap = self.spec.capacity
+        idx = np.asarray(state.store.indices)
+        val = np.asarray(state.store.values)
+        for s, t in enumerate(self.tiers):
+            t.load_rows(idx[s * cap:(s + 1) * cap],
+                        val[s * cap:(s + 1) * cap])
+        ph = vecstore.empty(0, self.spec.max_nnz,
+                            dtype=jnp.dtype(self.spec.value_dtype))
+        self.state = shard_state(
+            jax.tree.map(jnp.asarray, state._replace(store=ph)), self.mesh)
+        self._steps.clear()

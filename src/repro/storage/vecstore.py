@@ -65,6 +65,45 @@ def densify_query(n: int, q_idx: Array, q_val: Array) -> Array:
     return jnp.zeros((n,), jnp.float32).at[safe].add(contrib, mode="drop")
 
 
+def combine_query(q_idx: Array, q_val: Array) -> tuple:
+    """Sort query coordinates (pads routed last) and combine duplicates.
+
+    Returns ``(qs, comb)``: sorted coordinate keys (pad = int32 max) and, at
+    every position, the TOTAL value of its coordinate's duplicate run — the
+    same sum densify_query's scatter-add produces.  The combine is a sorted
+    segment-sum: O(ψ_q log ψ_q) for the sort plus one length-ψ_q scatter-add,
+    replacing the old O(ψ_q²) pairwise-equality mask.
+    """
+    big = jnp.int32(jnp.iinfo(jnp.int32).max)
+    key = jnp.where(q_idx >= 0, q_idx, big)
+    order = jnp.argsort(key)
+    qs = key[order]                                  # sorted coords, pads last
+    qv = jnp.where(q_idx >= 0, q_val.astype(jnp.float32), 0.0)[order]
+    if qs.shape[0] == 0:         # static shape: nothing to combine
+        return qs, qv
+    start = jnp.concatenate([jnp.ones((1,), jnp.bool_), qs[1:] != qs[:-1]])
+    seg = jnp.cumsum(start) - 1                      # [L] run id per position
+    sums = jnp.zeros_like(qv).at[seg].add(qv)        # segment totals
+    return qs, sums[seg]                             # broadcast back to runs
+
+
+def exact_scores_rows(idx: Array, val: Array, q_idx: Array,
+                      q_val: Array) -> Array:
+    """Exact ⟨q, x⟩ for pre-gathered CSR rows (idx int32[K, P], val [K, P]).
+
+    The row-level Algorithm 7 rerank primitive: both the resident path
+    (:func:`exact_scores_sparse`) and the tiered path
+    (``TieredVecStore.gather_rows`` → rerank) delegate here, so tiering is
+    bit-identical to the resident baseline by construction.  f32[K].
+    """
+    val = val.astype(jnp.float32)
+    qs, comb = combine_query(q_idx, q_val)
+    pos = jnp.clip(jnp.searchsorted(qs, idx), 0, qs.shape[0] - 1)
+    hit = (jnp.take(qs, pos) == idx) & (idx >= 0)
+    qd = jnp.where(hit, jnp.take(comb, pos), 0.0)    # [K, P]
+    return jnp.sum(qd * val, axis=-1)
+
+
 def exact_scores_sparse(store: VecStore, slots: Array, q_idx: Array,
                         q_val: Array) -> Array:
     """Exact ⟨q, x_s⟩ for the given slots WITHOUT densifying the query.
@@ -76,19 +115,8 @@ def exact_scores_sparse(store: VecStore, slots: Array, q_idx: Array,
     Duplicate query coordinates are pre-combined by addition (the same
     result densify_query's scatter-add produces).  f32[len(slots)].
     """
-    idx = store.indices[slots]                       # [K, P]
-    val = store.values[slots].astype(jnp.float32)    # [K, P]
-    big = jnp.int32(jnp.iinfo(jnp.int32).max)
-    key = jnp.where(q_idx >= 0, q_idx, big)
-    order = jnp.argsort(key)
-    qs = key[order]                                  # sorted coords, pads last
-    qv = jnp.where(q_idx >= 0, q_val.astype(jnp.float32), 0.0)[order]
-    comb = jnp.sum(jnp.where(qs[None, :] == qs[:, None], qv[None, :], 0.0),
-                   axis=-1)                          # dup coords -> one sum
-    pos = jnp.clip(jnp.searchsorted(qs, idx), 0, qs.shape[0] - 1)
-    hit = (jnp.take(qs, pos) == idx) & (idx >= 0)
-    qd = jnp.where(hit, jnp.take(comb, pos), 0.0)    # [K, P]
-    return jnp.sum(qd * val, axis=-1)
+    return exact_scores_rows(store.indices[slots], store.values[slots],
+                             q_idx, q_val)
 
 
 def exact_scores(store: VecStore, slots: Array, q_dense: Array) -> Array:

@@ -340,3 +340,88 @@ def test_multi_shard_torn_batch_rolls_back(tmp_path):
                          capture_output=True, text=True, timeout=300)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "CHAOS_MULTI_OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# tiered store: a failed cold-chunk promotion never poisons the cache
+# ---------------------------------------------------------------------------
+
+def test_tiered_promotion_fault_no_cache_poisoning():
+    """`vecstore.read` injected during promotion: the query fails cleanly,
+    the chunk is NOT marked resident (a poisoned map would serve stale or
+    garbage device rows forever after), the freed cache lines are returned,
+    and the retry after the fault clears is bit-identical to resident."""
+    from repro.core.engine import SinnamonIndex, TieredSinnamonIndex
+
+    idx, val = synth.make_corpus(5, DS, 64, pad=32)
+    spec = _spec(capacity=64)
+    resident = SinnamonIndex(spec)
+    tiered = TieredSinnamonIndex(spec, tier_chunk_slots=8, cache_chunks=8)
+    resident.insert_many(list(range(64)), idx, val)
+    tiered.insert_many(list(range(64)), idx, val)
+
+    qi, qv = synth.make_queries(5, DS, 2, pad=32)
+    resident.search_many(qi, qv, k=5)       # compile outside the fault scope
+    tiered.tiered.gather_rows(np.arange(8))  # warm one chunk: mixed-age cache
+    before = tiered.tiered.stats()
+    assert before["resident_chunks"] == 1
+
+    reg = fp.FailpointRegistry(registry=MetricsRegistry())
+    reg.set("vecstore.read", "error", count=1)
+    with _installed(reg):
+        with pytest.raises(fp.InjectedError):
+            tiered.search_many(qi, qv, k=5)
+        assert reg.hits("vecstore.read") == 1
+    after = tiered.tiered.stats()
+    assert after["resident_chunks"] == before["resident_chunks"]
+    assert after["promotions"] == before["promotions"]
+
+    # fault cleared: the same query promotes for real and matches resident
+    ri, rs = resident.search_many(qi, qv, k=5)
+    ti, ts = tiered.search_many(qi, qv, k=5)
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(ti))
+    np.testing.assert_array_equal(np.asarray(rs), np.asarray(ts))
+    assert tiered.tiered.stats()["promotions"] > before["promotions"]
+
+
+def test_durable_tiered_promotion_fault_then_crash_recovery(tmp_path):
+    """A promotion fault on a durable tiered index touches only cache
+    state: the durable (logical) state is unchanged, and recovery after a
+    crash immediately following the fault is byte-identical — cache heat
+    is not durable state and is rebuilt from zero."""
+    from repro.persist.durable import DurableTieredSinnamonIndex
+
+    idx, val = synth.make_corpus(6, DS, 48, pad=32)
+    spec = _spec(capacity=64)
+    kw = dict(wal_dir=str(tmp_path / "wal"),
+              snapshot_dir=str(tmp_path / "snap"),
+              tier_chunk_slots=8, cache_chunks=8, fsync=False)
+    live = DurableTieredSinnamonIndex.open(spec, **kw)
+    live.insert_many(list(range(48)), idx, val)
+
+    qi, qv = synth.make_queries(6, DS, 2, pad=32)
+    ids0, sc0 = live.search_many(qi, qv, k=5)       # compile + warm
+    st_before = live.logical_state()
+    lsn_before = live._next_lsn
+
+    # evict everything the warm query promoted so the faulted retry has
+    # cold chunks to promote again
+    for c in list(range(live.tiered.num_chunks)):
+        if live.tiered._line_by_chunk[c] >= 0:
+            live.tiered._evict(c)
+
+    reg = fp.FailpointRegistry(registry=MetricsRegistry())
+    reg.set("vecstore.read", "error", count=1)
+    with _installed(reg):
+        with pytest.raises(fp.InjectedError):
+            live.search_many(qi, qv, k=5)
+    assert live._next_lsn == lsn_before             # queries never log
+    _assert_state_equal(live.logical_state(), st_before)
+
+    del live                                        # crash, no clean close
+    rec = DurableTieredSinnamonIndex.open(spec, **kw)
+    assert rec.tiered.stats()["resident_chunks"] == 0   # heat not durable
+    ids1, sc1 = rec.search_many(qi, qv, k=5)
+    np.testing.assert_array_equal(np.asarray(ids0), np.asarray(ids1))
+    np.testing.assert_array_equal(np.asarray(sc0), np.asarray(sc1))
+    _assert_state_equal(rec.logical_state(), st_before)

@@ -1,0 +1,371 @@
+"""ISSUE 10 tier-transparency contracts: tiering must be invisible.
+
+* **Churn equivalence** — a randomized insert/overwrite/delete/compact/
+  grow/query stream driven in lockstep through a `TieredSinnamonIndex`
+  with an adversarially tiny device cache (1–2 chunks) and the resident
+  `SinnamonIndex` baseline returns bit-identical ids AND scores, for both
+  `search` and `search_many`, on every scoring backend.
+* **Store mechanics** — eviction of a just-written chunk round-trips the
+  rows byte-identically (write-through means demotion is a drop, never a
+  copy-back); a fully pinned cache falls back to a direct host gather with
+  identical rows; LFU victim selection is deterministic.
+* **Sharded parity** — `TieredShardedSinnamonIndex` on a single-device
+  mesh matches `ShardedSinnamonIndex` bit-for-bit under churn, including
+  drift/compaction parity of the sketch state itself.
+* **Durable round-trip** — crash + recovery of `DurableTieredSinnamonIndex`
+  reproduces search results and the full logical state byte-for-byte, and
+  the same WAL+snapshot restores into a *resident* durable index (one
+  interchange format).
+
+The scaled-up latency/hit-rate twin runs in ``benchmarks/tiering.py``.
+"""
+
+import numpy as np
+import pytest
+
+import repro.core.engine as eng
+from repro.storage.tiered import TieredVecStore
+
+BACKENDS = ("reference", "grouped", "pallas")
+N, MAX_NNZ, DOC_NNZ = 512, 16, 12
+
+
+def _spec(capacity=96, m=24):
+    return eng.EngineSpec(capacity=capacity, n=N, m=m, max_nnz=MAX_NNZ,
+                          h=2, seed=7, value_dtype="float32")
+
+
+def _docs(rng, B, nnz=DOC_NNZ):
+    """Padded [B, MAX_NNZ] rows — resident insert_many requires full pad."""
+    idx = np.full((B, MAX_NNZ), -1, np.int32)
+    val = np.zeros((B, MAX_NNZ), np.float32)
+    idx[:, :nnz] = np.stack([rng.choice(N, nnz, replace=False)
+                             for _ in range(B)])
+    val[:, :nnz] = rng.standard_normal((B, nnz)).astype(np.float32)
+    return idx, val
+
+
+def _assert_bitwise(a, b, msg):
+    ia, sa = np.asarray(a[0]), np.asarray(a[1])
+    ib, sb = np.asarray(b[0]), np.asarray(b[1])
+    np.testing.assert_array_equal(ia, ib, err_msg=f"{msg}: ids")
+    np.testing.assert_array_equal(sa, sb, err_msg=f"{msg}: scores")
+
+
+# -- churn equivalence --------------------------------------------------------
+
+@pytest.mark.parametrize("cache_chunks,seed", [(1, 0), (2, 1), (2, 2)])
+def test_churn_equivalence_all_backends(cache_chunks, seed):
+    """Tiered == resident (ids AND scores) under churn with a cache so
+    small every multi-chunk candidate set must promote, evict, or fall
+    back — the adversarial regime for cache-coherence bugs."""
+    rng = np.random.default_rng(seed)
+    spec = _spec()
+    resident = eng.SinnamonIndex(spec)
+    tiered = eng.TieredSinnamonIndex(spec, tier_chunk_slots=8,
+                                     cache_chunks=cache_chunks)
+
+    live, next_id = set(), 0
+    for step in range(60):
+        op = rng.random()
+        if op < 0.45 or len(live) < 10:
+            B = int(rng.integers(1, 6))
+            ids = []
+            for _ in range(B):
+                if live and rng.random() < 0.3:     # overwrite in place
+                    ids.append(int(rng.choice(sorted(live))))
+                else:
+                    ids.append(next_id)
+                    next_id += 1
+            di, dv = _docs(rng, B)
+            resident.insert_many(ids, di, dv)
+            tiered.insert_many(ids, di, dv)
+            live.update(ids)
+        elif op < 0.62 and len(live) > 5:
+            doc = int(rng.choice(sorted(live)))
+            resident.delete(doc)
+            tiered.delete(doc)
+            live.discard(doc)
+        elif op < 0.72:
+            assert resident.compact() == tiered.compact()
+        else:
+            B = int(rng.integers(1, 4))
+            qi, qv = _docs(rng, B)
+            for backend in BACKENDS:
+                _assert_bitwise(
+                    resident.search_many(qi, qv, k=5, backend=backend),
+                    tiered.search_many(qi, qv, k=5, backend=backend),
+                    f"step {step} search_many backend={backend}")
+            _assert_bitwise(resident.search(qi[0], qv[0], k=5),
+                            tiered.search(qi[0], qv[0], k=5),
+                            f"step {step} search")
+    st = tiered.tiered.stats()
+    # a 1-chunk cache can't hold a multi-chunk candidate set: every gather
+    # is a host-gather fallback; with 2 chunks promotions happen for real
+    assert st["promotions"] + st["fallbacks"] > 0, \
+        "cold path never exercised"
+    assert st["resident_chunks"] <= cache_chunks
+
+
+def test_grow_keeps_equivalence():
+    """Capacity growth mid-stream resizes the host backing; results stay
+    bit-identical before and after."""
+    rng = np.random.default_rng(3)
+    spec = _spec(capacity=32)
+    resident = eng.SinnamonIndex(spec)
+    tiered = eng.TieredSinnamonIndex(spec, tier_chunk_slots=8,
+                                     cache_chunks=2)
+    di, dv = _docs(rng, 30)
+    resident.insert_many(list(range(30)), di, dv)
+    tiered.insert_many(list(range(30)), di, dv)
+    resident.grow(96)
+    tiered.grow(96)
+    assert tiered.tiered.capacity >= 96
+    di2, dv2 = _docs(rng, 50)
+    resident.insert_many(list(range(30, 80)), di2, dv2)
+    tiered.insert_many(list(range(30, 80)), di2, dv2)
+    qi, qv = _docs(rng, 4)
+    _assert_bitwise(resident.search_many(qi, qv, k=7),
+                    tiered.search_many(qi, qv, k=7), "post-grow")
+
+
+def test_drift_and_compaction_parity():
+    """Sketch maintenance reads rows through the tier: per-slot drift and
+    post-compaction sketch state must match the resident index exactly."""
+    rng = np.random.default_rng(4)
+    spec = _spec()
+    resident = eng.SinnamonIndex(spec)
+    tiered = eng.TieredSinnamonIndex(spec, tier_chunk_slots=8,
+                                     cache_chunks=1)
+    di, dv = _docs(rng, 60)
+    resident.insert_many(list(range(60)), di, dv)
+    tiered.insert_many(list(range(60)), di, dv)
+    for doc in range(0, 30, 3):                     # churn up some drift
+        resident.delete(doc)
+        tiered.delete(doc)
+    di2, dv2 = _docs(rng, 10)
+    resident.insert_many(list(range(100, 110)), di2, dv2)
+    tiered.insert_many(list(range(100, 110)), di2, dv2)
+
+    dirty = np.asarray(resident.state.dirty)
+    np.testing.assert_array_equal(resident.slot_drift()[dirty],
+                                  tiered.slot_drift()[dirty])
+    assert resident.compact() == tiered.compact()
+    for name in ("u", "bits", "active", "dirty"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(resident.state, name)),
+            np.asarray(getattr(tiered.state, name)), err_msg=name)
+
+
+# -- store mechanics ----------------------------------------------------------
+
+def test_evict_just_written_chunk_roundtrips():
+    """Write rows, force their chunk out of the cache, read them back cold:
+    write-through means the host copy was authoritative all along."""
+    rng = np.random.default_rng(5)
+    store = TieredVecStore(64, MAX_NNZ, value_dtype="float32", chunk_slots=8, cache_chunks=1)
+    store.gather_rows(np.arange(8))                 # chunk 0 resident
+    di, dv = _docs(rng, 8)
+    store.write_rows(np.arange(8), di, dv)          # patches the device line
+    before = store.stats()["evictions"]
+    store.gather_rows(np.arange(48, 56))            # promote chunk 6 → evict 0
+    assert store.stats()["evictions"] > before
+    ri, rv = store.gather_rows(np.arange(8))        # cold re-promotion
+    np.testing.assert_array_equal(np.asarray(ri), di)
+    np.testing.assert_array_equal(np.asarray(rv, np.float32), dv)
+
+
+def test_fully_pinned_cache_falls_back_to_host_gather():
+    """When pins block every line, gather_rows must serve from host RAM
+    (correctness never depends on residency) and count a fallback."""
+    rng = np.random.default_rng(6)
+    store = TieredVecStore(64, MAX_NNZ, value_dtype="float32", chunk_slots=8, cache_chunks=2)
+    di, dv = _docs(rng, 64)
+    store.load_rows(di, dv)
+    store.gather_rows(np.arange(0, 16))             # chunks 0,1 resident
+    with store.pinning(np.arange(0, 16)):
+        before = store.stats()
+        ri, rv = store.gather_rows(np.arange(24, 40))   # needs chunks 3,4
+        after = store.stats()
+        assert after["fallbacks"] == before["fallbacks"] + 1
+        assert after["resident_chunks"] == 2        # nothing evicted
+    np.testing.assert_array_equal(np.asarray(ri), di[24:40])
+    np.testing.assert_array_equal(np.asarray(rv, np.float32), dv[24:40])
+    # after unpin the same gather promotes normally
+    store.gather_rows(np.arange(24, 32))
+    assert store.stats()["promotions"] > before["promotions"]
+
+
+def test_prefetch_warms_then_hits():
+    rng = np.random.default_rng(7)
+    store = TieredVecStore(64, MAX_NNZ, value_dtype="float32", chunk_slots=8, cache_chunks=4)
+    di, dv = _docs(rng, 64)
+    store.load_rows(di, dv)
+    assert store.prefetch(np.arange(0, 24)) == 3    # chunks 0..2 promoted
+    before = store.stats()
+    store.gather_rows(np.arange(0, 24))
+    after = store.stats()
+    assert after["misses"] == before["misses"]      # all hits, no promotion
+    assert after["promotions"] == before["promotions"]
+
+
+def test_lfu_evicts_the_cold_chunk():
+    """The hot chunk survives eviction pressure; the low-frequency one is
+    the deterministic victim when a third chunk needs its line."""
+    rng = np.random.default_rng(8)
+    store = TieredVecStore(64, MAX_NNZ, value_dtype="float32", chunk_slots=8, cache_chunks=2)
+    di, dv = _docs(rng, 64)
+    store.load_rows(di, dv)
+    for _ in range(5):
+        store.gather_rows(np.arange(0, 8))          # chunk 0 hot
+    store.gather_rows(np.arange(8, 16))             # chunk 1: one access
+    store.gather_rows(np.arange(16, 24))            # chunk 2 evicts chunk 1
+    p = store.stats()["promotions"]
+    store.gather_rows(np.arange(0, 8))              # hot chunk: still a hit
+    assert store.stats()["promotions"] == p
+    store.gather_rows(np.arange(8, 16))             # chunk 1: cold again
+    assert store.stats()["promotions"] == p + 1
+
+
+# -- sharded parity -----------------------------------------------------------
+
+def test_sharded_tiered_matches_sharded_resident():
+    from repro.distributed import mesh as meshlib
+    from repro.serving.sharded import (ShardedSinnamonIndex,
+                                       TieredShardedSinnamonIndex)
+
+    rng = np.random.default_rng(9)
+    spec = _spec(capacity=64)
+    mesh = meshlib.single_device_mesh()
+    base = ShardedSinnamonIndex(spec, mesh, update_block=8)
+    tier = TieredShardedSinnamonIndex(spec, mesh, update_block=8,
+                                      tier_chunk_slots=8, cache_chunks=2)
+
+    live, next_id = set(), 0
+    for step in range(40):
+        op = rng.random()
+        if op < 0.45 or len(live) < 10:
+            B = int(rng.integers(1, 6))
+            ids = []
+            for _ in range(B):
+                if live and rng.random() < 0.3:
+                    ids.append(int(rng.choice(sorted(live))))
+                else:
+                    ids.append(next_id)
+                    next_id += 1
+            di, dv = _docs(rng, B)
+            base.insert_many(ids, di, dv)
+            tier.insert_many(ids, di, dv)
+            live.update(ids)
+        elif op < 0.6 and len(live) > 5:
+            n = int(rng.integers(1, 4))
+            dels = [int(d) for d in rng.choice(sorted(live), n,
+                                               replace=False)]
+            base.delete_many(dels)
+            tier.delete_many(dels)
+            live.difference_update(dels)
+        elif op < 0.7:
+            assert base.compact() == tier.compact()
+        else:
+            B = int(rng.integers(1, 4))
+            qi, qv = _docs(rng, B)
+            _assert_bitwise(base.search_many(qi, qv, k=5),
+                            tier.search_many(qi, qv, k=5),
+                            f"step {step} sharded search_many")
+            _assert_bitwise(base.search(qi[0], qv[0], k=5),
+                            tier.search(qi[0], qv[0], k=5),
+                            f"step {step} sharded search")
+
+    dirty = np.asarray(base.state.dirty)
+    np.testing.assert_array_equal(base.slot_drift()[dirty],
+                                  tier.slot_drift()[dirty])
+    base.compact()
+    tier.compact()
+    for name in ("u", "bits"):
+        np.testing.assert_array_equal(np.asarray(getattr(base.state, name)),
+                                      np.asarray(getattr(tier.state, name)),
+                                      err_msg=name)
+    st = tier.tiers[0].stats()
+    assert st["promotions"] + st["fallbacks"] > 0
+
+
+def test_sharded_tiered_matches_single_tiered():
+    """Shard transparency and tier transparency compose."""
+    from repro.distributed import mesh as meshlib
+    from repro.serving.sharded import TieredShardedSinnamonIndex
+
+    rng = np.random.default_rng(10)
+    spec = _spec(capacity=64)
+    single = eng.TieredSinnamonIndex(spec, tier_chunk_slots=8,
+                                     cache_chunks=2)
+    sharded = TieredShardedSinnamonIndex(spec, meshlib.single_device_mesh(),
+                                         update_block=8, tier_chunk_slots=8,
+                                         cache_chunks=2)
+    di, dv = _docs(rng, 50)
+    single.insert_many(list(range(50)), di, dv)
+    sharded.insert_many(list(range(50)), di, dv)
+    qi, qv = _docs(rng, 3)
+    _assert_bitwise(single.search_many(qi, qv, k=5),
+                    sharded.search_many(qi, qv, k=5), "sharded==single")
+
+
+# -- durable round-trip -------------------------------------------------------
+
+def _drive(ix, rng, steps=30):
+    live, nid = [], 0
+    for _ in range(steps):
+        op = rng.random()
+        if op < 0.55 or len(live) < 8:
+            B = int(rng.integers(1, 4))
+            ids = list(range(nid, nid + B))
+            nid += B
+            di, dv = _docs(rng, B)
+            ix.insert_many(ids, di, dv)
+            live += ids
+        elif op < 0.72 and len(live) > 4:
+            ix.delete(live.pop(int(rng.integers(len(live)))))
+        elif op < 0.82:
+            ix.compact()
+    return live
+
+
+def test_durable_tiered_crash_recovery_and_cross_restore(tmp_path):
+    from repro.persist.durable import (DurableSinnamonIndex,
+                                       DurableTieredSinnamonIndex)
+
+    spec = _spec(capacity=64)
+    wd, sd = str(tmp_path / "wal"), str(tmp_path / "snap")
+    kw = dict(wal_dir=wd, snapshot_dir=sd, tier_chunk_slots=8,
+              cache_chunks=2, fsync=False)
+
+    t = DurableTieredSinnamonIndex.open(spec, **kw)
+    rng = np.random.default_rng(11)
+    _drive(t, rng)
+    t.snapshot()
+    _drive(t, rng)                                  # WAL tail past snapshot
+    qi, qv = _docs(rng, 6)
+    ids0, sc0 = t.search_many(qi, qv, k=5)
+    st0 = t.logical_state()
+    del t                                           # crash (no clean close)
+
+    r = DurableTieredSinnamonIndex.open(spec, **kw)
+    _assert_bitwise((ids0, sc0), r.search_many(qi, qv, k=5), "recovery")
+    st1 = r.logical_state()
+    for name in ("u", "bits", "active", "ids", "dirty"):
+        np.testing.assert_array_equal(np.asarray(getattr(st0, name)),
+                                      np.asarray(getattr(st1, name)),
+                                      err_msg=name)
+    np.testing.assert_array_equal(np.asarray(st0.store.indices),
+                                  np.asarray(st1.store.indices))
+    np.testing.assert_array_equal(np.asarray(st0.store.values, np.float32),
+                                  np.asarray(st1.store.values, np.float32))
+
+    # the same WAL+snapshot restores into a RESIDENT durable index
+    r2 = DurableSinnamonIndex.open(spec, wal_dir=wd, snapshot_dir=sd,
+                                   fsync=False)
+    _assert_bitwise((ids0, sc0), r2.search_many(qi, qv, k=5),
+                    "cross-restore into resident")
+
+    # optimistic async compaction still works on the tiered wrapper
+    r.try_compact_async()
+    _assert_bitwise((ids0, sc0), r.search_many(qi, qv, k=5), "post-compact")
